@@ -1,0 +1,76 @@
+"""Render EXPERIMENTS.md tables from dry-run result JSONs.
+
+    PYTHONPATH=src python -m benchmarks.make_tables dryrun_results.json
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_bytes(b: float) -> str:
+    return f"{b/2**30:.2f}"
+
+
+def render(path: str) -> str:
+    rows = json.load(open(path))
+    out = []
+    out.append("| arch | shape | mesh | compute (ms) | memory (ms) | "
+               "collective (ms) | dominant | roofline frac | HLO GiB/dev | "
+               "useful-FLOP ratio |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        tag = f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+        st = r.get("status", "?")
+        if st.startswith("SKIP"):
+            out.append(tag + f"| SKIP: {st[5:-1][:70]} ||||||||")
+            continue
+        if st != "OK":
+            out.append(tag + f"| **FAIL** {st[:70]} ||||||||")
+            continue
+        t = r["roofline"]
+        dom = r["dominant"]
+        # roofline fraction: ideal (compute term) / achievable (max term) --
+        # how close the cell sits to its compute roofline.
+        peak = max(t.values())
+        frac = t["compute_s"] / peak if peak else 0.0
+        mem = r.get("memory_analysis", {})
+        per_dev = (mem.get("argument_bytes", 0) + mem.get("temp_bytes", 0)
+                   + mem.get("output_bytes", 0)) / 2**30
+        ufr = r.get("useful_flops_ratio", 0.0)
+        out.append(
+            tag + f"| {t['compute_s']*1e3:.2f} | {t['memory_s']*1e3:.1f} "
+            f"| {t['collective_s']*1e3:.1f} | {dom[:-2]} | {frac:.3f} "
+            f"| {per_dev:.2f} | {ufr:.2f} |"
+        )
+    return "\n".join(out)
+
+
+def collective_detail(path: str) -> str:
+    rows = json.load(open(path))
+    out = ["| arch | shape | mesh | AR ops | AR GB | AG ops | AG GB | "
+           "A2A ops | A2A GB | CP ops | CP GB |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("status") != "OK":
+            continue
+        c = r["collectives"]
+        cnt, wb = c["counts"], c["wire_bytes"]
+        get = lambda d, k: d.get(k, 0.0)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {get(cnt,'all-reduce'):.0f} | {get(wb,'all-reduce')/1e9:.2f} "
+            f"| {get(cnt,'all-gather'):.0f} | {get(wb,'all-gather')/1e9:.2f} "
+            f"| {get(cnt,'all-to-all'):.0f} | {get(wb,'all-to-all')/1e9:.2f} "
+            f"| {get(cnt,'collective-permute'):.0f} "
+            f"| {get(wb,'collective-permute')/1e9:.2f} |"
+        )
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    p = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
+    print(render(p))
+    print()
+    print(collective_detail(p))

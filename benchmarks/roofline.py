@@ -1,0 +1,55 @@
+"""Roofline summary from dry-run results (EXPERIMENTS.md §Roofline source).
+
+Reads ``dryrun_results.json`` (written by ``python -m repro.launch.dryrun
+--out dryrun_results.json``) and emits per-cell roofline terms, dominant
+bottleneck, and the MODEL_FLOPS / HLO_FLOPs utilisation ratio.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Iterator
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "dryrun_results.json")
+
+Row = tuple[str, float, str]
+
+_DOM_CODE = {"compute_s": 0.0, "memory_s": 1.0, "collective_s": 2.0}
+
+
+def summarize(path: str = RESULTS) -> Iterator[Row]:
+    if not os.path.exists(path):
+        yield ("roofline/no_dryrun_results", 0.0,
+               "run repro.launch.dryrun --out dryrun_results.json first")
+        return
+    rows = json.load(open(path))
+    n_ok = n_skip = n_fail = 0
+    for r in rows:
+        tag = f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        status = r.get("status", "?")
+        if status.startswith("SKIP"):
+            n_skip += 1
+            continue
+        if status != "OK":
+            n_fail += 1
+            yield (f"roofline/{tag}/FAILED", 1.0, status[:60])
+            continue
+        n_ok += 1
+        t = r["roofline"]
+        yield (f"roofline/{tag}/compute_ms", t["compute_s"] * 1e3, "per_step")
+        yield (f"roofline/{tag}/memory_ms", t["memory_s"] * 1e3, "per_step")
+        yield (f"roofline/{tag}/collective_ms", t["collective_s"] * 1e3,
+               "per_step")
+        yield (f"roofline/{tag}/dominant", _DOM_CODE[r["dominant"]],
+               r["dominant"])
+        if "useful_flops_ratio" in r:
+            yield (f"roofline/{tag}/useful_flops_ratio",
+                   r["useful_flops_ratio"], "model_over_hlo")
+        mem = r.get("memory_analysis", {})
+        per_dev = (mem.get("argument_bytes", 0) + mem.get("temp_bytes", 0)
+                   + mem.get("output_bytes", 0)) / 2**30
+        yield (f"roofline/{tag}/bytes_per_device_gib", per_dev, "vs_16_hbm")
+    yield ("roofline/cells_ok", float(n_ok), "count")
+    yield ("roofline/cells_skip", float(n_skip), "documented")
+    yield ("roofline/cells_fail", float(n_fail), "count")

@@ -1,0 +1,35 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+Prints ``name,value,derived`` CSV, one row per measurement; one section per
+paper table/figure (see benchmarks/figures.py) plus the roofline summary if a
+dry-run results file exists (benchmarks/roofline.py).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+
+def main() -> None:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from benchmarks import figures
+
+    print("name,value,derived")
+    t_start = time.time()
+    for fn in figures.ALL:
+        t0 = time.time()
+        for name, value, derived in fn():
+            print(f"{name},{value:.6g},{derived}")
+        print(f"# {fn.__name__} done in {time.time()-t0:.1f}s", flush=True)
+
+    # Roofline summary from the latest dry-run results, if present.
+    from benchmarks import roofline
+    for name, value, derived in roofline.summarize():
+        print(f"{name},{value:.6g},{derived}")
+    print(f"# total {time.time()-t_start:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""End-to-end driver: simulate the (downscaled) multi-area model of macaque
+visual cortex in its ground state -- the paper's real-world workload (§2.4.3).
+
+Runs the full pipeline: heterogeneous 32-area spec -> connectivity build with
+ghost-neuron padding -> structure-aware engine -> 1 s of biological time ->
+per-area rate report (V2 should be the most active area, network mean near
+2.5 spikes/s).
+
+    PYTHONPATH=src python examples/mam_simulation.py --scale 0.002 --t-ms 1000
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core import EngineConfig, build_network, make_engine, mam_spec
+from repro.core.areas import MAM_AREA_NAMES
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.002,
+                    help="model scale (1.0 = full 4.2M-neuron MAM)")
+    ap.add_argument("--t-ms", type=float, default=1000.0)
+    ap.add_argument("--schedule", default="structure_aware",
+                    choices=["conventional", "structure_aware"])
+    args = ap.parse_args()
+
+    spec = mam_spec(scale=args.scale)
+    print(f"MAM @ scale {args.scale}: {spec.n_total:,} neurons in 32 areas, "
+          f"K={spec.k_total}/neuron ({spec.k_inter} inter-area), "
+          f"D={spec.delay_ratio}")
+    net = build_network(spec, seed=12, size_multiple=8)
+    ghost = float((~np.asarray(net.alive)).mean())
+    print(f"ghost-neuron padding (heterogeneous areas -> N_max): {ghost:.1%}")
+
+    eng = make_engine(net, spec, EngineConfig(
+        neuron_model="lif", schedule=args.schedule, deposit_onehot=False))
+    st = eng.init()
+    n_windows = spec.steps_for(args.t_ms) // spec.delay_ratio
+    st, _ = eng.window(st)
+    jax.block_until_ready(st.ring)
+    t0 = time.perf_counter()
+    st, _ = eng.run(st, n_windows - 1)
+    jax.block_until_ready(st.ring)
+    wall = time.perf_counter() - t0
+
+    counts = np.asarray(st.spike_count).sum(axis=1)  # per area
+    sizes = spec.area_sizes()
+    t_s = float(st.t) * spec.dt_ms / 1000.0
+    rates = counts / (sizes * t_s)
+    mean_rate = counts.sum() / (spec.n_total * t_s)
+    print(f"\nsimulated {t_s*1000:.0f} ms in {wall:.1f} s wall "
+          f"(RTF {wall/t_s:.1f}); network mean rate {mean_rate:.2f} Hz "
+          f"(ground state target ~2.5 Hz)")
+    order = np.argsort(-rates)
+    print("\nper-area rates (top 8):")
+    for i in order[:8]:
+        print(f"  {MAM_AREA_NAMES[i]:5s} {rates[i]:5.2f} Hz "
+              f"({sizes[i]:,} neurons)")
+    hottest = MAM_AREA_NAMES[order[0]]
+    print(f"\nhottest area: {hottest} (paper: V2, ~68% above network mean)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Quickstart: the paper's claim in 60 seconds, on a laptop.
+
+Builds a small 4-area network, runs the conventional and the structure-aware
+schedules side by side, and verifies they produce *bit-identical* spike
+trains while the structure-aware one performs 10x fewer global exchanges.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import (
+    EngineConfig, build_network, make_engine, mam_benchmark_spec,
+)
+
+
+def main() -> None:
+    spec = mam_benchmark_spec(n_areas=4, n_per_area=256, k_intra=32, k_inter=32)
+    print(f"network: {spec.n_areas} areas x {spec.areas[0].n_neurons} neurons, "
+          f"K={spec.k_total} synapses/neuron, D={spec.delay_ratio} "
+          f"(d_min={spec.dt_ms} ms, d_min_inter={spec.d_min_inter_ms} ms)")
+    net = build_network(spec, seed=12)
+
+    engines = {
+        sched: make_engine(net, spec, EngineConfig(
+            neuron_model="lif", schedule=sched, deposit_onehot=False))
+        for sched in ("conventional", "structure_aware")
+    }
+    states = {k: e.init() for k, e in engines.items()}
+
+    t_model_ms = 200.0
+    n_windows = spec.steps_for(t_model_ms) // spec.delay_ratio
+    spikes = {}
+    for sched, eng in engines.items():
+        st = states[sched]
+        st, _ = eng.window(st)  # compile
+        jax.block_until_ready(st.ring)
+        t0 = time.perf_counter()
+        blocks = []
+        for _ in range(n_windows - 1):
+            st, blk = eng.window(st)
+            blocks.append(np.asarray(blk))
+        jax.block_until_ready(st.ring)
+        wall = time.perf_counter() - t0
+        spikes[sched] = np.concatenate(blocks)
+        rate = spikes[sched].sum() / (spec.n_total * (t_model_ms - 1) / 1000)
+        n_globals = (n_windows - 1) * (spec.delay_ratio
+                                       if sched == "conventional" else 1)
+        print(f"{sched:16s}: {wall:5.2f} s wall for {t_model_ms:.0f} ms model "
+              f"time | rate {rate:4.1f} Hz | {n_globals:4d} global exchanges")
+
+    identical = np.array_equal(spikes["conventional"],
+                               spikes["structure_aware"])
+    print(f"\nspike trains bit-identical: {identical}")
+    assert identical, "the structure-aware schedule must be exact!"
+    print("=> same physics, 10x fewer global synchronizations (paper §2.1)")
+
+
+if __name__ == "__main__":
+    main()

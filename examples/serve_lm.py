@@ -1,0 +1,77 @@
+"""Example: batched serving -- prefill a prompt batch, then decode tokens.
+
+Uses the serve artifacts (same code path the dry-run lowers at production
+scale) on a reduced config: prefill fills the KV cache for a batch of
+prompts, then a decode loop emits new tokens with one cache-resident step per
+token. Reports prefill and per-token decode throughput.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch qwen2-0.5b --tokens 32
+    PYTHONPATH=src python examples/serve_lm.py --arch zamba2-1.2b
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.common import ShapeSpec
+from repro.configs.registry import get_arch
+from repro.train.steps import make_serve_artifacts
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    bundle = get_arch(args.arch, reduced=True)
+    vocab = getattr(bundle.cfg, "vocab", None) or bundle.cfg.backbone.vocab
+    shape = ShapeSpec("serve", "prefill", args.prompt_len + args.tokens,
+                      args.batch)
+    art = make_serve_artifacts(bundle, shape, mesh=None, fsdp_axis=None,
+                               cache_dtype=jnp.float32)
+    params = bundle.model.init_params(jax.random.PRNGKey(0))
+
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, vocab, (args.batch, args.prompt_len + args.tokens)),
+        jnp.int32)}
+    for name, make in bundle.extra_inputs.items():
+        spec = make(args.batch, args.prompt_len)
+        batch[name] = jnp.zeros(spec.shape, spec.dtype)
+    # NOTE: prefill pads the cache to prompt+tokens; feed only the prompt.
+    prompt = dict(batch, tokens=batch["tokens"][:, : args.prompt_len])
+
+    t0 = time.perf_counter()
+    logits, state = art.prefill_fn(params, prompt)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+    print(f"prefill: batch {args.batch} x {args.prompt_len} tokens "
+          f"in {t_prefill*1e3:.1f} ms "
+          f"({args.batch*args.prompt_len/t_prefill:,.0f} tok/s)")
+
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out_tokens = [tok]
+    t0 = time.perf_counter()
+    for i in range(args.tokens - 1):
+        idx = jnp.int32(args.prompt_len + i)
+        logits, state = art.decode_fn(params, state, tok, idx)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out_tokens.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.perf_counter() - t0
+    n = args.batch * (args.tokens - 1)
+    print(f"decode:  {args.tokens-1} steps x batch {args.batch} "
+          f"in {t_decode*1e3:.1f} ms ({n/max(t_decode,1e-9):,.0f} tok/s, "
+          f"{t_decode/(args.tokens-1)*1e3:.2f} ms/step)")
+    gen = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
+    print(f"generated shape: {gen.shape}; first row: {gen[0][:12]} ...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,184 @@
+"""Checkpointing: atomic, async-capable, elastic-restore.
+
+Format: one ``step_<N>/`` directory holding ``arrays.npz`` (leaves keyed by
+flattened tree paths) + ``manifest.json`` (tree structure, shapes, dtypes,
+mesh metadata). Writes go to ``<dir>.tmp`` and are renamed atomically -- a
+crash mid-write never corrupts the latest checkpoint. ``AsyncWriter`` moves
+serialisation off the training thread (device -> host copy happens
+synchronously, which is the required consistency point anyway).
+
+Elastic restore: the hierarchical trainer's state has a leading [n_pods]
+axis; ``elastic_pod_resize`` re-targets a checkpoint to a different pod count
+(mean-then-broadcast), so recovery from a lost pod or a scale-up needs no
+retraining. The SNN engine's per-area state re-partitions the same way via
+``core.partition.elastic_reshard_plan``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "AsyncWriter", "elastic_pod_resize"]
+
+
+# numpy's savez cannot serialise ml_dtypes types (bf16, fp8); store them as
+# same-width unsigned views and record the true dtype in the manifest.
+_VIEW_DTYPES = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+                "float8_e5m2": np.uint8}
+
+
+def _flatten(tree: Any) -> tuple[dict[str, np.ndarray], dict[str, str]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    dtypes = {}
+    for path, leaf in flat:
+        key = "/".join(str(p) for p in path)
+        arr = np.asarray(leaf)
+        dtypes[key] = str(arr.dtype)
+        if str(arr.dtype) in _VIEW_DTYPES:
+            arr = arr.view(_VIEW_DTYPES[str(arr.dtype)])
+        out[key] = arr
+    return out, dtypes
+
+
+def _unview(arr: np.ndarray, dtype_str: str) -> np.ndarray:
+    if dtype_str in _VIEW_DTYPES:
+        import ml_dtypes
+
+        return arr.view(np.dtype(getattr(ml_dtypes, dtype_str)))
+    return arr
+
+
+def save(directory: str, step: int, tree: Any, *, extra: dict | None = None) -> str:
+    """Synchronous atomic save. Returns the checkpoint path."""
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    arrays, dtypes = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    treedef = jax.tree_util.tree_structure(tree)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "keys": list(arrays.keys()),
+        "shapes": {k: list(v.shape) for k, v in arrays.items()},
+        "dtypes": dtypes,
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(d.split("_")[1])
+        for d in os.listdir(directory)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    ]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, like: Any, step: int | None = None) -> tuple[Any, int]:
+    """Restore into the structure of ``like`` (shape/dtype validated)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    data = np.load(os.path.join(path, "arrays.npz"))
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for kpath, leaf in flat:
+        key = "/".join(str(p) for p in kpath)
+        arr = _unview(data[key], manifest["dtypes"].get(key, ""))
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"checkpoint leaf {key}: shape {arr.shape} != expected "
+                f"{leaf.shape} (use elastic_pod_resize for pod-count changes)"
+            )
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves
+    ), step
+
+
+class AsyncWriter:
+    """Background checkpoint writer with a bounded queue (backpressure)."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._q: queue.Queue = queue.Queue(maxsize=2)
+        self._worker = threading.Thread(target=self._run, daemon=True)
+        self._worker.start()
+        self._errors: list[Exception] = []
+
+    def _run(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, host_tree, extra = item
+            try:
+                save(self.directory, step, host_tree, extra=extra)
+                self._gc()
+            except Exception as e:  # surfaced on next submit/close
+                self._errors.append(e)
+            finally:
+                self._q.task_done()
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(d.split("_")[1])
+            for d in os.listdir(self.directory)
+            if d.startswith("step_") and not d.endswith(".tmp")
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"))
+
+    def submit(self, step: int, tree: Any, extra: dict | None = None) -> None:
+        if self._errors:
+            raise self._errors.pop(0)
+        # Device -> host copy is the consistency point; do it now, serialise
+        # in the background.
+        host_tree = jax.tree.map(np.asarray, tree)
+        self._q.put((step, host_tree, extra))
+
+    def close(self) -> None:
+        self._q.put(None)
+        self._worker.join()
+        if self._errors:
+            raise self._errors.pop(0)
+
+
+def elastic_pod_resize(tree_pods: Any, new_n_pods: int) -> Any:
+    """Re-target per-pod replicated state to a different pod count.
+
+    Leaves carry a leading [n_pods] axis; resizing averages the replicas
+    (the slow-tier sync point) and re-broadcasts -- the same operation the
+    D-step sync performs, so resuming after a pod loss is semantically one
+    early sync.
+    """
+    def resize(x):
+        mean = np.asarray(x, dtype=np.float32).mean(axis=0)
+        out = np.broadcast_to(mean[None], (new_n_pods,) + mean.shape)
+        return jnp.asarray(out, dtype=x.dtype)
+
+    return jax.tree.map(resize, tree_pods)

@@ -1,0 +1,89 @@
+"""Shared plumbing for architecture configs: shapes, bundles, input specs."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ShapeSpec", "SHAPES", "Bundle", "lm_input_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One assigned input-shape cell."""
+
+    name: str
+    kind: str          # 'train' | 'prefill' | 'decode'
+    seq_len: int
+    global_batch: int
+
+    def reduced(self) -> "ShapeSpec":
+        """Smoke-test scale: same kind, tiny extent."""
+        return ShapeSpec(self.name, self.kind,
+                         seq_len=min(self.seq_len, 32),
+                         global_batch=min(self.global_batch, 2))
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Bundle:
+    """Uniform wrapper every architecture exposes to the launcher/dry-run.
+
+    ``model`` provides init_params/forward/param_pspecs (+ cache methods);
+    ``extra_inputs`` maps additional forward kwargs (stub frontends) to
+    shape-builders ``(batch, seq) -> ShapeDtypeStruct``.
+    """
+
+    arch_id: str
+    family: str
+    model: Any
+    cfg: Any
+    extra_inputs: dict[str, Callable[[int, int], jax.ShapeDtypeStruct]] = \
+        dataclasses.field(default_factory=dict)
+    # Optimizer-moment dtype hint: bf16 for the giants so optimizer state fits
+    # the per-chip HBM budget (see EXPERIMENTS.md §Dry-run memory table).
+    moment_dtype: str = "float32"
+
+    def loss(self, params, batch) -> jax.Array:
+        """Mean next-token CE (+ MoE aux) on a {'tokens','labels',...} batch.
+
+        Uses the hidden-state API + chunked CE so the full [B, S, V] logits
+        are never materialised (see layers.chunked_cross_entropy)."""
+        from repro.models import layers
+
+        extras = {k: batch[k] for k in self.extra_inputs}
+        h, aux = self.model.hidden(params, batch["tokens"], **extras)
+        ce = layers.chunked_cross_entropy(
+            lambda hc: self.model.unembed(params, hc), h, batch["labels"]
+        )
+        return ce + 0.01 * aux
+
+    def input_specs(self, shape: ShapeSpec) -> dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStruct stand-ins for a *training* batch of this shape."""
+        b, s = shape.global_batch, shape.seq_len
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+        for name, make in self.extra_inputs.items():
+            specs[name] = make(b, s)
+        return specs
+
+    def decode_input_specs(self, shape: ShapeSpec) -> dict[str, Any]:
+        """Specs for one decode step: a single new token + the filled cache."""
+        b = shape.global_batch
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+
+def lm_input_specs() -> dict[str, Callable[[int, int], jax.ShapeDtypeStruct]]:
+    return {}

@@ -1,0 +1,45 @@
+"""Core library: the paper's structure-aware simulation strategy in JAX."""
+
+from repro.core.areas import (
+    AreaSpec,
+    MultiAreaSpec,
+    mam_benchmark_spec,
+    mam_spec,
+)
+from repro.core.connectivity import Network, build_network
+from repro.core.engine import Engine, EngineConfig, SimState, make_engine
+from repro.core.dist_engine import (
+    make_dist_engine,
+    network_pspecs,
+    shard_network,
+    state_pspecs,
+)
+from repro.core.partition import (
+    RoundRobinPlacement,
+    StructureAwarePlacement,
+    elastic_reshard_plan,
+    round_robin_placement,
+    structure_aware_placement,
+)
+
+__all__ = [
+    "AreaSpec",
+    "MultiAreaSpec",
+    "mam_benchmark_spec",
+    "mam_spec",
+    "Network",
+    "build_network",
+    "Engine",
+    "EngineConfig",
+    "SimState",
+    "make_engine",
+    "make_dist_engine",
+    "network_pspecs",
+    "state_pspecs",
+    "shard_network",
+    "RoundRobinPlacement",
+    "StructureAwarePlacement",
+    "round_robin_placement",
+    "structure_aware_placement",
+    "elastic_reshard_plan",
+]

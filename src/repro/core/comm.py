@@ -1,0 +1,152 @@
+"""Two-tier spike exchange primitives (the paper's two communication pathways).
+
+The paper's §4.1.2 introduces *separate communication pathways* for short- and
+long-range spikes. On a TPU mesh ``(pod, data, model)``:
+
+* the **local pathway** runs every cycle but only over the ``model`` axis --
+  the subgroup of devices hosting one area (the paper's proposed ``MPI_Group``
+  generalisation). On hardware these are nearest-neighbour ICI hops.
+* the **global pathway** runs every D-th cycle over *all* axes and carries the
+  lumped ``[D, ...]`` spike block (larger, rarer messages -- the sublinear
+  collective-cost regime of Fig. 4).
+
+Spikes travel as int8 (1 byte/neuron/step; a neuron fires at most once per
+0.1 ms step because of refractoriness), which both matches NEST's byte-level
+spike compression spirit and keeps collective bytes honest for the roofline.
+
+All functions below are written for use *inside* ``shard_map``.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "pack_bits",
+    "unpack_bits",
+    "gather_area",
+    "gather_global",
+    "exchange_bytes",
+]
+
+
+def pack_bits(x: jax.Array) -> jax.Array:
+    """[..., n] 0/1 int8 -> [..., ceil(n/8)] uint8 (wire format).
+
+    A neuron fires at most once per 0.1 ms cycle, so a spike vector is one
+    *bit* per neuron -- packing cuts collective bytes 8x vs int8. (NEST sends
+    sparse id packets; at brain-scale rates an id list would be smaller
+    still, but bit-vectors keep XLA shapes static and unpack on the VPU.)
+    """
+    n = x.shape[-1]
+    pad = (-n) % 8
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    b = x.reshape(x.shape[:-1] + ((n + pad) // 8, 8)).astype(jnp.uint8)
+    weights = (jnp.uint8(1) << jnp.arange(8, dtype=jnp.uint8))
+    return (b * weights).sum(axis=-1, dtype=jnp.uint8)
+
+
+def unpack_bits(p: jax.Array, n: int) -> jax.Array:
+    """Inverse of :func:`pack_bits`: [..., n/8] uint8 -> [..., n] int8."""
+    bits = (p[..., None] >> jnp.arange(8, dtype=jnp.uint8)) & jnp.uint8(1)
+    out = bits.reshape(p.shape[:-1] + (p.shape[-1] * 8,))
+    return out[..., :n].astype(jnp.int8)
+
+
+def gather_area(
+    spikes_local: jax.Array,
+    *,
+    subgroup_axis: str = "model",
+    packed: bool = True,
+) -> jax.Array:
+    """Local pathway: assemble the full per-area spike vector.
+
+    ``spikes_local``: [A_loc, n_loc] int8 -- this device's shard of its areas'
+    neurons. Returns [A_loc, n_pad]: the areas' complete spike vectors,
+    gathered over the intra-area subgroup only (bit-packed on the wire).
+    """
+    if not packed:
+        return jax.lax.all_gather(
+            spikes_local, subgroup_axis, axis=1, tiled=True)
+    n_loc = spikes_local.shape[-1]
+    per = (n_loc + 7) // 8
+    wire = pack_bits(spikes_local)
+    wire = jax.lax.all_gather(wire, subgroup_axis, axis=1, tiled=True)
+    # unpack per shard, then flatten shards back into the neuron axis
+    n_shards = wire.shape[1] // per
+    wire = wire.reshape(wire.shape[0], n_shards, per)
+    out = unpack_bits(wire, n_loc)
+    return out.reshape(out.shape[0], n_shards * n_loc)
+
+
+def gather_global(
+    block_local: jax.Array,
+    *,
+    area_axes: Sequence[str] = ("pod", "data"),
+    subgroup_axis: str = "model",
+    packed: bool = True,
+) -> jax.Array:
+    """Global pathway: assemble the lumped spike block of the whole network.
+
+    ``block_local``: [D, A_loc, n_loc] int8 (D cycles of local spikes).
+    Returns [D, A, n_pad] in global area order. Two stages: first complete
+    each area over the subgroup axis (fast tier), then concatenate areas over
+    the area axes (slow tier). Area order is (pod-major, data-minor) matching
+    ``partition.StructureAwarePlacement``. Bit-packed on the wire (8x fewer
+    collective bytes; spikes are one bit per neuron per cycle).
+    """
+    if not packed:
+        block = jax.lax.all_gather(
+            block_local, subgroup_axis, axis=2, tiled=True)
+        for ax in reversed(tuple(area_axes)):
+            block = jax.lax.all_gather(block, ax, axis=1, tiled=True)
+        return block
+    n_loc = block_local.shape[-1]
+    wire = pack_bits(block_local)           # [D, A_loc, n_loc/8] uint8
+    per = (n_loc + 7) // 8
+    wire = jax.lax.all_gather(wire, subgroup_axis, axis=2, tiled=True)
+    for ax in reversed(tuple(area_axes)):
+        # Gather innermost axis first so the final order is row-major over
+        # (pod, data), i.e. global area index = (p * n_data + d) * A_loc + a.
+        wire = jax.lax.all_gather(wire, ax, axis=1, tiled=True)
+    d, a_tot, _ = wire.shape
+    n_shards = wire.shape[-1] // per
+    wire = wire.reshape(d, a_tot, n_shards, per)
+    out = unpack_bits(wire, n_loc)
+    return out.reshape(d, a_tot, n_shards * n_loc)
+
+
+def gather_full(
+    spikes_local: jax.Array,
+    axes: Sequence[str],
+    *,
+    packed: bool = True,
+) -> jax.Array:
+    """Conventional pathway: one global gather of the per-cycle spike vector
+    ([A, n_loc] -> [A, n_pad], over ALL mesh axes), bit-packed on the wire."""
+    if not packed:
+        return jax.lax.all_gather(spikes_local, tuple(axes), axis=1, tiled=True)
+    n_loc = spikes_local.shape[-1]
+    per = (n_loc + 7) // 8
+    wire = pack_bits(spikes_local)
+    wire = jax.lax.all_gather(wire, tuple(axes), axis=1, tiled=True)
+    n_shards = wire.shape[1] // per
+    wire = wire.reshape(wire.shape[0], n_shards, per)
+    out = unpack_bits(wire, n_loc)
+    return out.reshape(out.shape[0], n_shards * n_loc)
+
+
+def exchange_bytes(
+    shape_local: tuple[int, ...],
+    n_gather_devices: int,
+    dtype_bytes: int = 1,
+) -> int:
+    """Bytes a device receives in one tiled all_gather (for the cost model)."""
+    n_elems = 1
+    for s in shape_local:
+        n_elems *= s
+    return n_elems * (n_gather_devices - 1) * dtype_bytes

@@ -1,0 +1,255 @@
+"""Single-host reference engine: conventional vs structure-aware schedules.
+
+This is the semantic reference for the distributed engine and the Pallas
+kernels. It advances the network in *windows* of ``D`` cycles (``D`` = delay
+ratio, paper eq. (1)); each cycle is the paper's deliver -> update -> collocate
+sequence (Fig. 3):
+
+* ``conventional``: inter-area spikes are delivered every cycle (this is what
+  the per-cycle global ``MPI_Alltoall`` achieves in the reference code);
+* ``structure_aware``: inter-area spikes are *accumulated* for the whole
+  window and delivered in one lumped exchange at the window end. Causality is
+  guaranteed because every inter-area delay is >= D steps.
+
+Both schedules produce **bit-identical** spike trains: delivery weights live on
+an exact 1/256 grid, so f32 ring accumulation is associative-exact, and the
+external drive is a counter-based function of absolute model time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.areas import MultiAreaSpec
+from repro.core.connectivity import Network
+from repro.core import neuron as neuron_lib
+from repro.core import ring_buffer
+
+__all__ = ["EngineConfig", "SimState", "Engine", "make_engine"]
+
+CONVENTIONAL = "conventional"
+STRUCTURE_AWARE = "structure_aware"
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    neuron_model: str = "lif"  # 'lif' | 'ignore_and_fire'
+    schedule: str = STRUCTURE_AWARE  # 'conventional' | 'structure_aware'
+    seed: int = 42
+    lif: neuron_lib.LIFParams = dataclasses.field(
+        default_factory=neuron_lib.LIFParams
+    )
+    # When True use the one-hot-einsum deposit (reference semantics, small K);
+    # when False use scatter-add (production / large K). Results are identical.
+    deposit_onehot: bool = True
+    # 'dense': gather-matvec over every synapse each cycle (paper-faithful
+    # baseline; what the Pallas kernel implements). 'event': compact the
+    # fired neurons and scatter their outgoing targets -- exploits the
+    # 0.025%-per-cycle firing sparsity for a >1000x multiply reduction
+    # (EXPERIMENTS.md §Perf). Requires build_network(outgoing=True).
+    delivery: str = "dense"
+    # Event-buffer headroom: s_max = headroom x expected spikes/cycle + floor
+    # (cf. NEST's dynamic spike-register resizing; static here). The event
+    # path's cost is s_max-bound, so the bound tracks the expected rate.
+    s_max_headroom: float = 8.0
+    s_max_floor: int = 16
+
+    def __post_init__(self) -> None:
+        if self.neuron_model not in ("lif", "ignore_and_fire"):
+            raise ValueError(f"unknown neuron model {self.neuron_model!r}")
+        if self.schedule not in (CONVENTIONAL, STRUCTURE_AWARE):
+            raise ValueError(f"unknown schedule {self.schedule!r}")
+        if self.delivery not in ("dense", "event"):
+            raise ValueError(f"unknown delivery {self.delivery!r}")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SimState:
+    neuron: Any               # LIFState or IafState pytree
+    ring: jax.Array           # [A, n_pad, R]
+    t: jax.Array              # scalar int32, absolute cycle index
+    spike_count: jax.Array    # [A, n_pad] int32 cumulative spikes
+
+
+class Engine(NamedTuple):
+    init: Callable[[], SimState]
+    # Advance one window of D cycles; returns (state', spikes[D, A, n_pad] bool).
+    window: Callable[[SimState], tuple[SimState, jax.Array]]
+    # Advance n_windows via scan; returns (state', total spikes per window [W]).
+    run: Callable[[SimState, int], tuple[SimState, jax.Array]]
+    config: EngineConfig
+    delay_ratio: int
+    # Distributed engines also expose the raw shard_map'd window
+    # (state, net, gids) -> (state, block), used by the dry-run to lower with
+    # ShapeDtypeStruct connectivity (production scale, no allocation).
+    window_raw: Callable | None = None
+
+
+def _gather_intra(spikes_f32: jax.Array, src_intra: jax.Array) -> jax.Array:
+    """[A, N] spikes, [A, N, K] per-area source indices -> [A, N, K] values."""
+    return jax.vmap(lambda s, idx: s[idx])(spikes_f32, src_intra)
+
+
+def _gather_inter(spikes_f32: jax.Array, src_inter: jax.Array) -> jax.Array:
+    """[A, N] spikes, [A, N, K] *global* source ids -> [A, N, K] values."""
+    return spikes_f32.reshape(-1)[src_inter]
+
+
+def _deposit(ring, vals, delays, t, *, onehot: bool):
+    a, n, r = ring.shape
+    k = vals.shape[-1]
+    fn = ring_buffer.deposit if onehot else ring_buffer.deposit_scatter
+    out = fn(ring.reshape(a * n, r), vals.reshape(a * n, k),
+             delays.reshape(a * n, k), t)
+    return out.reshape(a, n, r)
+
+
+def make_engine(
+    net: Network,
+    spec: MultiAreaSpec,
+    config: EngineConfig = EngineConfig(),
+) -> Engine:
+    """Build a jitted reference engine for ``net``.
+
+    The returned callables close over the (host-resident) connectivity; the
+    distributed engine in ``dist_engine.py`` shards the same computation.
+    """
+    D = net.delay_ratio
+    A, n_pad = net.alive.shape
+    cfg = config
+    if cfg.delivery == "event" and net.tgt_intra is None:
+        raise ValueError("event delivery needs build_network(outgoing=True)")
+    lif_params = cfg.lif
+    if abs(lif_params.dt_ms - net.dt_ms) > 1e-12:
+        lif_params = dataclasses.replace(lif_params, dt_ms=net.dt_ms)
+
+    # Per-neuron external drive rate for LIF: scaled by the area's target rate
+    # relative to the 2.5 Hz reference, which induces the across-area activity
+    # heterogeneity studied in Fig. 8b / §2.4.3.
+    drive_rate = net.rate_hz / 2.5 * spec.ext_rate_hz
+    gids = jnp.arange(A * n_pad, dtype=jnp.int32).reshape(A, n_pad)
+
+    def _update(neuron_state, i_in, t):
+        if cfg.neuron_model == "lif":
+            drive = neuron_lib.poisson_drive(
+                cfg.seed, t, gids, drive_rate, net.dt_ms, spec.w_ext
+            )
+            return neuron_lib.lif_update(
+                neuron_state, i_in + drive, net.alive, lif_params
+            )
+        return neuron_lib.ignore_and_fire_update(
+            neuron_state, i_in, net.alive, net.rate_hz, net.dt_ms
+        )
+
+    mean_rate = float(jnp.asarray(net.rate_hz).mean()) if hasattr(
+        net.rate_hz, "mean") else 2.5
+    exp_area = n_pad * mean_rate * net.dt_ms * 1e-3
+    s_max_area = max(cfg.s_max_floor, int(cfg.s_max_headroom * exp_area + 8))
+    s_max_all = max(4 * cfg.s_max_floor,
+                    int(cfg.s_max_headroom * exp_area * A + 32))
+
+    def _deliver_intra(ring, spikes_f32, t):
+        if cfg.delivery == "event":
+            from repro.kernels import ops as kops
+
+            return jax.vmap(
+                lambda r, sp, tg, w, d: kops.event_deliver(
+                    r, sp > 0, tg, w, d, t, s_max=s_max_area)
+            )(ring, spikes_f32, net.tgt_intra, net.wout_intra, net.dout_intra)
+        vals = net.w_intra * _gather_intra(spikes_f32, net.src_intra)
+        return _deposit(ring, vals, net.delay_intra, t, onehot=cfg.deposit_onehot)
+
+    def _deliver_inter(ring, spikes_f32, t):
+        if net.k_inter == 0:
+            return ring
+        if cfg.delivery == "event":
+            from repro.kernels import ops as kops
+
+            r = ring.shape[-1]
+            k_out = net.tgt_inter.shape[-1]
+            flat = kops.event_deliver(
+                ring.reshape(A * n_pad, r),
+                spikes_f32.reshape(-1) > 0,
+                net.tgt_inter.reshape(A * n_pad, k_out),
+                net.wout_inter.reshape(A * n_pad, k_out),
+                net.dout_inter.reshape(A * n_pad, k_out),
+                t, s_max=s_max_all,
+            )
+            return flat.reshape(A, n_pad, r)
+        vals = net.w_inter * _gather_inter(spikes_f32, net.src_inter)
+        return _deposit(ring, vals, net.delay_inter, t, onehot=cfg.deposit_onehot)
+
+    def _cycle(state: SimState, deliver_inter_now: bool):
+        """deliver -> update -> collocate for one dt step."""
+        i_in, ring = ring_buffer.read_and_clear(state.ring, state.t)
+        neuron_state, spikes = _update(state.neuron, i_in, state.t)
+        sf = spikes.astype(jnp.float32)
+        ring = _deliver_intra(ring, sf, state.t)
+        if deliver_inter_now:
+            ring = _deliver_inter(ring, sf, state.t)
+        new_state = SimState(
+            neuron=neuron_state,
+            ring=ring,
+            t=state.t + 1,
+            spike_count=state.spike_count + spikes.astype(jnp.int32),
+        )
+        return new_state, spikes
+
+    def window(state: SimState) -> tuple[SimState, jax.Array]:
+        t0 = state.t
+        if cfg.schedule == CONVENTIONAL:
+            # Global exchange (and hence inter delivery) every cycle.
+            def body(st, _):
+                return _cycle(st, deliver_inter_now=True)
+
+            state, spikes = jax.lax.scan(body, state, None, length=D)
+            return state, spikes
+
+        # Structure-aware: local-only cycles, lumped inter delivery at the end.
+        def body(st, _):
+            return _cycle(st, deliver_inter_now=False)
+
+        state, spikes = jax.lax.scan(body, state, None, length=D)
+
+        # The lumped 'global communication': deliver the whole [D, A, N] block.
+        # Every inter-area delay is >= D, so slot (t0+s+d) is strictly in the
+        # future of the last cycle read -- causality is preserved (paper §2.1).
+        def deliver_s(s, ring):
+            return _deliver_inter(ring, spikes[s].astype(jnp.float32), t0 + s)
+
+        ring = jax.lax.fori_loop(0, D, deliver_s, state.ring)
+        return dataclasses.replace(state, ring=ring), spikes
+
+    window_jit = jax.jit(window)
+
+    def init() -> SimState:
+        if cfg.neuron_model == "lif":
+            nstate = neuron_lib.lif_init((A, n_pad))
+        else:
+            nstate = neuron_lib.ignore_and_fire_init(
+                net.alive, net.rate_hz, net.dt_ms, gids
+            )
+        return SimState(
+            neuron=nstate,
+            ring=jnp.zeros((A, n_pad, net.ring_len), jnp.float32),
+            t=jnp.int32(0),
+            spike_count=jnp.zeros((A, n_pad), jnp.int32),
+        )
+
+    @functools.partial(jax.jit, static_argnums=1)
+    def run(state: SimState, n_windows: int) -> tuple[SimState, jax.Array]:
+        def body(st, _):
+            st, spikes = window(st)
+            return st, spikes.sum(dtype=jnp.int32)
+
+        return jax.lax.scan(body, state, None, length=n_windows)
+
+    return Engine(
+        init=init, window=window_jit, run=run, config=cfg, delay_ratio=D
+    )

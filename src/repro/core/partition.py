@@ -1,0 +1,156 @@
+"""Workload placement: round-robin vs structure-aware (+ elastic resharding).
+
+The paper contrasts two placements (Fig. 2):
+
+* **round-robin** (conventional): neuron ``gid`` lives on process
+  ``gid % M`` -- perfect load balance, zero structure. Any pair of processes
+  may host neurons separated by the overall minimum delay ``d_min``, so global
+  communication is required every ``d_min``.
+
+* **structure-aware**: area ``a`` maps onto one process (or, as proposed in
+  the paper's Discussion and implemented here, onto a *subgroup* of devices --
+  the ``model`` mesh axis). Heterogeneous areas are padded with frozen "ghost
+  neurons" to the largest area size so the placement machinery stays uniform
+  (§4.1.1). Inter-process delays are then >= ``d_min_inter``, enabling the
+  D-cycle communication interval.
+
+This module is pure metadata -- numpy only; engines and cost models consume it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.areas import MultiAreaSpec
+
+__all__ = [
+    "RoundRobinPlacement",
+    "StructureAwarePlacement",
+    "round_robin_placement",
+    "structure_aware_placement",
+    "elastic_reshard_plan",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundRobinPlacement:
+    """Conventional placement: neuron gid -> process gid % M."""
+
+    n_total: int
+    n_procs: int
+
+    def neurons_on(self, proc: int) -> int:
+        return (self.n_total - proc + self.n_procs - 1) // self.n_procs
+
+    def proc_of(self, gids: np.ndarray) -> np.ndarray:
+        return gids % self.n_procs
+
+    @property
+    def max_neurons_per_proc(self) -> int:
+        return (self.n_total + self.n_procs - 1) // self.n_procs
+
+
+@dataclasses.dataclass(frozen=True)
+class StructureAwarePlacement:
+    """Area-aligned placement over a (groups x group_size) device grid.
+
+    ``area_of_group[g]`` lists the areas hosted by device group ``g`` (each
+    group is the paper's MPI process / MPI_Group); ``n_pad`` is the padded
+    per-area size; ghost counts quantify the padding overhead.
+    """
+
+    n_groups: int
+    group_size: int  # devices per group ('model' axis extent)
+    areas_per_group: int
+    n_pad: int
+    area_sizes: tuple[int, ...]
+
+    @property
+    def n_areas(self) -> int:
+        return len(self.area_sizes)
+
+    def areas_of_group(self, g: int) -> tuple[int, ...]:
+        lo = g * self.areas_per_group
+        return tuple(range(lo, lo + self.areas_per_group))
+
+    def group_of_area(self, a: int) -> int:
+        return a // self.areas_per_group
+
+    @property
+    def ghost_count(self) -> int:
+        return sum(self.n_pad - s for s in self.area_sizes)
+
+    @property
+    def ghost_fraction(self) -> float:
+        return self.ghost_count / (self.n_pad * self.n_areas)
+
+    def neurons_on_group(self, g: int) -> int:
+        return sum(self.area_sizes[a] for a in self.areas_of_group(g))
+
+    def load_imbalance(self) -> float:
+        """max/mean live-neuron load across groups (1.0 = perfectly balanced).
+
+        This is the quantity that drives the elevated synchronization time for
+        heterogeneous models in Fig. 8a / Fig. 9.
+        """
+        loads = np.asarray(
+            [self.neurons_on_group(g) for g in range(self.n_groups)], dtype=float
+        )
+        return float(loads.max() / loads.mean())
+
+
+def round_robin_placement(spec: MultiAreaSpec, n_procs: int) -> RoundRobinPlacement:
+    return RoundRobinPlacement(n_total=spec.n_total, n_procs=n_procs)
+
+
+def structure_aware_placement(
+    spec: MultiAreaSpec,
+    n_groups: int,
+    group_size: int = 1,
+    *,
+    size_multiple: int = 1,
+) -> StructureAwarePlacement:
+    """Map areas onto ``n_groups`` device groups of ``group_size`` devices.
+
+    Requires ``n_areas % n_groups == 0`` (areas per group constant); the padded
+    area size must divide evenly by ``group_size`` so the intra-area ('model')
+    sharding is uniform.
+    """
+    A = spec.n_areas
+    if A % n_groups != 0:
+        raise ValueError(
+            f"n_areas={A} must be divisible by n_groups={n_groups}; "
+            "pad the model with empty areas or choose a different mesh"
+        )
+    n_pad = spec.padded_area_size(max(size_multiple, group_size))
+    if n_pad % group_size != 0:
+        raise ValueError("padded area size must divide by group_size")
+    return StructureAwarePlacement(
+        n_groups=n_groups,
+        group_size=group_size,
+        areas_per_group=A // n_groups,
+        n_pad=n_pad,
+        area_sizes=tuple(int(a.n_neurons) for a in spec.areas),
+    )
+
+
+def elastic_reshard_plan(
+    old: StructureAwarePlacement, new_n_groups: int
+) -> dict[int, tuple[int, int]]:
+    """Plan an elastic re-mesh: for every area, (old_group, new_group).
+
+    Used by checkpoint restore when the data-parallel extent changes (node
+    failure / elastic scale-up): state arrays are keyed by area, so moving an
+    area is a pure data movement with no renumbering.
+    """
+    if old.n_areas % new_n_groups != 0:
+        raise ValueError(
+            f"cannot rebalance {old.n_areas} areas onto {new_n_groups} groups"
+        )
+    per = old.n_areas // new_n_groups
+    plan: dict[int, tuple[int, int]] = {}
+    for a in range(old.n_areas):
+        plan[a] = (old.group_of_area(a), a // per)
+    return plan

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels.
+
+Paper hot spots (the phases NEST optimizes):
+* ``lif_update``       -- fused neuron state update (the *update* phase)
+* ``spike_deliver``    -- tiled gather-matvec delivery (the *deliver* phase)
+
+Beyond-paper (the LM stack's dominant memory term, see EXPERIMENTS §Perf):
+* ``flash_attention``  -- fused GQA flash attention (VMEM-resident tiles)
+
+``ops`` holds the jit'd public wrappers (+ the event-driven delivery path);
+``ref`` holds the pure-jnp oracles used by the kernel test sweeps.
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: fused flash attention (GQA, causal, sliding-window).
+
+The §Roofline baseline shows the LM cells are memory-term dominated because
+the pure-jnp streaming attention materialises its [B, H, Sq, Kc] logits tiles
+in HBM between the dot and the softmax ops (XLA does not fuse through dots).
+This kernel is the fix: the grid walks (batch, kv-head, q-block) x k-blocks
+sequentially, and the logits tile, the running max/denominator and the output
+accumulator all live in VMEM scratch -- HBM traffic is exactly q + k + v + o.
+
+Per q-block of size Bq and k-block Bk, VMEM holds:
+  q [G, Bq, Dh] + k/v [Bk, Dh] + logits [G, Bq, Bk] + acc [G, Bq, Dh]
+With G = H/Hkv <= 8, Bq = Bk = 512, Dh = 128: ~5 MB -- comfortably < 16 MB.
+
+Semantics match ``repro.models.layers._streaming_attention`` (the jnp
+oracle): causal masking, optional sliding window (0 = full), k-length bound.
+Validated bit-tight in interpret mode (tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas", "BQ", "BK"]
+
+BQ = 512   # query rows per grid step
+BK = 512   # key rows per inner step
+
+_NEG = -1e30
+
+
+def _kernel(w_ref, klen_ref, q_ref, k_ref, v_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, scale: float, nk: int,
+            bq: int, bk: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr[...], _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr[...])
+        acc_scr[...] = jnp.zeros_like(acc_scr[...])
+
+    q = q_ref[0, 0].astype(jnp.float32)         # [G, Bq, Dh]
+    k = k_ref[0, 0].astype(jnp.float32)         # [Bk, Dh]
+    v = v_ref[0, 0].astype(jnp.float32)         # [Bk, Dh]
+    logits = jax.lax.dot_general(
+        q, k, (((2,), (1,)), ((), ()))) * scale  # [G, Bq, Bk]
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (1, bq, 1), 1)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (1, 1, bk), 2)
+    d = q_pos - k_pos
+    w = w_ref[0]
+    mask = (d >= 0) & ((w <= 0) | (d < w)) & (k_pos < klen_ref[0])
+    logits = jnp.where(mask, logits, _NEG)
+
+    m_prev = m_scr[...]                          # [G, Bq]
+    m_new = jnp.maximum(m_prev, logits.max(axis=-1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new[..., None])       # [G, Bq, Bk]
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+    pv = jax.lax.dot_general(p, v, (((2,), (0,)), ((), ())))  # [G, Bq, Dh]
+    acc_scr[...] = acc_scr[...] * corr[..., None] + pv
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[..., None]
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bq", "bk", "interpret"))
+def flash_attention_pallas(
+    q: jax.Array,        # [B, Sq, H, Dh]
+    k: jax.Array,        # [B, Sk, Hkv, Dh]
+    v: jax.Array,        # [B, Sk, Hkv, Dh]
+    window: jax.Array,   # scalar int32 (0 = full causal)
+    k_len: jax.Array,    # scalar int32: number of valid keys
+    *,
+    bq: int = BQ,
+    bk: int = BK,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused GQA flash attention. Sq % bq == 0, Sk % bk == 0 required
+    (production shapes are powers of two; the ops wrapper pads otherwise)."""
+    b, sq, h, dh = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    bq = min(bq, sq)
+    bk = min(bk, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    nq, nk = sq // bq, sk // bk
+    scale = 1.0 / math.sqrt(dh)
+
+    # layout: [B, Hkv, G, Sq, Dh] so one grid cell owns one (b, kv-head).
+    qg = q.reshape(b, sq, hkv, g, dh).transpose(0, 2, 3, 1, 4)
+    kg = k.transpose(0, 2, 1, 3)   # [B, Hkv, Sk, Dh]
+    vg = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, nk=nk, bq=bq, bk=bk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hkv, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b_, h_, qi, ki: (0,)),  # window
+            pl.BlockSpec((1,), lambda b_, h_, qi, ki: (0,)),  # k_len
+            pl.BlockSpec((1, 1, g, bq, dh),
+                         lambda b_, h_, qi, ki: (b_, h_, 0, qi, 0)),
+            pl.BlockSpec((1, 1, bk, dh),
+                         lambda b_, h_, qi, ki: (b_, h_, ki, 0)),
+            pl.BlockSpec((1, 1, bk, dh),
+                         lambda b_, h_, qi, ki: (b_, h_, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, bq, dh),
+                               lambda b_, h_, qi, ki: (b_, h_, 0, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, bq), jnp.float32),
+            pltpu.VMEM((g, bq), jnp.float32),
+            pltpu.VMEM((g, bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        jnp.asarray(window, jnp.int32).reshape(1),
+        jnp.asarray(k_len, jnp.int32).reshape(1),
+        qg, kg, vg,
+    )
+    # [B, Hkv, G, Sq, Dh] -> [B, Sq, H, Dh]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dh)

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: tiled gather-matvec spike delivery.
+
+The paper's *deliver* phase dominates state propagation (§3, Discussion) and
+its irregular memory access is the subject of the §2.3 cache model. NEST walks
+per-synapse pointer chains; the TPU-native rethink is dense and delay-resolved:
+
+* connectivity is rectangular ``src/w/delay [N, K]`` (fixed in-degree),
+* a grid over target tiles keeps each ``[TILE_N, K]`` synapse block in VMEM
+  together with the *entire* source spike vector (1 f32/neuron -- even a full
+  131k-neuron area is 512 KiB),
+* for each delay slot ``j`` in the compile-time window ``[steps_lo,
+  steps_lo + r_span)`` the kernel reduces ``w * spk[src] * [delay == j]`` over
+  K in one VPU pass, emitting ``contrib[TILE_N, r_span]``.
+
+The engine then rolls ``contrib`` into the ring buffer at
+``slot = (t + steps_lo + j) % R``. The separation of *intra* and *inter*
+tables (paper §4.1.2) shows up here as two kernel invocations with different
+``(src, w, delay)`` sets and different spike sources (the subgroup-gathered
+area vector vs. the globally gathered [D, N] block), each with its own narrow
+delay window -- which is what keeps ``r_span`` (and the wasted compare work)
+small per pathway.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["spike_deliver_pallas", "TILE_N"]
+
+TILE_N = 128  # target-neuron rows per grid step; [TILE_N, K] stays in VMEM
+
+
+def _kernel(spk_ref, src_ref, w_ref, d_ref, out_ref, *, steps_lo: int, r_span: int):
+    spk = spk_ref[...]            # [N_src] f32, whole source vector in VMEM
+    idx = src_ref[...]            # [TILE_N, K]
+    vals = w_ref[...] * spk[idx]  # gather + scale, one VPU pass
+    j = d_ref[...] - steps_lo     # slot offsets in [0, r_span)
+    # One reduction over K per slot in the window. r_span is a small
+    # compile-time constant (per-pathway delay width), so this unrolls into
+    # r_span masked row-sums -- no MXU, pure VPU.
+    cols = []
+    for r in range(r_span):
+        cols.append(jnp.sum(jnp.where(j == r, vals, 0.0), axis=1))
+    out_ref[...] = jnp.stack(cols, axis=1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("steps_lo", "r_span", "tile_n", "interpret")
+)
+def spike_deliver_pallas(
+    spikes: jax.Array,  # [N_src] f32
+    src: jax.Array,     # [N, K] int32
+    w: jax.Array,       # [N, K] f32
+    delay: jax.Array,   # [N, K] int32
+    *,
+    steps_lo: int,
+    r_span: int,
+    tile_n: int = TILE_N,
+    interpret: bool = True,
+) -> jax.Array:
+    """Delay-resolved delivery contributions ``[N, r_span]``.
+
+    N must be a multiple of ``tile_n`` (use ops.spike_deliver for padding).
+    Semantics match :func:`repro.kernels.ref.spike_deliver_ref`.
+    """
+    n, k = src.shape
+    if n % tile_n != 0:
+        raise ValueError(f"N={n} must be a multiple of tile_n={tile_n}")
+    n_src = spikes.shape[0]
+    grid = (n // tile_n,)
+    kernel = functools.partial(_kernel, steps_lo=steps_lo, r_span=r_span)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_src,), lambda i: (0,)),       # full spike vector
+            pl.BlockSpec((tile_n, k), lambda i: (i, 0)),  # synapse tiles
+            pl.BlockSpec((tile_n, k), lambda i: (i, 0)),
+            pl.BlockSpec((tile_n, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_n, r_span), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, r_span), w.dtype),
+        interpret=interpret,
+    )(spikes, src, w, delay)

@@ -1,0 +1,376 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST be the first two lines, before ANY other import (jax locks the device
+# count at first initialisation). Everything below is ordinary.
+
+"""Multi-pod dry-run: lower + compile every (architecture x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. builds the arch bundle and the train/prefill/decode artifacts,
+  3. ``jit(...).lower(ShapeDtypeStructs).compile()`` -- no allocation,
+  4. records ``memory_analysis()`` (proves the cell fits the per-chip HBM),
+     ``cost_analysis()`` (FLOPs/bytes for §Roofline), and the collective
+     statistics parsed from the compiled HLO (§Roofline's third term),
+  5. derives the three roofline terms against TPU v5e constants.
+
+Also lowers the paper's own workload (``--arch mam-snn``): the distributed
+SNN engine window at full MAM scale, under both the conventional and the
+structure-aware schedule -- the collective-bytes/op-count delta between the
+two IS the paper's claim, visible in compiled HLO.
+
+Usage:
+  python -m repro.launch.dryrun --arch all --shape all --mesh both \
+      --out dryrun_results.json
+  python -m repro.launch.dryrun --arch gemma3-27b --shape train_4k \
+      --mesh single --hierarchical
+"""
+
+import argparse
+import json
+import math
+import time
+import traceback
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.common import SHAPES, ShapeSpec
+from repro.configs.registry import arch_skips, get_arch, list_archs
+from repro.launch.hlo_stats import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.optim.hierarchical import HierarchicalConfig
+from repro.train.steps import make_serve_artifacts, make_train_artifacts
+
+# TPU v5e-class hardware constants (per chip).
+PEAK_FLOPS = 197e12      # bf16
+HBM_BW = 819e9           # bytes/s
+ICI_BW = 50e9            # bytes/s per link
+
+SNN_ARCH = "mam-snn"
+
+
+def _cost_get(cost: dict, key: str) -> float:
+    try:
+        return float(cost.get(key, 0.0))
+    except AttributeError:
+        return 0.0
+
+
+def roofline_terms(flops: float, hbm_bytes: float, wire_bytes: float,
+                   n_devices: int, total: bool) -> dict:
+    """Three roofline terms in seconds (per device).
+
+    ``total=True`` when flops/bytes are whole-program totals (divide by
+    chips); False when they are already per-device.
+    """
+    div = n_devices if total else 1
+    return {
+        "compute_s": flops / div / PEAK_FLOPS,
+        "memory_s": hbm_bytes / div / HBM_BW,
+        "collective_s": wire_bytes / ICI_BW,
+    }
+
+
+def _dominant(terms: dict) -> str:
+    return max(("compute_s", "memory_s", "collective_s"),
+               key=lambda k: terms[k])
+
+
+def _analyze(lowered, compiled, n_devices: int) -> dict:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    # Trip-count-aware accounting: XLA's own cost_analysis counts each while
+    # body once, which under-counts scan-stacked layers by ~L x n_micro; the
+    # hlo_stats parser multiplies per-computation costs by loop trip counts.
+    stats = analyze_hlo(hlo, n_devices)
+    mem_info = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+    }
+    # The SPMD-partitioned module is per-device: stats are per-device.
+    # Memory term uses the *fused* bound (elementwise chains VMEM-resident,
+    # as on TPU); the naive every-op bound is kept alongside in the row.
+    terms = roofline_terms(stats.flops, stats.hbm_bytes_fused,
+                           stats.total_wire_bytes, n_devices, total=False)
+    terms["memory_naive_s"] = stats.hbm_bytes / HBM_BW
+    return {
+        "flops_per_device": stats.flops,
+        "hbm_bytes_per_device": stats.hbm_bytes_fused,
+        "hbm_bytes_naive_per_device": stats.hbm_bytes,
+        "xla_cost_flops_raw": _cost_get(cost, "flops"),
+        "memory_analysis": mem_info,
+        "collectives": stats.as_dict(),
+        "roofline": terms,
+        "dominant": _dominant(terms),
+    }
+
+
+def model_flops(bundle, shape: ShapeSpec) -> float:
+    """6 * N_active * tokens (train) / 2 * N_active * tokens (inference)."""
+    n_active = bundle.cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    factor = 6.0 if shape.kind == "train" else 2.0
+    return factor * n_active * tokens
+
+
+def dryrun_lm_cell(arch_id: str, shape_name: str, multi_pod: bool,
+                   hierarchical: bool) -> dict:
+    shape = SHAPES[shape_name]
+    skip = arch_skips(arch_id).get(shape_name)
+    row: dict[str, Any] = {
+        "arch": arch_id, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "mode": ("hierarchical" if hierarchical else "sync"),
+    }
+    if skip:
+        row["status"] = f"SKIP({skip})"
+        return row
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_devices = mesh.size
+    dp_axes = (("pod", "data") if multi_pod and not (hierarchical
+               and shape.kind == "train") else ("data",))
+    # Activation/logits sharding constraints need the DP axis names; the
+    # batch=1 long-context cell cannot shard its batch at all.
+    act_axes = None if shape.name == "long_500k" else dp_axes
+    # Attention activation layout: head-parallel when KV heads divide the
+    # 16-way TP axis, else context-parallel (see models/layers.py).
+    probe = get_arch(arch_id)
+    n_kv = getattr(probe.cfg, "n_kv", None)
+    if n_kv is None and hasattr(probe.cfg, "backbone"):
+        n_kv = probe.cfg.backbone.n_kv
+    if n_kv is None and probe.family == "audio":
+        n_kv = probe.cfg.n_heads
+    attn_mode = None
+    if n_kv is not None:
+        attn_mode = "heads" if n_kv % 16 == 0 else "seq"
+    bundle = get_arch(arch_id, act_batch_axes=act_axes, attn_sharding=attn_mode)
+    # FSDP policy: parameters below ~1B replicate (per-microbatch ZeRO-3
+    # gathers cost more than they save); larger models shard over 'data'.
+    fsdp_axis = "data" if bundle.cfg.param_count() >= 1e9 else None
+    t0 = time.time()
+
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            hier_cfg = None
+            if hierarchical and multi_pod:
+                hier_cfg = HierarchicalConfig(sync_every=10, compression="int8")
+            # Microbatch so each accumulation slice is one sample per DP
+            # shard (the memory-minimal production setting).
+            n_dp = math.prod(mesh.shape[a] for a in dp_axes)
+            per_replica = shape.global_batch // (
+                n_dp * (mesh.shape["pod"] if hier_cfg is not None else 1))
+            n_micro = max(1, per_replica)
+            art = make_train_artifacts(
+                bundle, mesh=mesh,
+                batch_axes=dp_axes,
+                fsdp_axis=fsdp_axis,
+                hier_cfg=hier_cfg,
+                n_micro=n_micro,
+            )
+            batch_sds = art.batch_sds(bundle, shape, mesh)
+            lowered = art.step_fn.lower(art.params_sds, art.opt_sds, batch_sds)
+            compiled = lowered.compile()
+            row.update(_analyze(lowered, compiled, n_devices))
+            if hier_cfg is not None and art.sync_fn is not None:
+                lowered_s = art.sync_fn.lower(art.params_sds, art.sync_sds)
+                compiled_s = lowered_s.compile()
+                row["sync_step"] = _analyze(lowered_s, compiled_s, n_devices)
+                row["sync_every"] = hier_cfg.sync_every
+        elif shape.kind == "prefill":
+            art = make_serve_artifacts(bundle, shape, mesh, fsdp_axis=fsdp_axis)
+            batch = bundle.input_specs(shape)
+            del batch["labels"]
+            b_specs = {k: P(art.batch_axes, *([None] * (len(v.shape) - 1)))
+                       for k, v in batch.items()}
+            batch_sds = {
+                k: jax.ShapeDtypeStruct(
+                    v.shape, v.dtype, sharding=NamedSharding(mesh, b_specs[k]))
+                for k, v in batch.items()
+            }
+            lowered = art.prefill_fn.lower(art.params_sds, batch_sds)
+            compiled = lowered.compile()
+            row.update(_analyze(lowered, compiled, n_devices))
+        else:  # decode
+            art = make_serve_artifacts(bundle, shape, mesh, fsdp_axis=fsdp_axis)
+            tok_sds = jax.ShapeDtypeStruct(
+                (shape.global_batch, 1), jnp.int32,
+                sharding=NamedSharding(mesh, art.token_spec))
+            extra = {}
+            if bundle.family == "audio":
+                pass  # enc_out already part of state_sds
+            idx_sds = jax.ShapeDtypeStruct((), jnp.int32)
+            lowered = art.decode_fn.lower(
+                art.params_sds, art.state_sds, tok_sds, idx_sds)
+            compiled = lowered.compile()
+            row.update(_analyze(lowered, compiled, n_devices))
+
+    row["status"] = "OK"
+    row["compile_s"] = round(time.time() - t0, 1)
+    mf = model_flops(bundle, shape)
+    row["model_flops_total"] = mf
+    hlo_total = row["flops_per_device"] * n_devices
+    row["useful_flops_ratio"] = mf / hlo_total if hlo_total else 0.0
+    return row
+
+
+def dryrun_snn_cell(schedule: str, multi_pod: bool, scale: float = 1.0) -> dict:
+    """Lower the distributed SNN engine window at production MAM scale."""
+    from repro.core.areas import mam_spec
+    from repro.core.connectivity import network_sds
+    from repro.core.dist_engine import (
+        make_dist_engine, network_pspecs, state_pspecs)
+    from repro.core.engine import EngineConfig
+    from repro.core import neuron as neuron_lib
+
+    row: dict[str, Any] = {
+        "arch": SNN_ARCH, "shape": f"mam_x{scale:g}_{schedule}",
+        "mesh": "2x16x16" if multi_pod else "16x16", "mode": schedule,
+    }
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_devices = mesh.size
+    spec = mam_spec(scale=scale)
+    # pad so both the 16-way subgroup and (for conventional) all 512 divide
+    mult = 512 if schedule == "conventional" else 16
+    net_sds = network_sds(spec, size_multiple=mult)
+    cfg = EngineConfig(neuron_model="lif", schedule=schedule)
+    eng = make_dist_engine(net_sds, spec, mesh, cfg)
+    A, n_pad = net_sds.alive.shape
+    R = net_sds.ring_len
+
+    st_specs = state_pspecs(mesh, schedule, "lif")
+    nt_specs = network_pspecs(mesh, schedule, like=net_sds)
+    sds = jax.ShapeDtypeStruct
+
+    def shard(x, spec_):
+        return sds(x.shape, x.dtype, sharding=NamedSharding(mesh, spec_))
+
+    state_sds = jax.tree.map(
+        lambda leaf, spec_: shard(leaf, spec_),
+        {
+            "neuron": neuron_lib.LIFState(
+                v=sds((A, n_pad), jnp.float32),
+                i_syn=sds((A, n_pad), jnp.float32),
+                refrac=sds((A, n_pad), jnp.int32),
+            ),
+            "ring": sds((A, n_pad, R), jnp.float32),
+            "t": sds((), jnp.int32),
+            "spike_count": sds((A, n_pad), jnp.int32),
+        },
+        {
+            "neuron": st_specs.neuron, "ring": st_specs.ring,
+            "t": st_specs.t, "spike_count": st_specs.spike_count,
+        },
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)),
+    )
+    from repro.core.engine import SimState
+    state_sds = SimState(**state_sds)
+    net_in = jax.tree.map(
+        lambda leaf, spec_: shard(leaf, spec_), net_sds, nt_specs,
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)),
+    )
+    gid_spec = (st_specs.spike_count)  # same layout as per-neuron arrays
+    gids_sds = shard(sds((A, n_pad), jnp.int32), gid_spec)
+
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        lowered = jax.jit(eng.window_raw).lower(state_sds, net_in, gids_sds)
+        compiled = lowered.compile()
+    row.update(_analyze(lowered, compiled, n_devices))
+    row["status"] = "OK"
+    row["compile_s"] = round(time.time() - t0, 1)
+    row["n_neurons"] = spec.n_total
+    row["n_synapses_per_neuron"] = spec.k_total
+    row["delay_ratio_D"] = spec.delay_ratio
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id | 'all' | 'mam-snn' (comma separated ok)")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--hierarchical", action="store_true",
+                    help="use the paper-technique trainer (multi-pod only)")
+    ap.add_argument("--snn-schedule", default="structure_aware")
+    ap.add_argument("--snn-scale", type=float, default=1.0)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = list_archs() if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    rows = []
+    for multi_pod in meshes:
+        for arch in archs:
+            if arch == SNN_ARCH:
+                for sched in args.snn_schedule.split(","):
+                    try:
+                        rows.append(dryrun_snn_cell(sched, multi_pod,
+                                                    args.snn_scale))
+                    except Exception as e:
+                        rows.append({
+                            "arch": arch, "shape": sched,
+                            "mesh": "2x16x16" if multi_pod else "16x16",
+                            "status": f"FAIL({type(e).__name__}: {e})",
+                        })
+                        traceback.print_exc()
+                    _print_row(rows[-1])
+                continue
+            for shape in shapes:
+                try:
+                    rows.append(dryrun_lm_cell(arch, shape, multi_pod,
+                                               args.hierarchical))
+                except Exception as e:
+                    rows.append({
+                        "arch": arch, "shape": shape,
+                        "mesh": "2x16x16" if multi_pod else "16x16",
+                        "status": f"FAIL({type(e).__name__}: {e})",
+                    })
+                    traceback.print_exc()
+                _print_row(rows[-1])
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"\nwrote {len(rows)} rows to {args.out}")
+
+    n_ok = sum(r["status"] == "OK" for r in rows)
+    n_skip = sum(r["status"].startswith("SKIP") for r in rows)
+    n_fail = len(rows) - n_ok - n_skip
+    print(f"\n=== dry-run summary: {n_ok} OK, {n_skip} SKIP, {n_fail} FAIL ===")
+    if n_fail:
+        raise SystemExit(1)
+
+
+def _print_row(row: dict) -> None:
+    status = row.get("status", "?")
+    base = f"[{row['mesh']}] {row['arch']:28s} {row['shape']:12s} "
+    if status != "OK":
+        print(base + status)
+        return
+    r = row["roofline"]
+    mem = row["memory_analysis"]
+    per_dev_gb = (mem["argument_bytes"] + mem["temp_bytes"]
+                  + mem["output_bytes"]) / 2**30
+    print(base + f"OK compute={r['compute_s']*1e3:9.3f}ms "
+          f"memory={r['memory_s']*1e3:9.3f}ms "
+          f"collective={r['collective_s']*1e3:9.3f}ms "
+          f"dom={row['dominant'][:-2]:10s} mem/dev={per_dev_gb:7.2f}GiB "
+          f"compile={row.get('compile_s', 0):6.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,364 @@
+"""Trip-count-aware cost statistics from compiled HLO text (for §Roofline).
+
+``compiled.cost_analysis()`` counts each ``while`` body ONCE -- useless for
+scan-stacked models (a 62-layer scanned transformer reports 1/62 of its
+FLOPs). This module parses the optimized HLO module text itself:
+
+* splits it into computations, building a per-computation symbol table
+  (instruction -> shape) so dot FLOPs can be derived from operand shapes,
+* extracts while-loop trip counts from their condition computations (the
+  loop bound is the s32 constant feeding the compare),
+* propagates multipliers entry -> while body -> nested bodies (and through
+  ``calls=`` for fusions), then sums
+
+    FLOPs          2 * prod(result dims) * prod(contracted dims) per dot
+    HBM bytes      operands + results of top-level instructions (models
+                   perfect fusion-internal reuse)
+    collectives    effective wire bytes per device, per kind:
+                     all-gather          out * (g-1)/g
+                     all-reduce          2 * bytes * (g-1)/g   (ring)
+                     reduce-scatter      out * (g-1)
+                     all-to-all          bytes * (g-1)/g
+                     collective-permute  bytes
+  each multiplied by its computation's trip multiplier.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+__all__ = ["HloStats", "analyze_hlo", "parse_collectives"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_TYPE_RE = re.compile(
+    r"\b(pred|s4|u4|s8|u8|s16|u16|s32|u32|s64|u64|bf16|f16|f32|f64|c64|c128|"
+    r"f8e4m3fn|f8e5m2)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.*)$")
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?(%?[\w.\-]+)\s*\(.*\)\s*->\s*.*\{")
+_WHILE_RE = re.compile(r"condition=(%[\w.\-]+),\s*body=(%[\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=(%[\w.\-]+)")
+_CONST_S32_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_V1_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERANDS_RE = re.compile(r"\((%[\w.\-]+(?:,\s*%[\w.\-]+)*)?\)")
+
+
+def _shape_list(text: str) -> list[tuple[str, tuple[int, ...]]]:
+    out = []
+    for dt, dims in _TYPE_RE.findall(text):
+        shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+        out.append((dt, shape))
+    return out
+
+
+def _nbytes(shapes) -> int:
+    total = 0
+    for dt, shape in shapes:
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_V1_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return default
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    lines: list[str]
+    symbols: dict[str, list]            # instr -> shape list
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    hbm_bytes_fused: float = 0.0
+    coll_counts: dict = None
+    coll_wire: dict = None
+    coll_wire_by_group: dict = None     # group size -> wire bytes
+    whiles: list = None                 # (cond_name, body_name)
+    calls: list = None                  # fusion/call targets
+    max_s32_const: int = 1
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float
+    hbm_bytes: float          # naive bound: every top-level op's in+out
+    hbm_bytes_fused: float    # fused bound: only dot/fusion/slice/scatter/
+                              # copy/reduce/collective traffic (elementwise
+                              # chains assumed VMEM-resident, as on TPU)
+    coll_counts: dict[str, float]
+    coll_wire: dict[str, float]
+    # Tier attribution: replica-group size -> wire bytes. Group sizes <= the
+    # intra-pod extent are fast-tier (ICI); the full-mesh size crosses pods.
+    coll_wire_by_group: dict[int, float]
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.coll_wire.values())
+
+    @property
+    def total_coll_ops(self) -> float:
+        return sum(self.coll_counts.values())
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "hbm_bytes_fused": self.hbm_bytes_fused,
+            "counts": dict(self.coll_counts),
+            "wire_bytes": dict(self.coll_wire),
+            "wire_bytes_by_group": {str(k): v for k, v in
+                                    self.coll_wire_by_group.items()},
+            "total_wire_bytes": self.total_wire_bytes,
+            "total_ops": self.total_coll_ops,
+        }
+
+
+def _split_computations(text: str) -> list[_Comp]:
+    comps: list[_Comp] = []
+    cur: _Comp | None = None
+    depth = 0
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_START_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                name = m.group(1)
+                if not name.startswith("%"):
+                    name = "%" + name
+                cur = _Comp(name=name, lines=[], symbols={},
+                            coll_counts=defaultdict(float),
+                            coll_wire=defaultdict(float),
+                            coll_wire_by_group=defaultdict(float),
+                            whiles=[], calls=[])
+                depth = 1
+            continue
+        depth += line.count("{") - line.count("}")
+        if depth <= 0:
+            comps.append(cur)
+            cur = None
+            continue
+        cur.lines.append(line)
+    if cur is not None:
+        comps.append(cur)
+    return comps
+
+
+def _analyze_comp(c: _Comp, n_devices: int) -> None:
+    # pass 1: symbol table
+    for line in c.lines:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # shapes up to the op name: take shapes before the first '(' that
+        # follows the type annotation -- simplest robust cut: shapes in the
+        # segment before ' op_name(' is hard; take all shapes up to the op
+        # token by cutting at the first alphabetic op keyword match below.
+        # For the symbol table we only need the RESULT type(s): they come
+        # first, before the op name.
+        paren = rhs.find("(")
+        head = rhs[:paren] if paren > 0 else rhs
+        c.symbols[name] = _shape_list(head)
+
+    for line in c.lines:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        result_shapes = c.symbols.get(name, [])
+        out_bytes = _nbytes(result_shapes)
+
+        cm = _CONST_S32_RE.search(line)
+        if cm:
+            c.max_s32_const = max(c.max_s32_const, int(cm.group(1)))
+
+        wm = _WHILE_RE.search(line)
+        if wm and " while(" in rhs:
+            c.whiles.append((wm.group(1), wm.group(2)))
+            continue
+        fm = _CALLS_RE.search(line)
+        if fm:
+            c.calls.append(fm.group(1))
+
+        # operand bytes (resolve via symbol table)
+        paren = rhs.find("(")
+        operand_bytes = 0
+        op_names: list[str] = []
+        if paren > 0:
+            om = _OPERANDS_RE.search(rhs[paren:])
+            if om and om.group(1):
+                op_names = [o.strip() for o in om.group(1).split(",")]
+                for o in op_names:
+                    operand_bytes += _nbytes(c.symbols.get(o, []))
+
+        # HBM traffic model per op kind. Pure plumbing (tuple shuffling,
+        # aliasing, control flow wrappers) moves no data; slicing ops touch
+        # only the slice, not the whole operand (XLA updates in place).
+        def _is(op: str) -> bool:
+            return f" {op}(" in rhs or rhs.startswith(f"{op}(")
+
+        if (_is("get-tuple-element") or _is("tuple") or _is("bitcast")
+                or _is("parameter") or _is("constant") or _is("while")
+                or _is("conditional") or _is("after-all") or _is("reshape")
+                or _is("iota")):
+            pass  # no traffic
+        elif _is("dynamic-slice"):
+            c.hbm_bytes += 2 * out_bytes
+            c.hbm_bytes_fused += 2 * out_bytes
+        elif _is("dynamic-update-slice"):
+            upd = (_nbytes(c.symbols.get(op_names[1], []))
+                   if len(op_names) > 1 else out_bytes)
+            c.hbm_bytes += 2 * upd
+            c.hbm_bytes_fused += 2 * upd
+        elif _is("gather"):
+            c.hbm_bytes += 2 * out_bytes
+            c.hbm_bytes_fused += 2 * out_bytes
+        elif _is("scatter"):
+            upd = (_nbytes(c.symbols.get(op_names[2], []))
+                   if len(op_names) > 2 else out_bytes)
+            c.hbm_bytes += 3 * upd
+            c.hbm_bytes_fused += 3 * upd
+        else:
+            c.hbm_bytes += out_bytes + operand_bytes
+            # Fused bound: only ops that necessarily touch HBM on a
+            # well-fused TPU program. Bare elementwise chains (add, exp,
+            # convert, select, ...) are assumed fused into their producers.
+            if any(_is(op) for op in (
+                    "dot", "fusion", "copy", "convolution", "reduce",
+                    "reduce-window", "sort", "custom-call", "rng",
+                    "all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute", "pad",
+                    "concatenate", "transpose", "slice")):
+                c.hbm_bytes_fused += out_bytes + operand_bytes
+
+        # dot flops
+        if " dot(" in rhs:
+            km = _CONTRACT_RE.search(rhs)
+            contract = [int(x) for x in km.group(1).split(",")] if km and km.group(1) else []
+            lhs_shape: tuple[int, ...] = ()
+            if op_names:
+                lhs_syms = c.symbols.get(op_names[0], [])
+                if lhs_syms:
+                    lhs_shape = lhs_syms[0][1]
+            kdim = 1
+            for d in contract:
+                if d < len(lhs_shape):
+                    kdim *= lhs_shape[d]
+            rdim = 1
+            for _, shape in result_shapes[:1]:
+                for d in shape:
+                    rdim *= d
+            c.flops += 2.0 * rdim * kdim
+
+        # collectives
+        for kind in _COLLECTIVES:
+            if f" {kind}(" in rhs or f" {kind}-start(" in rhs:
+                g = _group_size(line, n_devices)
+                frac = (g - 1) / g if g > 1 else 0.0
+                c.coll_counts[kind] += 1
+                if kind == "all-gather":
+                    w = out_bytes * frac
+                elif kind == "all-reduce":
+                    w = 2 * out_bytes * frac
+                elif kind == "reduce-scatter":
+                    w = out_bytes * (g - 1)
+                elif kind == "all-to-all":
+                    w = out_bytes * frac
+                else:  # collective-permute
+                    w = out_bytes
+                c.coll_wire[kind] += w
+                c.coll_wire_by_group[g] += w
+                break
+
+
+def analyze_hlo(text: str, n_devices: int) -> HloStats:
+    comps = _split_computations(text)
+    by_name = {c.name: c for c in comps}
+    for c in comps:
+        _analyze_comp(c, n_devices)
+
+    # multiplier propagation (entry = last ENTRY-like computation or the one
+    # not referenced by anyone)
+    referenced: set[str] = set()
+    for c in comps:
+        for _, body in c.whiles:
+            referenced.add(body)
+        for callee in c.calls:
+            referenced.add(callee)
+        for _, cond in [(b, cond) for cond, b in c.whiles]:
+            referenced.add(cond)
+    entries = [c for c in comps if c.name not in referenced]
+    mult: dict[str, float] = defaultdict(float)
+    for e in entries:
+        mult[e.name] += 1.0
+
+    # topological-ish propagation: iterate until fixpoint (bounded passes)
+    for _ in range(64):
+        changed = False
+        new_mult = defaultdict(float)
+        for e in entries:
+            new_mult[e.name] = 1.0
+        for c in comps:
+            m = new_mult.get(c.name, mult.get(c.name, 0.0))
+            if m == 0.0:
+                m = mult.get(c.name, 0.0)
+            for cond, body in c.whiles:
+                trip = by_name[cond].max_s32_const if cond in by_name else 1
+                new_mult[body] += m * max(trip, 1)
+                new_mult[cond] += m * max(trip, 1)
+            for callee in c.calls:
+                new_mult[callee] += m
+        if dict(new_mult) != dict(mult):
+            mult = new_mult
+            changed = True
+        if not changed:
+            break
+
+    flops = 0.0
+    hbm = 0.0
+    hbm_f = 0.0
+    counts: dict[str, float] = defaultdict(float)
+    wire: dict[str, float] = defaultdict(float)
+    wire_g: dict[int, float] = defaultdict(float)
+    for c in comps:
+        m = mult.get(c.name, 1.0 if c in entries else 0.0)
+        if c in entries:
+            m = max(m, 1.0)
+        flops += c.flops * m
+        hbm += c.hbm_bytes * m
+        hbm_f += c.hbm_bytes_fused * m
+        for k, v in c.coll_counts.items():
+            counts[k] += v * m
+        for k, v in c.coll_wire.items():
+            wire[k] += v * m
+        for k, v in c.coll_wire_by_group.items():
+            wire_g[k] += v * m
+    return HloStats(flops=flops, hbm_bytes=hbm, hbm_bytes_fused=hbm_f,
+                    coll_counts=dict(counts), coll_wire=dict(wire),
+                    coll_wire_by_group=dict(wire_g))
+
+
+def parse_collectives(text: str, n_devices: int) -> HloStats:
+    """Backwards-compatible alias (collective stats live on HloStats)."""
+    return analyze_hlo(text, n_devices)

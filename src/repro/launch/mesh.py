@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state -- critical because the dry-run must set
+XLA_FLAGS before any jax initialisation, and smoke tests must see one device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_test_mesh", "POD_SHAPE", "MULTI_POD_SHAPE"]
+
+POD_SHAPE = (16, 16)                 # 256 chips: (data, model)
+MULTI_POD_SHAPE = (2, 16, 16)        # 512 chips: (pod, data, model)
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """The benchmark mesh: 16x16 single pod, or 2x16x16 across two pods.
+
+    Axis semantics (DESIGN.md §4): 'model' is the fast tier (TP / intra-area
+    subgroup), 'data' the intra-pod DP / area axis, 'pod' the slow tier the
+    paper's D-cycle scheme synchronises rarely.
+    """
+    shape = MULTI_POD_SHAPE if multi_pod else POD_SHAPE
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> jax.sharding.Mesh:
+    """Small mesh for CPU tests (requires forced host device count)."""
+    return jax.make_mesh(shape, axes)

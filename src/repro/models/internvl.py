@@ -1,0 +1,128 @@
+"""InternVL2-style VLM: InternLM2 language backbone + stubbed ViT frontend.
+
+Per the assignment the InternViT frontend is a STUB: ``input_specs()``
+supplies precomputed patch embeddings [B, n_patches, d_vit] (what the vision
+tower + pixel-shuffle would produce). This module projects them with the
+MLP connector and splices them over the first ``n_patches`` token positions
+of the language backbone (the '<img>' context-token convention).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers
+from repro.models.transformer import Transformer, TransformerConfig
+
+__all__ = ["InternVLConfig", "InternVL"]
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class InternVLConfig:
+    name: str
+    backbone: TransformerConfig
+    d_vit: int = 1024       # stubbed patch-embedding width
+    n_patches: int = 256    # image tokens per sample
+
+    @property
+    def pdtype(self):
+        return self.backbone.pdtype
+
+    @property
+    def cdtype(self):
+        return self.backbone.cdtype
+
+    def param_count(self) -> int:
+        d = self.backbone.d_model
+        connector = self.d_vit * d + d * d + 2 * d  # 2-layer MLP connector
+        return self.backbone.param_count() + connector
+
+    def active_param_count(self) -> int:
+        return self.param_count() - self.backbone.param_count() \
+            + self.backbone.active_param_count()
+
+
+class InternVL:
+    def __init__(self, cfg: InternVLConfig):
+        self.cfg = cfg
+        self.lm = Transformer(cfg.backbone)
+
+    def init_params(self, key: jax.Array) -> Params:
+        k_lm, k_c1, k_c2 = jax.random.split(key, 3)
+        d = self.cfg.backbone.d_model
+        return {
+            "lm": self.lm.init_params(k_lm),
+            "connector": {
+                "fc1": layers.dense_init(k_c1, self.cfg.d_vit, d, bias=True,
+                                         dtype=self.cfg.pdtype),
+                "fc2": layers.dense_init(k_c2, d, d, bias=True,
+                                         dtype=self.cfg.pdtype),
+            },
+        }
+
+    def _splice(self, params: Params, tokens: jax.Array,
+                patch_embeds: jax.Array) -> jax.Array:
+        """Project patch embeddings and overwrite the first n_patches slots."""
+        h = params["lm"]["embed"][tokens].astype(self.cfg.cdtype)
+        c = params["connector"]
+        img = layers.dense(c["fc2"], jax.nn.gelu(
+            layers.dense(c["fc1"], patch_embeds.astype(self.cfg.cdtype))
+        ))
+        n_p = self.cfg.n_patches
+        return jnp.concatenate([img[:, :n_p], h[:, n_p:]], axis=1)
+
+    def hidden(self, params: Params, tokens: jax.Array, *,
+               patch_embeds: jax.Array, positions=None):
+        h0 = self._splice(params, tokens, patch_embeds)
+        return self.lm.hidden(
+            params["lm"], tokens, embeds_override=h0, positions=positions
+        )
+
+    def unembed(self, params: Params, h: jax.Array) -> jax.Array:
+        return self.lm.unembed(params["lm"], h)
+
+    def forward(self, params: Params, tokens: jax.Array, *,
+                patch_embeds: jax.Array, positions=None):
+        h, aux = self.hidden(params, tokens, patch_embeds=patch_embeds,
+                             positions=positions)
+        return self.unembed(params, h), aux
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16) -> Params:
+        return self.lm.init_cache(batch, max_len, dtype)
+
+    def forward_with_cache(self, params, tokens, cache, cache_index, *,
+                           patch_embeds: jax.Array | None = None,
+                           last_only: bool = False):
+        """Decode steps never carry image tokens; prefill may."""
+        if patch_embeds is not None:
+            # Prefill path: splice the projected patch embeddings, then run
+            # the backbone's cached forward with the override.
+            h0 = self._splice(params, tokens, patch_embeds)
+            return self.lm.forward_with_cache(
+                params["lm"], tokens, cache, cache_index,
+                last_only=last_only, embeds_override=h0,
+            )
+        return self.lm.forward_with_cache(
+            params["lm"], tokens, cache, cache_index, last_only=last_only
+        )
+
+    def param_pspecs(self, *, fsdp: str | None = "data", tp: str = "model") -> Params:
+        return {
+            "lm": self.lm.param_pspecs(fsdp=fsdp, tp=tp),
+            "connector": {
+                "fc1": {"w": P(None, fsdp), "b": P(None)},
+                "fc2": {"w": P(fsdp, tp), "b": P(tp)},
+            },
+        }
+
+    def cache_pspecs(self, *, batch_axes, seq_axis=None, head_axis=None) -> Params:
+        return self.lm.cache_pspecs(
+            batch_axes=batch_axes, seq_axis=seq_axis, head_axis=head_axis
+        )

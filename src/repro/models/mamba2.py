@@ -1,0 +1,369 @@
+"""Mamba2 (SSD -- state-space duality) language model, scan-stacked.
+
+Implements the chunked SSD algorithm of Dao & Gu (2024): within a chunk the
+recurrence is materialised as a masked attention-like quadratic form (MXU
+friendly); across chunks a tiny [H, P, N] state is carried by a scan. Decode
+is the O(1) recurrence -- this is why ``long_500k`` runs for mamba2 while
+full-attention models are skipped.
+
+Shapes: B batch, S seq, H heads, P headdim, N d_state, G B/C groups.
+The per-head B/C tensors are never materialised (einsums keep the G axis),
+which keeps activation memory linear in G, not H.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers
+
+__all__ = ["Mamba2Config", "Mamba2"]
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    name: str
+    n_layers: int
+    d_model: int
+    vocab: int
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    headdim: int = 64
+    n_groups: int = 1
+    chunk: int = 128
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    remat: str = "none"
+    act_batch_axes: tuple[str, ...] | None = None
+    attn_sharding: str | None = None  # accepted for uniform overrides; no-op
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        assert self.d_inner % self.headdim == 0
+        return self.d_inner // self.headdim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def param_count(self) -> int:
+        d, di, h = self.d_model, self.d_inner, self.n_heads
+        in_proj = d * (2 * di + 2 * self.n_groups * self.d_state + h)
+        conv = self.d_conv * self.conv_dim + self.conv_dim
+        per_layer = in_proj + conv + 3 * h + di + di * d + 2 * d
+        return self.vocab * d + d + self.n_layers * per_layer
+
+    def active_param_count(self) -> int:
+        return self.param_count()
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """segsum(x)[..., i, j] = sum_{k=j+1..i} x_k (i >= j), -inf above diag."""
+    q = x.shape[-1]
+    cum = jnp.cumsum(x, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]  # [..., i, j]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+class Mamba2:
+    def __init__(self, cfg: Mamba2Config):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------ init
+
+    def _init_layer(self, key: jax.Array) -> Params:
+        cfg = self.cfg
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        pd = cfg.pdtype
+        d_in_proj = 2 * cfg.d_inner + 2 * cfg.n_groups * cfg.d_state + cfg.n_heads
+        dt = jnp.exp(
+            jax.random.uniform(k3, (cfg.n_heads,))
+            * (math.log(0.1) - math.log(0.001)) + math.log(0.001)
+        )
+        return {
+            "norm": layers.rms_norm_init(cfg.d_model, pd),
+            "in_proj": layers.dense_init(k1, cfg.d_model, d_in_proj, dtype=pd),
+            "conv_w": (jax.random.normal(k2, (cfg.d_conv, cfg.conv_dim))
+                       / math.sqrt(cfg.d_conv)).astype(pd),
+            "conv_b": jnp.zeros((cfg.conv_dim,), pd),
+            "A_log": jnp.log(jnp.linspace(1.0, 16.0, cfg.n_heads)).astype(jnp.float32),
+            "D": jnp.ones((cfg.n_heads,), jnp.float32),
+            "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),
+            "gated_norm": layers.rms_norm_init(cfg.d_inner, pd),
+            "out_proj": layers.dense_init(k4, cfg.d_inner, cfg.d_model, dtype=pd),
+        }
+
+    def init_params(self, key: jax.Array) -> Params:
+        cfg = self.cfg
+        k_e, k_l, k_h = jax.random.split(key, 3)
+        lkeys = jax.random.split(k_l, cfg.n_layers)
+        return {
+            "embed": (jax.random.normal(k_e, (cfg.vocab, cfg.d_model)) * 0.02
+                      ).astype(cfg.pdtype),
+            "layers": jax.vmap(self._init_layer)(lkeys),
+            "final_norm": layers.rms_norm_init(cfg.d_model, cfg.pdtype),
+            "lm_head": (jax.random.normal(k_h, (cfg.d_model, cfg.vocab))
+                        / math.sqrt(cfg.d_model)).astype(cfg.pdtype),
+        }
+
+    # ------------------------------------------------------------- SSD core
+
+    def _split_proj(self, p: Params, u: jax.Array):
+        cfg = self.cfg
+        zxbcdt = layers.dense(p["in_proj"], u)
+        z, xbc, dt = jnp.split(
+            zxbcdt,
+            [cfg.d_inner, cfg.d_inner + cfg.conv_dim],
+            axis=-1,
+        )
+        return z, xbc, dt
+
+    def _conv(self, p: Params, xbc: jax.Array, conv_state: jax.Array | None):
+        """Depthwise causal conv over S; optionally seeded by a decode state.
+
+        xbc: [B, S, conv_dim]. conv_state: [B, d_conv-1, conv_dim] or None.
+        Returns (activated conv output, new conv state)."""
+        cfg = self.cfg
+        w = p["conv_w"].astype(xbc.dtype)  # [d_conv, conv_dim]
+        pad = cfg.d_conv - 1
+        if conv_state is None:
+            xp = jnp.pad(xbc, ((0, 0), (pad, 0), (0, 0)))
+        else:
+            xp = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)
+        out = sum(
+            xp[:, i : i + xbc.shape[1]] * w[i]
+            for i in range(cfg.d_conv)
+        ) + p["conv_b"].astype(xbc.dtype)
+        new_state = xp[:, -pad:] if pad > 0 else xp[:, :0]
+        return jax.nn.silu(out), new_state
+
+    def _ssd_chunked(self, p, x, b_mat, c_mat, dt, h0=None):
+        """Chunked SSD scan.
+
+        x: [B, S, H, P]; b_mat/c_mat: [B, S, G, N]; dt: [B, S, H] (softplus'd).
+        h0: optional initial state [B, H, P, N]. Returns (y [B,S,H,P], h_last).
+        """
+        cfg = self.cfg
+        bsz, s, h, pdim = x.shape
+        g, n = b_mat.shape[2], b_mat.shape[3]
+        hg = h // g
+        q = min(cfg.chunk, s)
+        while s % q:  # odd lengths (smoke tests): largest divisor <= chunk
+            q -= 1
+        nc = s // q
+
+        a = -jnp.exp(p["A_log"].astype(jnp.float32))          # [H]
+        dta = dt.astype(jnp.float32) * a                       # [B, S, H]
+        # reshape into chunks
+        xq = x.reshape(bsz, nc, q, g, hg, pdim)
+        bq = b_mat.reshape(bsz, nc, q, g, n)
+        cq = c_mat.reshape(bsz, nc, q, g, n)
+        dtq = dt.reshape(bsz, nc, q, h).astype(jnp.float32)
+        dtaq = dta.reshape(bsz, nc, q, h)
+        cum = jnp.cumsum(dtaq, axis=2)                         # [B, nc, Q, H]
+
+        # --- intra-chunk (diagonal block): masked quadratic form
+        lmat = jnp.exp(_segsum(dtaq.transpose(0, 1, 3, 2)))    # [B, nc, H, Q, Q]
+        lmat = lmat.reshape(bsz, nc, g, hg, q, q)
+        scores = jnp.einsum("bcign,bcjgn->bcgij", cq.astype(jnp.float32),
+                            bq.astype(jnp.float32))            # [B, nc, G, Q, Q]
+        dtx = xq.astype(jnp.float32) * dtq.reshape(bsz, nc, q, g, hg)[..., None]
+        y_diag = jnp.einsum("bcgij,bcghij,bcjghp->bcighp", scores, lmat, dtx)
+
+        # --- chunk end-states
+        decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)        # [B, nc, Q, H]
+        dte = decay_to_end.reshape(bsz, nc, q, g, hg)
+        s_end = jnp.einsum("bcjghp,bcjgh,bcjgn->bcghpn", dtx, dte, bq.astype(jnp.float32))
+
+        # --- inter-chunk recurrence over the tiny state
+        total_decay = jnp.exp(cum[:, :, -1, :])                # [B, nc, H]
+
+        def step(h_prev, xs):
+            s_e, dec = xs  # [B, G, Hg, P, N], [B, H]
+            d = dec.reshape(bsz, g, hg)[..., None, None]
+            h_new = h_prev * d + s_e
+            return h_new, h_prev
+
+        if h0 is None:
+            h0 = jnp.zeros((bsz, g, hg, pdim, n), jnp.float32)
+        else:
+            h0 = h0.reshape(bsz, g, hg, pdim, n).astype(jnp.float32)
+        h_last, h_prevs = jax.lax.scan(
+            step,
+            h0,
+            (s_end.transpose(1, 0, 2, 3, 4, 5), total_decay.transpose(1, 0, 2)),
+        )
+        h_prevs = h_prevs.transpose(1, 0, 2, 3, 4, 5)          # [B, nc, G, Hg, P, N]
+
+        # --- inter-chunk contribution
+        decay_in = jnp.exp(cum).reshape(bsz, nc, q, g, hg)     # decay from chunk start
+        y_off = jnp.einsum(
+            "bcign,bcghpn,bcigh->bcighp",
+            cq.astype(jnp.float32), h_prevs, decay_in,
+        )
+
+        y = (y_diag + y_off).reshape(bsz, s, h, pdim)
+        y = y + x.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+        return y.astype(x.dtype), h_last.reshape(bsz, h, pdim, n)
+
+    def _mixer(self, p: Params, u: jax.Array, state=None):
+        """One mamba2 block (post-norm residual handled by caller).
+
+        state: None (training) or dict(conv, ssm) for decode.
+        Returns (out [B, S, D], new_state or None)."""
+        cfg = self.cfg
+        bsz, s, _ = u.shape
+        z, xbc, dt = self._split_proj(p, u)
+        conv_state = state["conv"] if state is not None else None
+        xbc, new_conv = self._conv(p, xbc, conv_state)
+        x, b_mat, c_mat = jnp.split(
+            xbc, [cfg.d_inner, cfg.d_inner + cfg.n_groups * cfg.d_state], axis=-1
+        )
+        x = x.reshape(bsz, s, cfg.n_heads, cfg.headdim)
+        b_mat = b_mat.reshape(bsz, s, cfg.n_groups, cfg.d_state)
+        c_mat = c_mat.reshape(bsz, s, cfg.n_groups, cfg.d_state)
+        dt = jax.nn.softplus(
+            dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+        )  # [B, S, H]
+
+        h0 = state["ssm"] if state is not None else None
+        y, h_last = self._ssd_chunked(p, x, b_mat, c_mat, dt, h0=h0)
+        y = y.reshape(bsz, s, cfg.d_inner)
+        y = layers.rms_norm(p["gated_norm"], y * jax.nn.silu(z))
+        out = layers.dense(p["out_proj"], y)
+        new_state = None
+        if state is not None:
+            new_state = {"conv": new_conv.astype(state["conv"].dtype),
+                         "ssm": h_last.astype(state["ssm"].dtype)}
+        return out, new_state
+
+    # --------------------------------------------------------------- forward
+
+    def _constrain(self, h):
+        if self.cfg.act_batch_axes is None:
+            return h
+        return jax.lax.with_sharding_constraint(h, P(self.cfg.act_batch_axes, None, None))
+
+    def hidden(self, params: Params, tokens: jax.Array,
+               *, embeds_override=None, positions=None) -> tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        del positions  # SSMs carry position in state
+        h = params["embed"][tokens].astype(cfg.cdtype)
+        if embeds_override is not None:
+            h = embeds_override.astype(cfg.cdtype)
+        h = self._constrain(h)
+
+        def body(h, p_layer):
+            out, _ = self._mixer(p_layer, layers.rms_norm(p_layer["norm"], h))
+            return self._constrain(h + out), None
+
+        if cfg.remat in ("full", "dots"):
+            body = jax.checkpoint(body)
+        h, _ = jax.lax.scan(body, h, params["layers"])
+        return layers.rms_norm(params["final_norm"], h), jnp.float32(0.0)
+
+    def unembed(self, params: Params, h: jax.Array) -> jax.Array:
+        logits = h @ params["lm_head"].astype(h.dtype)
+        if self.cfg.act_batch_axes is not None:
+            logits = jax.lax.with_sharding_constraint(
+                logits, P(self.cfg.act_batch_axes, None, "model"))
+        return logits
+
+    def forward(self, params: Params, tokens: jax.Array,
+                *, embeds_override=None, positions=None) -> tuple[jax.Array, jax.Array]:
+        h, aux = self.hidden(params, tokens, embeds_override=embeds_override,
+                             positions=positions)
+        return self.unembed(params, h), aux
+
+    # -------------------------------------------------------------- serving
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16) -> Params:
+        cfg = self.cfg
+        del max_len  # state size is O(1) in sequence length -- the point of SSMs
+        return {
+            "conv": jnp.zeros(
+                (cfg.n_layers, batch, cfg.d_conv - 1, cfg.conv_dim), dtype
+            ),
+            "ssm": jnp.zeros(
+                (cfg.n_layers, batch, cfg.n_heads, cfg.headdim, cfg.d_state),
+                jnp.float32,
+            ),
+        }
+
+    def forward_with_cache(self, params: Params, tokens: jax.Array,
+                           cache: Params, cache_index: jax.Array,
+                           *, last_only: bool = False):
+        """Chunked prefill / decode. tokens [B, S] with S % chunk == 0 or S==1."""
+        cfg = self.cfg
+        del cache_index  # state carries all history; no positions needed
+        h = params["embed"][tokens].astype(cfg.cdtype)
+
+        def body(h, xs):
+            p_layer, state = xs
+            out, new_state = self._mixer(
+                p_layer, layers.rms_norm(p_layer["norm"], h), state
+            )
+            return h + out, new_state
+
+        (h), new_cache = jax.lax.scan(
+            body, h, (params["layers"], {"conv": cache["conv"], "ssm": cache["ssm"]})
+        )
+        h = layers.rms_norm(params["final_norm"], h)
+        if last_only:
+            h = h[:, -1:]
+        return h @ params["lm_head"].astype(h.dtype), new_cache
+
+    # ---------------------------------------------------------------- specs
+
+    def param_pspecs(self, *, fsdp: str | None = "data", tp: str = "model") -> Params:
+        def stack(t):
+            return jax.tree.map(lambda s: P(None, *s), t,
+                                is_leaf=lambda x: isinstance(x, P))
+
+        layer = {
+            "norm": {"scale": P(None)},
+            "in_proj": {"w": P(fsdp, tp)},
+            "conv_w": P(None, tp),
+            "conv_b": P(tp),
+            "A_log": P(None),
+            "D": P(None),
+            "dt_bias": P(None),
+            "gated_norm": {"scale": P(tp)},
+            "out_proj": {"w": P(tp, fsdp)},
+        }
+        return {
+            "embed": P(tp, fsdp),
+            "layers": stack(layer),
+            "final_norm": {"scale": P(None)},
+            "lm_head": P(fsdp, tp),
+        }
+
+    def cache_pspecs(self, *, batch_axes, seq_axis=None, head_axis=None) -> Params:
+        # SSM state: shard heads over TP (80 % 16 == 0), batch over DP.
+        del seq_axis, head_axis  # no sequence axis in an SSM cache
+        return {
+            "conv": P(None, batch_axes, None, None),
+            "ssm": P(None, batch_axes, "model", None, None),
+        }

@@ -1,0 +1,172 @@
+"""Mixture-of-Experts layer: top-k router with capacity-based dispatch.
+
+Dispatch is GShard/Switch-style: each token picks its top-k experts; tokens
+beyond an expert's capacity ``C = ceil(T / E * k * capacity_factor)`` are
+dropped (their residual passes through). Dense one-hot dispatch would charge
+all-experts FLOPs to every token and poison the roofline's compute term, so
+the implementation gathers tokens into per-expert buffers ``[E, C, D]``: the
+compiled FLOPs are the *active* FLOPs (6 N_active D), matching the MoE
+roofline convention.
+
+Sharding: with ``expert_sharding='ep'`` the leading E axis lives on the
+``model`` mesh axis (expert parallelism; dispatch/combine lower to
+all-to-alls). With ``'tp'`` every device holds all experts but shards d_ff
+(tensor parallelism inside experts) -- the right choice when E is smaller
+than the mesh axis (e.g. grok-1's 8 experts on a 16-way axis).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+__all__ = ["MoEConfig", "moe_init", "moe_apply", "moe_pspecs"]
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int                    # per-expert hidden width
+    capacity_factor: float = 1.25
+    shared_expert: bool = False  # llama4-style always-on expert
+    interleave: int = 1          # every `interleave`-th layer is MoE
+    expert_sharding: str = "ep"  # 'ep' | 'tp'
+
+
+def moe_init(
+    key: jax.Array, d_model: int, cfg: MoEConfig, dtype=jnp.float32
+) -> Params:
+    k_r, k_g, k_u, k_d, k_s = jax.random.split(key, 5)
+    e, ff = cfg.n_experts, cfg.d_ff
+    scale = 1.0 / jnp.sqrt(d_model)
+    p: Params = {
+        "router": layers.dense_init(k_r, d_model, e, dtype=jnp.float32),
+        "gate_w": (jax.random.normal(k_g, (e, d_model, ff)) * scale).astype(dtype),
+        "up_w": (jax.random.normal(k_u, (e, d_model, ff)) * scale).astype(dtype),
+        "down_w": (jax.random.normal(k_d, (e, ff, d_model)) / jnp.sqrt(ff)).astype(dtype),
+    }
+    if cfg.shared_expert:
+        p["shared"] = layers.swiglu_init(k_s, d_model, ff, dtype=dtype)
+    return p
+
+
+def moe_apply(
+    p: Params, x: jax.Array, cfg: MoEConfig,
+    act_axes: tuple[str, ...] | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (output [B, S, D], load-balance aux loss scalar).
+
+    Dispatch is *per sequence* (GShard group = batch element): the expert
+    buffers are [B, E, cap_s, D] with ``cap_s = ceil(S * k * cf / E)``, so
+    they inherit the batch's data-parallel sharding. A single global buffer
+    would be unsharded along its capacity axis and replicate gigabytes per
+    device at production batch sizes.
+
+    ``act_axes`` pins the buffer layouts explicitly: without the pin, the
+    contraction over the FSDP-sharded d_model axis makes XLA *un-shard the
+    batch* of the expert-hidden tensors (tens of GiB per device for grok at
+    32k prefill); with it, XLA gathers the (much smaller) per-layer expert
+    weights instead -- standard ZeRO-3 behaviour.
+    """
+    from jax.sharding import PartitionSpec as P
+    bsz, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = int(max(1, -(-s * k * cfg.capacity_factor // e)))  # ceil, per seq
+
+    gates = jax.nn.softmax(
+        layers.dense(p["router"], x.astype(jnp.float32)), axis=-1
+    )  # [B, S, E] f32
+    gate_vals, expert_idx = jax.lax.top_k(gates, k)  # [B, S, k]
+    # Renormalise the selected gates (standard for top-k > 1).
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance loss: E * sum_e f_e * P_e (over all tokens).
+    me = gates.mean(axis=(0, 1))                               # [E]
+    onehot_top1 = jax.nn.one_hot(expert_idx[..., 0], e, dtype=jnp.float32)
+    ce = onehot_top1.mean(axis=(0, 1))
+    aux = e * jnp.sum(me * ce)
+
+    # ---- capacity dispatch (token-major, slot-minor priority, per seq) ----
+    flat_e = expert_idx.reshape(bsz, s * k)                    # [B, S*k]
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)        # [B, S*k, E]
+    pos_in_e = jnp.cumsum(onehot, axis=1) - onehot             # entries before
+    pos = (pos_in_e * onehot).sum(-1)                          # [B, S*k]
+    keep = pos < cap
+    slot = jnp.where(keep, pos, cap)                           # overflow slot
+
+    tok_id = jnp.repeat(jnp.arange(s), k)[None, :]             # [1, S*k]
+    updates = jnp.take_along_axis(
+        x, jnp.broadcast_to(tok_id, (bsz, s * k))[..., None], axis=1
+    )  # [B, S*k, D]
+    # Scatter tokens into [B, E, cap+1, D]; the +1 slot absorbs drops.
+    # vmap over B declares the batch as a scatter *batching* dim -- without
+    # it, SPMD cannot partition the scatter and all-gathers the whole batch.
+    xe = jax.vmap(lambda e_i, s_i, u: jnp.zeros(
+        (e, cap + 1, d), x.dtype).at[e_i, s_i].set(u))(flat_e, slot, updates)
+    xe = xe[:, :, :cap]                                        # [B, E, cap, D]
+
+    e_ax = "model" if cfg.expert_sharding == "ep" else None
+    f_ax = None if cfg.expert_sharding == "ep" else "model"
+
+    def pin(t, spec):
+        if act_axes is None:
+            return t
+        return jax.lax.with_sharding_constraint(t, P(*spec))
+
+    xe = pin(xe, (act_axes, e_ax, None, None))
+
+    # ---- expert FFN (gated) ------------------------------------------------
+    gw = p["gate_w"].astype(x.dtype)
+    uw = p["up_w"].astype(x.dtype)
+    dw = p["down_w"].astype(x.dtype)
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, gw))
+    h = pin(h, (act_axes, e_ax, None, f_ax))
+    h = h * jnp.einsum("becd,edf->becf", xe, uw)
+    ye = jnp.einsum("becf,efd->becd", h, dw)                   # [B, E, cap, D]
+    ye = pin(ye, (act_axes, e_ax, None, None))
+
+    # ---- combine (vmap'd gather, same batching-dim argument) --------------
+    ye_pad = jnp.concatenate(
+        [ye, jnp.zeros((bsz, e, 1, d), ye.dtype)], axis=2)
+    gathered = jax.vmap(lambda buf, e_i, s_i: buf[e_i, s_i])(
+        ye_pad, flat_e, slot)                                  # [B, S*k, D]
+    weights = (gate_vals.reshape(bsz, s * k) * keep).astype(x.dtype)
+    combined = (gathered * weights[..., None]).reshape(bsz, s, k, d).sum(axis=2)
+
+    if cfg.shared_expert:
+        combined = combined + layers.swiglu(p["shared"], x)
+
+    return combined, aux.astype(jnp.float32)
+
+
+def moe_pspecs(cfg: MoEConfig, fsdp: str | None, tp: str) -> Params:
+    """PartitionSpecs mirroring :func:`moe_init` (no leading stack axis)."""
+    from jax.sharding import PartitionSpec as P
+
+    if cfg.expert_sharding == "ep":
+        expert_in = P(tp, fsdp, None)     # [E, D, ff]: experts over model axis
+        expert_out = P(tp, None, fsdp)    # [E, ff, D]
+    else:  # 'tp': shard d_ff inside every expert
+        expert_in = P(None, fsdp, tp)
+        expert_out = P(None, tp, fsdp)
+    p = {
+        "router": {"w": P(fsdp, None)},
+        "gate_w": expert_in,
+        "up_w": expert_in,
+        "down_w": expert_out,
+    }
+    if cfg.shared_expert:
+        p["shared"] = {
+            "gate": {"w": P(fsdp, tp)},
+            "up": {"w": P(fsdp, tp)},
+            "down": {"w": P(tp, fsdp)},
+        }
+    return p

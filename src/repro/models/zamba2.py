@@ -1,0 +1,323 @@
+"""Zamba2: Mamba2 backbone + one *shared* attention block (hybrid).
+
+Zamba2 interleaves a single shared transformer block into a Mamba2 stack: the
+same attention+MLP parameters are re-applied every ``period`` mamba layers,
+with the block input being concat(current hidden, original embedding)
+projected back to d_model. We implement exactly that structure (the published
+per-invocation LoRA deltas are omitted; noted in DESIGN.md).
+
+Layout: ``n_apps`` groups of (shared block -> ``period`` mamba layers), plus
+``n_tail`` trailing mamba layers: n_layers = n_apps * period + n_tail.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers
+from repro.models.mamba2 import Mamba2, Mamba2Config
+
+__all__ = ["Zamba2Config", "Zamba2"]
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class Zamba2Config:
+    name: str
+    n_layers: int           # mamba2 layers
+    d_model: int
+    vocab: int
+    n_heads: int = 32
+    n_kv: int = 32
+    d_head: int = 64
+    d_ff: int = 8192
+    period: int = 6         # shared block applied every `period` mamba layers
+    d_state: int = 64
+    headdim: int = 64
+    chunk: int = 128
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    remat: str = "none"
+    act_batch_axes: tuple[str, ...] | None = None
+    attn_sharding: str | None = None
+
+    @property
+    def n_apps(self) -> int:
+        return self.n_layers // self.period
+
+    @property
+    def n_tail(self) -> int:
+        return self.n_layers - self.n_apps * self.period
+
+    def mamba_cfg(self) -> Mamba2Config:
+        return Mamba2Config(
+            name=f"{self.name}-mamba",
+            n_layers=self.n_layers,
+            d_model=self.d_model,
+            vocab=self.vocab,
+            d_state=self.d_state,
+            headdim=self.headdim,
+            chunk=self.chunk,
+            param_dtype=self.param_dtype,
+            compute_dtype=self.compute_dtype,
+            act_batch_axes=self.act_batch_axes,
+        )
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def param_count(self) -> int:
+        base = self.mamba_cfg().param_count()
+        d = self.d_model
+        shared = (
+            2 * d * d  # in_proj [2d, d]
+            + d * self.n_heads * self.d_head * 2
+            + d * self.n_kv * self.d_head * 2
+            + 3 * d * self.d_ff
+            + 4 * d
+        )
+        return base + shared
+
+    def active_param_count(self) -> int:
+        return self.param_count()
+
+
+class Zamba2:
+    def __init__(self, cfg: Zamba2Config):
+        self.cfg = cfg
+        self.mamba = Mamba2(cfg.mamba_cfg())
+
+    # ------------------------------------------------------------------ init
+
+    def init_params(self, key: jax.Array) -> Params:
+        cfg = self.cfg
+        pd = cfg.pdtype
+        k_m, k_s1, k_s2, k_s3 = jax.random.split(key, 4)
+        base = self.mamba.init_params(k_m)
+        # Split the stacked mamba layers into the grouped head + the tail.
+        n_grp = cfg.n_apps * cfg.period
+        grouped = jax.tree.map(lambda x: x[:n_grp], base["layers"])
+        tail = jax.tree.map(lambda x: x[n_grp:], base["layers"])
+
+        shared = {
+            "in_proj": layers.dense_init(k_s1, 2 * cfg.d_model, cfg.d_model, dtype=pd),
+            "ln1": layers.rms_norm_init(cfg.d_model, pd),
+            "attn": layers.attention_init(
+                k_s2, cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.d_head, dtype=pd
+            ),
+            "ln2": layers.rms_norm_init(cfg.d_model, pd),
+            "ffn": layers.swiglu_init(k_s3, cfg.d_model, cfg.d_ff, pd),
+        }
+        return {
+            "embed": base["embed"],
+            "shared": shared,
+            "groups": grouped,      # leaves: [n_apps, period, ...]
+            "tail": tail,           # leaves: [n_tail, ...]
+            "final_norm": base["final_norm"],
+            "lm_head": base["lm_head"],
+        }
+
+    # --------------------------------------------------------------- forward
+
+    def _shared_block(self, p: Params, h, x0, positions, kv_cache=None,
+                      cache_index=None):
+        cfg = self.cfg
+        z = layers.dense(p["in_proj"], jnp.concatenate([h, x0], axis=-1))
+        attn_pspecs = None
+        if cfg.act_batch_axes is not None and cfg.attn_sharding is not None:
+            spec = P(cfg.act_batch_axes, None, "model", None)
+            attn_pspecs = (spec, spec)
+        attn_out, new_kv = layers.gqa_attention(
+            p["attn"], layers.rms_norm(p["ln1"], z), positions,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv, d_head=cfg.d_head,
+            kv_cache=kv_cache, cache_index=cache_index,
+            attn_pspecs=attn_pspecs,
+        )
+        z = z + attn_out
+        z = z + layers.swiglu(p["ffn"], layers.rms_norm(p["ln2"], z))
+        return h + z, new_kv
+
+    def hidden(self, params: Params, tokens: jax.Array,
+               *, embeds_override=None, positions=None):
+        cfg = self.cfg
+        b, s = tokens.shape
+        h = params["embed"][tokens].astype(cfg.cdtype)
+        if embeds_override is not None:
+            h = embeds_override.astype(cfg.cdtype)
+        x0 = h
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+        mamba = self.mamba
+
+        def mamba_body(h, p_layer):
+            out, _ = mamba._mixer(p_layer, layers.rms_norm(p_layer["norm"], h))
+            return h + out, None
+
+        if cfg.remat in ("full", "dots"):
+            mamba_body = jax.checkpoint(mamba_body)
+
+        # groups leaves are [n_apps * period, ...]; rechunk to scan over apps
+        grp = jax.tree.map(
+            lambda x: x.reshape((cfg.n_apps, cfg.period) + x.shape[1:]),
+            params["groups"],
+        )
+
+        def app_body(h, p_app):
+            h, _ = self._shared_block(params["shared"], h, x0, positions)
+            h, _ = jax.lax.scan(mamba_body, h, p_app)
+            return h, None
+
+        h, _ = jax.lax.scan(app_body, h, grp)
+        if cfg.n_tail:
+            h, _ = jax.lax.scan(mamba_body, h, params["tail"])
+
+        return layers.rms_norm(params["final_norm"], h), jnp.float32(0.0)
+
+    def unembed(self, params: Params, h: jax.Array) -> jax.Array:
+        logits = h @ params["lm_head"].astype(h.dtype)
+        if self.cfg.act_batch_axes is not None:
+            logits = jax.lax.with_sharding_constraint(
+                logits, P(self.cfg.act_batch_axes, None, "model"))
+        return logits
+
+    def forward(self, params: Params, tokens: jax.Array,
+                *, embeds_override=None, positions=None):
+        h, aux = self.hidden(params, tokens, embeds_override=embeds_override,
+                             positions=positions)
+        return self.unembed(params, h), aux
+
+    # -------------------------------------------------------------- serving
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16) -> Params:
+        cfg = self.cfg
+        mc = cfg.mamba_cfg()
+        kv = (cfg.n_apps, batch, max_len, cfg.n_kv, cfg.d_head)
+        return {
+            "x0": jnp.zeros((batch, 1, cfg.d_model), dtype),  # unused slot kept
+            "attn_k": jnp.zeros(kv, dtype),
+            "attn_v": jnp.zeros(kv, dtype),
+            "conv": jnp.zeros(
+                (cfg.n_layers, batch, mc.d_conv - 1, mc.conv_dim), dtype
+            ),
+            "ssm": jnp.zeros(
+                (cfg.n_layers, batch, mc.n_heads, mc.headdim, mc.d_state),
+                jnp.float32,
+            ),
+        }
+
+    def forward_with_cache(self, params, tokens, cache, cache_index,
+                           *, last_only: bool = False):
+        cfg = self.cfg
+        b, s = tokens.shape
+        h = params["embed"][tokens].astype(cfg.cdtype)
+        x0 = h
+        positions = cache_index + jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32), (b, s)
+        )
+        mamba = self.mamba
+
+        def mamba_body(h, xs):
+            p_layer, state = xs
+            out, new_state = mamba._mixer(
+                p_layer, layers.rms_norm(p_layer["norm"], h), state
+            )
+            return h + out, new_state
+
+        n_grp = cfg.n_apps * cfg.period
+        grp = jax.tree.map(
+            lambda x: x.reshape((cfg.n_apps, cfg.period) + x.shape[1:]),
+            params["groups"],
+        )
+        grp_state = {
+            "conv": cache["conv"][:n_grp].reshape(
+                (cfg.n_apps, cfg.period) + cache["conv"].shape[1:]),
+            "ssm": cache["ssm"][:n_grp].reshape(
+                (cfg.n_apps, cfg.period) + cache["ssm"].shape[1:]),
+        }
+
+        def app_body(h, xs):
+            p_app, st_app, kv_k, kv_v = xs
+            h, new_kv = self._shared_block(
+                params["shared"], h, x0, positions,
+                kv_cache=(kv_k, kv_v), cache_index=cache_index,
+            )
+            h, new_st = jax.lax.scan(
+                mamba_body, h,
+                (p_app, {"conv": st_app["conv"], "ssm": st_app["ssm"]}),
+            )
+            return h, (new_st, new_kv[0], new_kv[1])
+
+        h, (new_grp_state, new_k, new_v) = jax.lax.scan(
+            app_body, h, (grp, grp_state, cache["attn_k"], cache["attn_v"])
+        )
+        new_conv = new_grp_state["conv"].reshape((n_grp,) + cache["conv"].shape[1:])
+        new_ssm = new_grp_state["ssm"].reshape((n_grp,) + cache["ssm"].shape[1:])
+        if cfg.n_tail:
+            tail_state = {"conv": cache["conv"][n_grp:], "ssm": cache["ssm"][n_grp:]}
+            h, new_tail = jax.lax.scan(
+                mamba_body, h, (params["tail"], tail_state)
+            )
+            new_conv = jnp.concatenate([new_conv, new_tail["conv"]], axis=0)
+            new_ssm = jnp.concatenate([new_ssm, new_tail["ssm"]], axis=0)
+        h = layers.rms_norm(params["final_norm"], h)
+        if last_only:
+            h = h[:, -1:]
+        new_cache = {
+            "x0": cache["x0"],
+            "attn_k": new_k, "attn_v": new_v,
+            "conv": new_conv.astype(cache["conv"].dtype),
+            "ssm": new_ssm,
+        }
+        return h @ params["lm_head"].astype(h.dtype), new_cache
+
+    # ---------------------------------------------------------------- specs
+
+    def param_pspecs(self, *, fsdp: str | None = "data", tp: str = "model") -> Params:
+        mspecs = self.mamba.param_pspecs(fsdp=fsdp, tp=tp)
+        layer = mspecs["layers"]
+        shared = {
+            "in_proj": {"w": P(fsdp, tp)},
+            "ln1": {"scale": P(None)},
+            "attn": {
+                "q": {"w": P(fsdp, tp)},
+                "k": {"w": P(fsdp, tp)},
+                "v": {"w": P(fsdp, tp)},
+                "o": {"w": P(tp, fsdp)},
+            },
+            "ln2": {"scale": P(None)},
+            "ffn": {
+                "gate": {"w": P(fsdp, tp)},
+                "up": {"w": P(fsdp, tp)},
+                "down": {"w": P(tp, fsdp)},
+            },
+        }
+        return {
+            "embed": mspecs["embed"],
+            "shared": shared,
+            "groups": layer,
+            "tail": layer,
+            "final_norm": {"scale": P(None)},
+            "lm_head": mspecs["lm_head"],
+        }
+
+    def cache_pspecs(self, *, batch_axes, seq_axis=None, head_axis=None) -> Params:
+        return {
+            "x0": P(batch_axes, None, None),
+            "attn_k": P(None, batch_axes, seq_axis, head_axis, None),
+            "attn_v": P(None, batch_axes, seq_axis, head_axis, None),
+            "conv": P(None, batch_axes, None, None),
+            "ssm": P(None, batch_axes, "model", None, None),
+        }

@@ -1,0 +1,64 @@
+"""Gradient/delta compression for the slow (cross-pod) tier.
+
+Mirrors the paper's local/global asymmetry: the fast tier (intra-pod) stays
+exact; only the rare cross-pod exchange is compressed. Error feedback keeps
+the compression unbiased over time (the residual is re-injected next sync).
+
+* int8: per-tensor absmax scaling, 4x wire reduction vs f32 (2x vs bf16).
+* top-k: magnitude sparsification to a fraction of entries.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "int8_encode",
+    "int8_decode",
+    "topk_mask",
+    "ef_compress",
+]
+
+
+def int8_encode(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32))) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decode(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def topk_mask(x: jax.Array, frac: float) -> jax.Array:
+    """Boolean mask keeping the top ``frac`` entries by magnitude."""
+    flat = jnp.abs(x.reshape(-1).astype(jnp.float32))
+    k = max(1, int(frac * flat.size))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(x.astype(jnp.float32)) >= thresh).reshape(x.shape)
+
+
+def ef_compress(
+    x: jax.Array, ef: jax.Array, method: str, topk_frac: float = 0.01
+) -> tuple[jax.Array, jax.Array, jax.Array | None]:
+    """Error-feedback compression of one tensor.
+
+    Returns (decoded payload as seen by receivers, new error residual,
+    wire tensor for byte accounting or None for 'none').
+    """
+    if method == "none":
+        return x, jnp.zeros_like(ef), None
+    y = x.astype(jnp.float32) + ef.astype(jnp.float32)
+    if method == "int8":
+        q, scale = int8_encode(y)
+        dec = int8_decode(q, scale)
+        return dec.astype(x.dtype), (y - dec).astype(ef.dtype), q
+    if method == "topk":
+        mask = topk_mask(y, topk_frac)
+        dec = jnp.where(mask, y, 0.0)
+        return dec.astype(x.dtype), (y - dec).astype(ef.dtype), dec
+    raise ValueError(f"unknown compression method {method!r}")

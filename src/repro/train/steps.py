@@ -1,0 +1,339 @@
+"""Train/serve step builders: the glue between bundles, optimizer and mesh.
+
+``make_train_artifacts`` produces everything the launcher and the dry-run
+need: the step callable(s), parameter/optimizer/batch sharding trees, and
+state ShapeDtypeStructs (no allocation). Two training modes:
+
+* ``sync`` (baseline): one parameter replica; gradients all-reduce over every
+  DP axis each step (including cross-pod -- the conventional scheme).
+* ``hierarchical`` (the paper's technique): per-pod replicas, vmapped local
+  steps with zero pod-axis collectives + a separate D-step sync_step. The
+  dry-run lowers both and diffs their collective bytes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.common import Bundle, ShapeSpec
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.hierarchical import Hierarchical, HierarchicalConfig
+
+__all__ = ["TrainArtifacts", "make_train_artifacts", "ServeArtifacts",
+           "make_serve_artifacts"]
+
+
+def _sharded_sds(tree_sds: Any, tree_specs: Any, mesh: Mesh | None) -> Any:
+    """Attach NamedShardings to ShapeDtypeStructs (dry-run inputs)."""
+    if mesh is None:
+        return tree_sds
+    return jax.tree.map(
+        lambda sds, spec: jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(mesh, spec)
+        ),
+        tree_sds, tree_specs,
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)),
+    )
+
+
+@dataclasses.dataclass
+class TrainArtifacts:
+    step_fn: Callable           # (params, opt_state, batch) -> (p', s', metrics)
+    sync_fn: Callable | None    # hierarchical only: (params, sync_state) -> ...
+    params_sds: Any             # ShapeDtypeStructs (sharded when mesh given)
+    opt_sds: Any
+    batch_specs: Any            # PartitionSpec tree for batches
+    params_specs: Any
+    opt_specs: Any
+    sync_sds: Any = None
+    sync_specs: Any = None
+    hier: Hierarchical | None = None
+
+    def batch_sds(self, bundle: Bundle, shape: ShapeSpec, mesh: Mesh | None):
+        specs = bundle.input_specs(shape)
+        if self.hier is not None:
+            n_pods = self.hier.n_pods
+            specs = {
+                k: jax.ShapeDtypeStruct(
+                    (n_pods, v.shape[0] // n_pods) + v.shape[1:], v.dtype
+                )
+                for k, v in specs.items()
+            }
+        return _sharded_sds(specs, self.batch_specs, mesh)
+
+
+def make_train_artifacts(
+    bundle: Bundle,
+    opt_cfg: AdamWConfig | None = None,
+    mesh: Mesh | None = None,
+    *,
+    batch_axes: tuple[str, ...] = ("data",),
+    fsdp_axis: str | None = "data",
+    tp_axis: str = "model",
+    hier_cfg: HierarchicalConfig | None = None,
+    donate: bool = True,
+    n_micro: int = 1,
+) -> TrainArtifacts:
+    """``n_micro`` > 1 enables gradient accumulation over microbatches: the
+    step reshapes the (per-pod) batch to [n_micro, B/n_micro, ...] and scans,
+    accumulating f32 gradients -- the standard memory lever that keeps
+    activations (and chunked-CE logits) bounded at large global batch."""
+    opt_cfg = opt_cfg or AdamWConfig(moment_dtype=bundle.moment_dtype)
+    model = bundle.model
+    p_specs = model.param_pspecs(fsdp=fsdp_axis, tp=tp_axis)
+
+    def grads_of(params, batch):
+        if n_micro == 1:
+            return jax.value_and_grad(bundle.loss)(params, batch)
+        micro = jax.tree.map(
+            lambda x: x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:]),
+            batch,
+        )
+
+        def acc(carry, mb):
+            loss_sum, g_sum = carry
+            loss, g = jax.value_and_grad(bundle.loss)(params, mb)
+            g_sum = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), g_sum, g)
+            return (loss_sum + loss, g_sum), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        if mesh is not None and hier_cfg is None:
+            # ZeRO-2-style: keep the f32 accumulation buffer sharded exactly
+            # like the parameters -- the 400B-class models' f32 grads would
+            # otherwise add 4 bytes/param of *replicated* per-device state.
+            zeros = jax.tree.map(
+                lambda z, spec: jax.lax.with_sharding_constraint(
+                    z, NamedSharding(mesh, spec)),
+                zeros, p_specs,
+                is_leaf=lambda x: isinstance(x, (jax.Array, P)),
+            )
+        (loss_sum, g_sum), _ = jax.lax.scan(
+            acc, (jnp.float32(0.0), zeros), micro)
+        inv = 1.0 / n_micro
+        return loss_sum * inv, jax.tree.map(lambda g: g * inv, g_sum)
+
+    def base_step(params, opt_state, batch):
+        loss, grads = grads_of(params, batch)
+        params, opt_state, metrics = adamw_update(grads, opt_state, params, opt_cfg)
+        return params, opt_state, {"loss": loss, **metrics}
+
+    params_sds = jax.eval_shape(
+        lambda: model.init_params(jax.random.PRNGKey(0))
+    )
+    opt_sds = jax.eval_shape(lambda: adamw_init(params_sds, opt_cfg))
+    o_specs = {
+        "m": p_specs, "v": p_specs, "count": P(),
+    }
+
+    if hier_cfg is None:
+        # Fully synchronous baseline: batch over all DP axes (incl. pod).
+        b_specs = {
+            k: P(batch_axes, *([None] * (len(v.shape) - 1)))
+            for k, v in bundle.input_specs(
+                ShapeSpec("probe", "train", 8, 8)
+            ).items()
+        }
+        step = jax.jit(
+            base_step,
+            donate_argnums=(0, 1) if donate else (),
+        )
+        return TrainArtifacts(
+            step_fn=step, sync_fn=None,
+            params_sds=_sharded_sds(params_sds, p_specs, mesh),
+            opt_sds=_sharded_sds(opt_sds, o_specs, mesh),
+            batch_specs=b_specs, params_specs=p_specs, opt_specs=o_specs,
+        )
+
+    # ----- hierarchical (paper technique): per-pod replicas ------------------
+    n_pods = mesh.shape[hier_cfg.pod_axis] if mesh is not None else 2
+    hier = Hierarchical(hier_cfg, n_pods, mesh, param_specs=p_specs)
+
+    pp_specs = hier.pspecs(p_specs)
+    po_specs = {"m": pp_specs, "v": pp_specs,
+                "count": P(hier_cfg.pod_axis)}
+    pb_specs = {
+        k: P(hier_cfg.pod_axis, batch_axes, *([None] * (len(v.shape) - 1)))
+        for k, v in bundle.input_specs(ShapeSpec("probe", "train", 8, 8)).items()
+    }
+    pparams_sds = jax.eval_shape(hier.replicate, params_sds)
+    popt_sds = jax.eval_shape(hier.replicate, opt_sds)
+    # per-pod count is a vector [n_pods]; replicate() handles it uniformly.
+
+    local_step = jax.jit(
+        hier.local_step(base_step), donate_argnums=(0, 1) if donate else ()
+    )
+    sync_sds = jax.eval_shape(hier.init_sync_state, params_sds)
+    sync_specs = {"anchor": p_specs}
+    if hier_cfg.compression != "none":
+        sync_specs["ef"] = hier.pspecs(p_specs)
+    sync_fn = jax.jit(hier.sync_step, donate_argnums=(0,) if donate else ())
+
+    return TrainArtifacts(
+        step_fn=local_step, sync_fn=sync_fn,
+        params_sds=_sharded_sds(pparams_sds, pp_specs, mesh),
+        opt_sds=_sharded_sds(popt_sds, po_specs, mesh),
+        batch_specs=pb_specs, params_specs=pp_specs, opt_specs=po_specs,
+        sync_sds=_sharded_sds(sync_sds, sync_specs, mesh),
+        sync_specs=sync_specs,
+        hier=hier,
+    )
+
+
+# ---------------------------------------------------------------------------
+# serving
+
+
+@dataclasses.dataclass
+class ServeArtifacts:
+    prefill_fn: Callable        # (params, batch) -> (logits, serve_state)
+    decode_fn: Callable         # (params, serve_state, tokens, idx) -> (logits, state)
+    params_sds: Any
+    params_specs: Any
+    state_sds: Any              # serve_state ShapeDtypeStructs
+    state_specs: Any
+    batch_axes: tuple[str, ...] | None
+    token_spec: P
+
+
+def make_serve_artifacts(
+    bundle: Bundle,
+    shape: ShapeSpec,
+    mesh: Mesh | None = None,
+    *,
+    fsdp_axis: str | None = "data",
+    tp_axis: str = "model",
+    cache_dtype=jnp.bfloat16,
+) -> ServeArtifacts:
+    """Build prefill/decode callables + sharding/shape metadata for a cell.
+
+    Cache layout policy: decode shards the batch over the DP axes; the
+    ``long_500k`` cell (batch=1) shards the cache *sequence* over the TP axis
+    instead (documented in DESIGN.md §4).
+    """
+    model = bundle.model
+    b, s = shape.global_batch, shape.seq_len
+    long_context = shape.name == "long_500k"
+
+    # KV heads of the arch (None for attention-free archs).
+    cfg = bundle.cfg
+    n_kv = getattr(cfg, "n_kv", None)
+    if n_kv is None and hasattr(cfg, "backbone"):
+        n_kv = cfg.backbone.n_kv
+    if n_kv is None and hasattr(cfg, "n_heads") and bundle.family == "audio":
+        n_kv = cfg.n_heads
+    tp_size = mesh.shape[tp_axis] if mesh is not None else 1
+
+    batch_axes: tuple[str, ...] | None
+    head_axis: str | None = None
+    if long_context:
+        # batch=1: the attention caches shard their *sequence* over TP.
+        batch_axes, seq_axis = None, tp_axis
+    else:
+        batch_axes = (("pod", "data") if mesh is not None
+                      and "pod" in mesh.axis_names else ("data",))
+        if mesh is None:
+            batch_axes = None
+        # Cache second-tier sharding: KV heads over TP when they divide the
+        # axis (gemma3/whisper/zamba2), else the sequence (kv<16 archs) --
+        # decode_32k per-device cache stays inside the HBM budget either way.
+        if n_kv is not None and tp_size > 1:
+            if n_kv % tp_size == 0:
+                head_axis, seq_axis = tp_axis, None
+            else:
+                head_axis, seq_axis = None, tp_axis
+        else:
+            seq_axis = None
+
+    is_audio = bundle.family == "audio"
+    is_vlm = bundle.family == "vlm"
+
+    cache_specs = model.cache_pspecs(
+        batch_axes=batch_axes, seq_axis=seq_axis, head_axis=head_axis
+    )
+    state_specs: dict = {"cache": cache_specs}
+    if is_audio:
+        state_specs["enc_out"] = P(batch_axes, None, None)
+
+    def _constrain_state(state):
+        if mesh is None:
+            return state
+        return jax.tree.map(
+            lambda x, spec: jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, spec)),
+            state, state_specs,
+            is_leaf=lambda x: isinstance(x, (jax.Array, P)),
+        )
+
+    def prefill(params, batch):
+        cache = model.init_cache(b, s, cache_dtype)
+        if mesh is not None:
+            cache = jax.tree.map(
+                lambda x, spec: jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, spec)),
+                cache, cache_specs,
+                is_leaf=lambda x: isinstance(x, (jax.Array, P)),
+            )
+        if is_audio:
+            enc_out = model.encode(params, batch["frames"])
+            logits, cache = model.forward_with_cache(
+                params, batch["tokens"], cache, jnp.int32(0), enc_out=enc_out,
+                last_only=True,
+            )
+            return logits, {"cache": cache, "enc_out": enc_out}
+        if is_vlm:
+            logits, cache = model.forward_with_cache(
+                params, batch["tokens"], cache, jnp.int32(0),
+                patch_embeds=batch["patch_embeds"], last_only=True,
+            )
+            return logits, {"cache": cache}
+        logits, cache = model.forward_with_cache(
+            params, batch["tokens"], cache, jnp.int32(0), last_only=True
+        )
+        return logits, {"cache": cache}
+
+    def decode(params, serve_state, tokens, cache_index):
+        kwargs = {"enc_out": serve_state["enc_out"]} if is_audio else {}
+        logits, cache = model.forward_with_cache(
+            params, tokens, serve_state["cache"], cache_index, **kwargs
+        )
+        return logits, {**serve_state, "cache": cache}
+
+    params_sds = jax.eval_shape(lambda: model.init_params(jax.random.PRNGKey(0)))
+    p_specs = model.param_pspecs(fsdp=fsdp_axis, tp=tp_axis)
+
+    cache_sds = jax.eval_shape(lambda: model.init_cache(b, s, cache_dtype))
+    state_sds: dict[str, Any] = {"cache": cache_sds}
+    if is_audio:
+        state_sds["enc_out"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_frames, cfg.d_model), jnp.dtype(cfg.compute_dtype)
+        )
+
+    if mesh is not None:
+        state_out = jax.tree.map(
+            lambda spec: NamedSharding(mesh, spec), state_specs,
+            is_leaf=lambda x: isinstance(x, P))
+        logits_out = NamedSharding(mesh, P(batch_axes, None, None))
+        prefill_jit = jax.jit(prefill, out_shardings=(logits_out, state_out))
+        decode_jit = jax.jit(decode, donate_argnums=(1,),
+                             out_shardings=(logits_out, state_out))
+    else:
+        prefill_jit = jax.jit(prefill)
+        decode_jit = jax.jit(decode, donate_argnums=(1,))
+    return ServeArtifacts(
+        prefill_fn=prefill_jit,
+        decode_fn=decode_jit,
+        params_sds=_sharded_sds(params_sds, p_specs, mesh),
+        params_specs=p_specs,
+        state_sds=_sharded_sds(state_sds, state_specs, mesh),
+        state_specs=state_specs,
+        batch_axes=batch_axes,
+        token_spec=P(batch_axes, None),
+    )

@@ -1,0 +1,160 @@
+"""Pallas kernel validation: shape/dtype sweeps against the pure-jnp oracles.
+
+Kernels run in interpret=True on CPU (the TPU lowering is the target; the
+semantics are validated here). Float comparisons are against *jitted* oracles
+-- jit and eager differ by FMA contraction (1 ulp), the kernels match jit
+bitwise.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+LIF_KW = dict(p11=0.8187308, p21=3.617e-4, p22=0.9900498,
+              v_th=15.0, v_reset=0.0, t_ref_steps=20)
+
+
+@pytest.mark.parametrize("n", [64, 129, 1000, 4096, 8192])
+def test_lif_update_matches_oracle(n):
+    rng = np.random.default_rng(n)
+    v = jnp.asarray(rng.normal(5, 4, n), jnp.float32)
+    i_syn = jnp.asarray(rng.normal(150, 80, n), jnp.float32)
+    refrac = jnp.asarray(rng.integers(0, 5, n), jnp.int32)
+    i_in = jnp.asarray(rng.normal(40, 30, n), jnp.float32)
+    alive = jnp.asarray(rng.random(n) < 0.9)
+    out_k = ops.lif_update(v, i_syn, refrac, i_in, alive, **LIF_KW)
+    oracle = jax.jit(functools.partial(ref.lif_update_ref, **LIF_KW))
+    out_r = oracle(v, i_syn, refrac, i_in, alive)
+    for name, a, b in zip(("v", "i_syn", "refrac", "spk"), out_k, out_r):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), name
+
+
+def test_lif_update_2d_state():
+    """The ops wrapper flattens arbitrary shapes (engines use [A, n_pad])."""
+    rng = np.random.default_rng(0)
+    shape = (4, 96)
+    v = jnp.asarray(rng.normal(5, 4, shape), jnp.float32)
+    i_syn = jnp.zeros(shape, jnp.float32)
+    refrac = jnp.zeros(shape, jnp.int32)
+    i_in = jnp.asarray(rng.normal(0, 10, shape), jnp.float32)
+    alive = jnp.ones(shape, bool)
+    out = ops.lif_update(v, i_syn, refrac, i_in, alive, **LIF_KW)
+    assert out[0].shape == shape
+    assert out[3].dtype == jnp.bool_
+
+
+def test_lif_refractory_semantics():
+    """A spiking neuron resets and stays clamped for t_ref steps."""
+    kw = dict(LIF_KW, t_ref_steps=3)
+    v = jnp.asarray([20.0] * 128, jnp.float32)  # above threshold after prop
+    i_syn = jnp.zeros(128, jnp.float32)
+    refrac = jnp.zeros(128, jnp.int32)
+    alive = jnp.ones(128, bool)
+    v, i_syn, refrac, spk = ops.lif_update(v, i_syn, refrac,
+                                           jnp.zeros(128), alive, **kw)
+    assert bool(spk.all()) and float(v.max()) == 0.0 and int(refrac[0]) == 3
+    for step in range(3):
+        v, i_syn, refrac, spk = ops.lif_update(
+            v, i_syn, refrac, jnp.full((128,), 1e6), alive, **kw)
+        assert not bool(spk.any()), f"refractory step {step} must not spike"
+    v, i_syn, refrac, spk = ops.lif_update(
+        v, i_syn, refrac, jnp.full((128,), 1e6), alive, **kw)
+    assert bool(spk.all()), "after refractory period the huge input must fire"
+
+
+@pytest.mark.parametrize("n,k,n_src,lo,span", [
+    (64, 8, 128, 1, 5),
+    (300, 16, 512, 10, 9),
+    (256, 64, 256, 1, 30),
+    (128, 3, 64, 2, 2),
+    (1024, 32, 2048, 10, 91),
+])
+def test_spike_deliver_matches_oracle(n, k, n_src, lo, span):
+    rng = np.random.default_rng(k)
+    spikes = jnp.asarray(rng.random(n_src) < 0.1, jnp.float32)
+    src = jnp.asarray(rng.integers(0, n_src, (n, k)), jnp.int32)
+    w = jnp.asarray(np.round(rng.normal(0, 64, (n, k))) / 256.0, jnp.float32)
+    d = jnp.asarray(rng.integers(lo, lo + span, (n, k)), jnp.int32)
+    out_k = ops.spike_deliver(spikes, src, w, d, steps_lo=lo, r_span=span)
+    oracle = jax.jit(functools.partial(ref.spike_deliver_ref,
+                                       steps_lo=lo, r_span=span))
+    assert np.array_equal(np.asarray(out_k), np.asarray(oracle(spikes, src, w, d)))
+
+
+def test_spike_deliver_then_apply_contrib_equals_ring_deposit():
+    """kernel contributions rolled into the ring == reference deposit."""
+    from repro.core import ring_buffer
+    rng = np.random.default_rng(3)
+    n, k, r, lo, span = 96, 8, 16, 1, 6
+    spikes = jnp.asarray(rng.random(n) < 0.3, jnp.float32)
+    src = jnp.asarray(rng.integers(0, n, (n, k)), jnp.int32)
+    w = jnp.asarray(np.round(rng.normal(0, 64, (n, k))) / 256.0, jnp.float32)
+    d = jnp.asarray(rng.integers(lo, lo + span, (n, k)), jnp.int32)
+    ring = jnp.asarray(np.round(rng.normal(0, 8, (n, r))) / 256.0, jnp.float32)
+    t = jnp.int32(11)
+    contrib = ops.spike_deliver(spikes, src, w, d, steps_lo=lo, r_span=span)
+    got = ops.apply_contrib(ring, contrib, t, lo)
+    want = ring_buffer.deposit(ring, w * spikes[src], d, t)
+    assert np.allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+def test_event_deliver_equals_dense():
+    """Event-driven (compaction+scatter) delivery == dense delivery."""
+    from repro.core import ring_buffer
+    rng = np.random.default_rng(5)
+    n_src, n_tgt, k_out, r = 200, 160, 12, 24
+    spikes = jnp.asarray(rng.random(n_src) < 0.15)
+    tgt = jnp.asarray(rng.integers(0, n_tgt, (n_src, k_out)), jnp.int32)
+    w = jnp.asarray(np.round(rng.normal(0, 64, (n_src, k_out))) / 256.0,
+                    jnp.float32)
+    d = jnp.asarray(rng.integers(1, r - 1, (n_src, k_out)), jnp.int32)
+    ring = jnp.zeros((n_tgt, r), jnp.float32)
+    got = ops.event_deliver(ring, spikes, tgt, w, d, jnp.int32(7), s_max=128)
+    # dense oracle: scatter every synapse of every fired source
+    want = np.zeros((n_tgt, r), np.float32)
+    sp = np.asarray(spikes)
+    for s in range(n_src):
+        if sp[s]:
+            for kk in range(k_out):
+                want[int(tgt[s, kk]), (7 + int(d[s, kk])) % r] += float(w[s, kk])
+    assert np.allclose(np.asarray(got), want)
+
+
+def test_event_deliver_s_max_bound():
+    """With fewer events than s_max the result is exact; the buffer bound is
+    the static analogue of NEST's spike-register resizing."""
+    n = 64
+    spikes = jnp.zeros(n, bool).at[:5].set(True)
+    tgt = jnp.zeros((n, 2), jnp.int32)
+    w = jnp.ones((n, 2), jnp.float32)
+    d = jnp.ones((n, 2), jnp.int32)
+    ring = jnp.zeros((n, 4), jnp.float32)
+    out = ops.event_deliver(ring, spikes, tgt, w, d, jnp.int32(0), s_max=8)
+    assert float(out[0, 1]) == 10.0  # 5 events x 2 synapses x w=1
+
+
+@pytest.mark.parametrize("b,s,h,hkv,dh,window,klen", [
+    (2, 64, 4, 2, 16, 0, 64),
+    (1, 128, 8, 4, 32, 17, 128),
+    (2, 64, 4, 2, 16, 0, 40),      # partially valid keys (decode-like)
+    (1, 64, 2, 2, 16, 5, 64),      # MHA + tight window
+])
+def test_flash_attention_matches_streaming_oracle(b, s, h, hkv, dh, window, klen):
+    """Fused flash kernel (VMEM-resident tiles) == jnp streaming attention."""
+    import repro.models.layers as L
+    from repro.kernels.flash_attention import flash_attention_pallas
+
+    rng = np.random.default_rng(h * s + window)
+    q = jnp.asarray(rng.normal(size=(b, s, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, hkv, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, hkv, dh)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    out_k = flash_attention_pallas(q, k, v, jnp.int32(window),
+                                   jnp.int32(klen), bq=32, bk=32)
+    out_r = L._streaming_attention(q, k, v, pos, pos, jnp.int32(klen), window)
+    assert float(jnp.abs(out_k - out_r).max()) < 2e-5

@@ -1,0 +1,210 @@
+"""Architecture smoke tests (reduced configs): forward + one train step on
+CPU, output shapes, no NaNs -- plus decode/prefill consistency per family and
+the memory-critical loss/attention identities.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.common import ShapeSpec
+from repro.configs.registry import arch_cells, get_arch, list_archs
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+
+def _smoke_batch(bundle, rng, b=2, s=16, vocab=64):
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, vocab, (b, s)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, vocab, (b, s)), jnp.int32),
+    }
+    for name, make in bundle.extra_inputs.items():
+        spec = make(b, s)
+        batch[name] = jnp.asarray(rng.normal(size=spec.shape), spec.dtype)
+    return batch
+
+
+@pytest.mark.parametrize("arch_id", list_archs())
+def test_arch_smoke_forward_and_train_step(arch_id):
+    """One forward + one AdamW train step on the reduced config."""
+    bundle = get_arch(arch_id, reduced=True)
+    rng = np.random.default_rng(0)
+    params = bundle.model.init_params(jax.random.PRNGKey(0))
+    batch = _smoke_batch(bundle, rng)
+
+    extras = {k: batch[k] for k in bundle.extra_inputs}
+    logits, aux = jax.jit(bundle.model.forward)(params, batch["tokens"], **extras)
+    assert logits.shape[:2] == batch["tokens"].shape
+    assert not bool(jnp.isnan(logits).any()), "forward produced NaNs"
+
+    opt_cfg = AdamWConfig(lr=1e-3)
+    opt = adamw_init(params, opt_cfg)
+
+    @jax.jit
+    def step(p, o, b):
+        loss, g = jax.value_and_grad(bundle.loss)(p, b)
+        p, o, m = adamw_update(g, o, p, opt_cfg)
+        return p, o, loss
+
+    p1, o1, loss1 = step(params, opt, batch)
+    p2, o2, loss2 = step(p1, o1, batch)
+    assert np.isfinite(float(loss1)) and np.isfinite(float(loss2))
+    assert float(loss2) < float(loss1) + 0.5, "loss exploding on repeat batch"
+
+
+@pytest.mark.parametrize("arch_id", list_archs())
+def test_arch_cells_defined(arch_id):
+    """Every arch maps all four assigned shapes to run-or-documented-skip."""
+    cells = arch_cells(arch_id)
+    assert len(cells) == 4
+    names = {shape.name for shape, _ in cells}
+    assert names == {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+    for shape, skip in cells:
+        if skip is not None:
+            assert len(skip) > 10, "skip reasons must be substantive"
+
+
+@pytest.mark.parametrize("arch_id", ["h2o-danube-1.8b", "qwen2-0.5b",
+                                     "mamba2-2.7b", "zamba2-1.2b",
+                                     "internvl2-76b"])
+def test_decode_matches_full_forward(arch_id):
+    """Prefill(cache) + decode step == full forward on the extended sequence."""
+    bundle = get_arch(arch_id, reduced=True)
+    model = bundle.model
+    rng = np.random.default_rng(1)
+    params = model.init_params(jax.random.PRNGKey(1))
+    batch = _smoke_batch(bundle, rng)
+    toks = batch["tokens"]
+    extras = {k: batch[k] for k in bundle.extra_inputs}
+
+    logits_full, _ = jax.jit(model.forward)(params, toks, **extras)
+    cache = model.init_cache(toks.shape[0], toks.shape[1] + 8, jnp.float32)
+    kwargs = dict(extras) if extras else {}
+    lp, cache = jax.jit(model.forward_with_cache)(
+        params, toks, cache, jnp.int32(0), **kwargs)
+    rel = float(jnp.abs(lp - logits_full).max()) / max(
+        float(jnp.abs(logits_full).max()), 1e-6)
+    assert rel < 5e-4, f"prefill mismatch {rel}"
+
+    nxt = jnp.argmax(lp[:, -1:], -1).astype(jnp.int32)
+    ld, _ = jax.jit(model.forward_with_cache)(
+        params, nxt, cache, jnp.int32(toks.shape[1]))
+    toks2 = jnp.concatenate([toks, nxt], axis=1)
+    lf2, _ = jax.jit(model.forward)(params, toks2, **extras)
+    rel = float(jnp.abs(ld[:, 0] - lf2[:, -1]).max()) / max(
+        float(jnp.abs(lf2).max()), 1e-6)
+    assert rel < 5e-4, f"decode mismatch {rel}"
+
+
+def test_whisper_decode_matches_forward():
+    bundle = get_arch("whisper-medium", reduced=True)
+    model = bundle.model
+    rng = np.random.default_rng(2)
+    params = model.init_params(jax.random.PRNGKey(2))
+    batch = _smoke_batch(bundle, rng)
+    toks, frames = batch["tokens"], batch["frames"]
+    logits_full, _ = jax.jit(model.forward)(params, toks, frames=frames)
+    enc = jax.jit(model.encode)(params, frames)
+    cache = model.init_cache(2, 24, jnp.float32)
+    lp, cache = jax.jit(model.forward_with_cache)(
+        params, toks, cache, jnp.int32(0), enc_out=enc)
+    assert float(jnp.abs(lp - logits_full).max()) < 1e-4
+
+
+def test_chunked_ce_equals_full_ce():
+    from repro.models import layers
+    rng = np.random.default_rng(3)
+    b, s, d, v = 2, 32, 16, 48
+    h = jnp.asarray(rng.normal(size=(b, s, d)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(d, v)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, v, (b, s)), jnp.int32)
+    full = layers.cross_entropy(h @ w, labels)
+    chunked = layers.chunked_cross_entropy(lambda hc: hc @ w, h, labels, chunk=8)
+    assert float(jnp.abs(full - chunked)) < 1e-5
+
+
+def test_streaming_attention_equals_dense():
+    import repro.models.layers as L
+    rng = np.random.default_rng(4)
+    b, s, h, hkv, dh = 2, 64, 8, 2, 16
+    q = jnp.asarray(rng.normal(size=(b, s, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, hkv, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, hkv, dh)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    for window in (0, 9):
+        out_s = L._streaming_attention(q, k, v, pos, pos, jnp.int32(s), window)
+        out_d = L.attention_scores(
+            q, k, v, L.causal_window_mask(pos, pos, None, window))
+        assert float(jnp.abs(out_s - out_d).max()) < 2e-5, window
+
+
+def test_moe_capacity_and_balance():
+    """Top-1 dispatch: uniform router -> all tokens land; aux loss ~1."""
+    from repro.models.moe import MoEConfig, moe_apply, moe_init
+    cfg = MoEConfig(n_experts=4, top_k=1, d_ff=32, capacity_factor=2.0)
+    p = moe_init(jax.random.PRNGKey(0), 16, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 16))
+    y, aux = moe_apply(p, x, cfg)
+    assert y.shape == x.shape
+    assert 0.5 < float(aux) < 4.5  # perfectly balanced -> 1.0
+    assert not bool(jnp.isnan(y).any())
+
+
+def test_moe_param_and_active_counts():
+    llama4 = get_arch("llama4-maverick-400b-a17b")
+    assert 3.5e11 < llama4.cfg.param_count() < 4.5e11
+    assert 1.0e10 < llama4.cfg.active_param_count() < 2.0e10
+    grok = get_arch("grok-1-314b")
+    assert 2.8e11 < grok.cfg.param_count() < 3.4e11
+    assert 7.0e10 < grok.cfg.active_param_count() < 1.0e11
+
+
+def test_gemma3_window_pattern():
+    b = get_arch("gemma3-27b")
+    w = np.asarray(b.cfg.window_array()).reshape(-1)
+    assert len(w) == 62
+    assert (w[:6] == [1024, 1024, 1024, 1024, 1024, 0]).all()
+    th = np.asarray(b.cfg.theta_array()).reshape(-1)
+    assert th[5] == 1e6 and th[0] == 10_000.0
+
+def test_mamba2_chunked_equals_sequential():
+    bundle = get_arch("mamba2-2.7b", reduced=True)
+    model = bundle.model
+    params = model.init_params(jax.random.PRNGKey(5))
+    toks = jax.random.randint(jax.random.PRNGKey(6), (2, 24), 0, 64)
+    logits, _ = jax.jit(model.forward)(params, toks)
+    cache = model.init_cache(2, 0, jnp.float32)
+    outs = []
+    c = cache
+    step = jax.jit(model.forward_with_cache)
+    for t in range(24):
+        lt, c = step(params, toks[:, t:t + 1], c, jnp.int32(t))
+        outs.append(lt[:, 0])
+    seq = jnp.stack(outs, axis=1)
+    rel = float(jnp.abs(seq - logits).max()) / float(jnp.abs(logits).max())
+    assert rel < 5e-4, f"SSD chunked vs sequential mismatch: {rel}"
+
+
+def test_pallas_attention_backend_matches_jnp():
+    """Opt-in fused Pallas attention == jnp streaming path, end-to-end
+    through the transformer forward (single device, interpret mode)."""
+    import dataclasses
+    import repro.models.layers as L
+    from repro.models.transformer import Transformer, TransformerConfig
+
+    old_thresh = L.FLASH_THRESHOLD
+    L.FLASH_THRESHOLD = 16
+    try:
+        base = TransformerConfig(
+            name="t", n_layers=2, d_model=64, n_heads=4, n_kv=2, d_head=16,
+            d_ff=128, vocab=256, window_pattern=(8, 0))
+        m_jnp = Transformer(base)
+        m_pal = Transformer(dataclasses.replace(base, use_pallas_attention=True))
+        params = m_jnp.init_params(jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, 256)
+        out_j, _ = jax.jit(m_jnp.forward)(params, toks)
+        out_p, _ = jax.jit(m_pal.forward)(params, toks)
+        rel = float(jnp.abs(out_p - out_j).max()) / float(jnp.abs(out_j).max())
+        assert rel < 1e-4, rel
+    finally:
+        L.FLASH_THRESHOLD = old_thresh

@@ -1,0 +1,126 @@
+"""Optimizer, compression and hierarchical-sync unit tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, global_norm
+from repro.optim.compress import ef_compress, int8_decode, int8_encode
+from repro.optim.hierarchical import Hierarchical, HierarchicalConfig
+
+
+def test_adamw_minimises_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1)
+    params = {"w": jnp.asarray([5.0, -3.0, 2.0])}
+    opt = adamw_init(params, cfg)
+
+    def loss_fn(p):
+        return jnp.sum(p["w"] ** 2)
+
+    for _ in range(200):
+        g = jax.grad(loss_fn)(params)
+        params, opt, metrics = adamw_update(g, opt, params, cfg)
+    assert float(loss_fn(params)) < 1e-3
+    assert int(opt["count"]) == 200
+
+
+def test_adamw_grad_clip():
+    cfg = AdamWConfig(lr=1e-3, grad_clip=1.0, warmup_steps=1)
+    params = {"w": jnp.zeros(4)}
+    opt = adamw_init(params, cfg)
+    g = {"w": jnp.full((4,), 1e6)}
+    p1, _, metrics = adamw_update(g, opt, params, cfg)
+    assert float(metrics["grad_norm"]) > 1e6  # reported pre-clip
+    assert float(jnp.abs(p1["w"]).max()) < 1.0  # update stayed bounded
+
+
+def test_adamw_moment_dtype():
+    cfg = AdamWConfig(moment_dtype="bfloat16")
+    params = {"w": jnp.zeros((8,), jnp.bfloat16)}
+    opt = adamw_init(params, cfg)
+    assert opt["m"]["w"].dtype == jnp.bfloat16
+    g = {"w": jnp.ones((8,), jnp.bfloat16)}
+    _, opt2, _ = adamw_update(g, opt, params, cfg)
+    assert opt2["v"]["w"].dtype == jnp.bfloat16
+
+
+def test_global_norm():
+    t = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    assert float(global_norm(t)) == pytest.approx(5.0)
+
+
+def test_int8_encode_decode():
+    x = jnp.asarray([-1.0, 0.0, 0.5, 1.0])
+    q, s = int8_encode(x)
+    y = int8_decode(q, s)
+    assert float(jnp.abs(y - x).max()) < 1e-2
+    assert q.dtype == jnp.int8
+
+
+def test_ef_compress_none_passthrough():
+    x = jnp.asarray([1.0, 2.0])
+    ef = jnp.zeros(2)
+    dec, new_ef, wire = ef_compress(x, ef, "none")
+    assert np.array_equal(np.asarray(dec), np.asarray(x))
+    assert wire is None
+
+
+def test_hierarchical_replicate_and_pspecs():
+    from jax.sharding import PartitionSpec as P
+
+    hier = Hierarchical(HierarchicalConfig(sync_every=5), n_pods=3)
+    tree = {"w": jnp.ones((4, 2))}
+    rep = hier.replicate(tree)
+    assert rep["w"].shape == (3, 4, 2)
+    specs = hier.pspecs({"w": P("data", "model")})
+    assert specs["w"] == P("pod", "data", "model")
+
+
+def test_hierarchical_sync_uncompressed_fixed_point():
+    """Identical replicas are a fixed point; diverged replicas average."""
+    hier = Hierarchical(HierarchicalConfig(), n_pods=2)
+    params = {"w": jnp.asarray([1.0, 3.0])}
+    state = hier.init_sync_state(params)
+    pods = {"w": jnp.asarray([[0.0, 2.0], [2.0, 4.0]])}
+    synced, state = hier.sync_step(pods, state)
+    assert np.allclose(np.asarray(synced["w"]), [[1.0, 3.0], [1.0, 3.0]])
+    again, _ = hier.sync_step(synced, state)
+    assert np.allclose(np.asarray(again["w"]), np.asarray(synced["w"]))
+
+
+def test_hierarchical_sync_int8_converges():
+    """Compressed sync approaches the true mean; EF keeps residuals bounded."""
+    hier = Hierarchical(HierarchicalConfig(compression="int8"), n_pods=2)
+    params = {"w": jnp.zeros(8)}
+    state = hier.init_sync_state(params)
+    rng = np.random.default_rng(0)
+    pods = {"w": jnp.asarray(rng.normal(0, 1, (2, 8)), jnp.float32)}
+    true_mean = np.asarray(pods["w"]).mean(axis=0)
+    synced, state = hier.sync_step(pods, state)
+    got = np.asarray(synced["w"][0])
+    assert np.abs(got - true_mean).max() < 0.02
+    # residuals bounded by the int8 step size
+    assert np.abs(np.asarray(state["ef"]["w"])).max() < 0.02
+
+
+def test_elastic_pod_resize():
+    from repro.checkpoint.manager import elastic_pod_resize
+
+    pods = {"w": jnp.asarray([[1.0, 2.0], [3.0, 4.0]])}
+    resized = elastic_pod_resize(pods, 4)
+    assert resized["w"].shape == (4, 2)
+    assert np.allclose(np.asarray(resized["w"]), [[2.0, 3.0]] * 4)
+
+
+def test_hierarchical_sync_drops_straggler_pod():
+    """A dead/straggling pod is excluded from the average and re-joins with
+    the synced parameters (elastic straggler mitigation)."""
+    hier = Hierarchical(HierarchicalConfig(), n_pods=3)
+    params = {"w": jnp.asarray([0.0, 0.0])}
+    state = hier.init_sync_state(params)
+    pods = {"w": jnp.asarray([[1.0, 1.0], [3.0, 3.0], [100.0, -100.0]])}
+    live = jnp.asarray([True, True, False])  # pod 2 is a straggler
+    synced, _ = hier.sync_step(pods, state, live=live)
+    assert np.allclose(np.asarray(synced["w"]),
+                       [[2.0, 2.0]] * 3), "straggler must not poison the mean"

@@ -1,0 +1,148 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.areas import mam_benchmark_spec
+from repro.core.connectivity import build_network
+from repro.core.engine import EngineConfig, make_engine
+from repro.core.neuron import counter_uniform
+from repro.core import ring_buffer
+from repro.optim.compress import ef_compress, int8_decode, int8_encode
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(
+    n_areas=st.sampled_from([2, 3, 4]),
+    n_per_area=st.sampled_from([16, 24, 40]),
+    d_ratio=st.sampled_from([2, 5, 10]),
+    seed=st.integers(0, 2**31 - 1),
+    neuron=st.sampled_from(["ignore_and_fire", "lif"]),
+)
+def test_schedule_equivalence_property(n_areas, n_per_area, d_ratio, seed, neuron):
+    """For ANY network geometry, delay ratio and seed, the two schedules
+    produce bit-identical spike trains (the paper's core causality claim)."""
+    spec = mam_benchmark_spec(
+        n_areas=n_areas, n_per_area=n_per_area, k_intra=4, k_inter=4,
+        d_min_inter_ms=0.1 * d_ratio,
+    )
+    net = build_network(spec, seed=seed % 100000)
+    conv = make_engine(net, spec, EngineConfig(
+        neuron_model=neuron, schedule="conventional", seed=seed % 97))
+    struc = make_engine(net, spec, EngineConfig(
+        neuron_model=neuron, schedule="structure_aware", seed=seed % 97))
+    sc, ss = conv.init(), struc.init()
+    for _ in range(6):
+        sc, bc = conv.window(sc)
+        ss, bs = struc.window(ss)
+        assert np.array_equal(np.asarray(bc), np.asarray(bs))
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(4, 64),
+    r=st.integers(4, 32),
+    k=st.integers(1, 8),
+    t=st.integers(0, 1000),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ring_buffer_deposit_read_roundtrip(n, r, k, t, seed):
+    """Whatever is deposited with delay d is read exactly d steps later and
+    the slot is cleared after reading."""
+    rng = np.random.default_rng(seed)
+    ring = jnp.zeros((n, r), jnp.float32)
+    vals = jnp.asarray(np.round(rng.normal(0, 64, (n, k))) / 256.0, jnp.float32)
+    delays = jnp.asarray(rng.integers(1, r, (n, k)), jnp.int32)
+    ring = ring_buffer.deposit(ring, vals, delays, jnp.int32(t))
+    # advance the clock: at step t+d we must read sum of vals with delay d
+    total_read = np.zeros(n, np.float32)
+    for step in range(t + 1, t + r):
+        i_in, ring = ring_buffer.read_and_clear(ring, jnp.int32(step))
+        d = step - t
+        want = np.asarray((vals * (np.asarray(delays) == d)).sum(axis=1))
+        assert np.allclose(np.asarray(i_in), want), f"step {step}"
+        total_read += np.asarray(i_in)
+    assert np.allclose(total_read, np.asarray(vals.sum(axis=1)))
+    assert float(jnp.abs(ring).max()) == 0.0, "ring must be empty after a lap"
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 1000),
+    t=st.integers(0, 10_000),
+    n=st.integers(8, 256),
+    split=st.integers(1, 7),
+)
+def test_counter_uniform_shard_invariance(seed, t, n, split):
+    """The drive is a pure function of (seed, t, gid): any partition of the
+    gid range reproduces exactly the same values (key for distributed
+    bit-exactness)."""
+    gids = jnp.arange(n, dtype=jnp.int32)
+    full = np.asarray(counter_uniform(seed, jnp.int32(t), gids))
+    cut = max(1, n * split // 8)
+    a = np.asarray(counter_uniform(seed, jnp.int32(t), gids[:cut]))
+    b = np.asarray(counter_uniform(seed, jnp.int32(t), gids[cut:]))
+    assert np.array_equal(np.concatenate([a, b]), full)
+
+
+@settings(**SETTINGS)
+@given(
+    shape=st.sampled_from([(8,), (16, 4), (3, 5, 7)]),
+    scale=st.floats(1e-3, 1e3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_int8_roundtrip_error_bound(shape, scale, seed):
+    """Quantisation error is bounded by scale/254 per element."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, scale, shape), jnp.float32)
+    q, s = int8_encode(x)
+    err = np.abs(np.asarray(int8_decode(q, s)) - np.asarray(x))
+    bound = float(np.abs(np.asarray(x)).max()) / 127.0
+    assert err.max() <= bound * 0.5 + 1e-9
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_error_feedback_is_lossless_over_time(seed):
+    """With error feedback, the *accumulated* transmitted signal converges to
+    the accumulated true signal (compression is unbiased over time)."""
+    rng = np.random.default_rng(seed)
+    ef = jnp.zeros((32,), jnp.float32)
+    total_true = np.zeros(32, np.float64)
+    total_sent = np.zeros(32, np.float64)
+    for step in range(30):
+        x = jnp.asarray(rng.normal(0, 1, 32), jnp.float32)
+        dec, ef, _ = ef_compress(x, ef, "int8")
+        total_true += np.asarray(x, np.float64)
+        total_sent += np.asarray(dec, np.float64)
+    resid = np.abs(total_true - total_sent - np.asarray(ef, np.float64))
+    assert resid.max() < 1e-3, "EF identity: sent + residual == true"
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 3),
+    s=st.sampled_from([16, 32]),
+    window=st.sampled_from([0, 3, 7]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_streaming_attention_property(b, s, window, seed):
+    import repro.models.layers as L
+    rng = np.random.default_rng(seed)
+    h, hkv, dh = 4, 2, 8
+    q = jnp.asarray(rng.normal(size=(b, s, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, hkv, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, hkv, dh)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    out_s = L._streaming_attention(q, k, v, pos, pos, jnp.int32(s), window)
+    out_d = L.attention_scores(
+        q, k, v, L.causal_window_mask(pos, pos, None, window))
+    assert float(jnp.abs(out_s - out_d).max()) < 5e-5

@@ -1,0 +1,141 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The central invariant: the conventional and structure-aware schedules are
+*exactly* equivalent -- bit-identical spike trains and ring buffers -- because
+inter-area delays >= D cycles make the lumped exchange causal (paper §2.1),
+and delivery weights live on an exact 1/256 grid.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.areas import MAM_AREA_NAMES, mam_benchmark_spec, mam_spec
+from repro.core.connectivity import build_network
+from repro.core.engine import EngineConfig, make_engine
+
+
+@pytest.fixture(scope="module")
+def small_spec():
+    return mam_benchmark_spec(n_areas=4, n_per_area=48, k_intra=8, k_inter=8)
+
+
+@pytest.fixture(scope="module")
+def small_net(small_spec):
+    return build_network(small_spec, seed=12)
+
+
+@pytest.mark.parametrize("neuron_model", ["ignore_and_fire", "lif"])
+def test_schedule_equivalence_bit_exact(small_spec, small_net, neuron_model):
+    """Paper §2.1: the structure-aware schedule changes *when* spikes travel,
+    never *what* arrives. 40 windows, bitwise."""
+    conv = make_engine(small_net, small_spec,
+                       EngineConfig(neuron_model=neuron_model,
+                                    schedule="conventional"))
+    struc = make_engine(small_net, small_spec,
+                        EngineConfig(neuron_model=neuron_model,
+                                     schedule="structure_aware"))
+    sc, ss = conv.init(), struc.init()
+    for w in range(40):
+        sc, blk_c = conv.window(sc)
+        ss, blk_s = struc.window(ss)
+        assert np.array_equal(np.asarray(blk_c), np.asarray(blk_s)), f"window {w}"
+        assert np.array_equal(np.asarray(sc.ring), np.asarray(ss.ring)), f"ring {w}"
+    assert int(sc.spike_count.sum()) > 0, "network must actually spike"
+
+
+def test_deposit_variants_equivalent(small_spec, small_net):
+    """One-hot-einsum and scatter-add delivery are interchangeable."""
+    a = make_engine(small_net, small_spec,
+                    EngineConfig(schedule="structure_aware", deposit_onehot=True))
+    b = make_engine(small_net, small_spec,
+                    EngineConfig(schedule="structure_aware", deposit_onehot=False))
+    sa, sb = a.init(), b.init()
+    for _ in range(10):
+        sa, blk_a = a.window(sa)
+        sb, blk_b = b.window(sb)
+        assert np.array_equal(np.asarray(blk_a), np.asarray(blk_b))
+
+
+def test_lif_ground_state_rate(small_spec, small_net):
+    """The calibrated drive puts the LIF network near the MAM ground state
+    (~2.5 spikes/s; we accept a generous band at this tiny scale)."""
+    eng = make_engine(small_net, small_spec, EngineConfig(neuron_model="lif"))
+    st = eng.init()
+    st, _ = eng.run(st, 500)  # 500 ms
+    t_s = float(st.t) * small_spec.dt_ms / 1000.0
+    rate = float(st.spike_count.sum()) / (small_spec.n_total * t_s)
+    assert 0.5 < rate < 10.0, f"ground-state rate {rate:.2f} Hz out of band"
+
+
+def test_ignore_and_fire_exact_rate():
+    """Ignore-and-fire emits at exactly the configured rate (paper §4.2)."""
+    spec = mam_benchmark_spec(n_areas=2, n_per_area=32, k_intra=4, k_inter=4,
+                              rate_hz=10.0)
+    net = build_network(spec, seed=12)
+    eng = make_engine(net, spec, EngineConfig(neuron_model="ignore_and_fire"))
+    st = eng.init()
+    st, _ = eng.run(st, 1000)  # 1 s
+    rate = float(st.spike_count.sum()) / spec.n_total
+    assert abs(rate - 10.0) < 0.11, rate
+
+
+def test_heterogeneous_area_sizes_ghost_padding():
+    """Heterogeneous areas pad to N_max with frozen ghosts that never fire."""
+    spec = mam_benchmark_spec(n_areas=4, n_per_area=40, k_intra=4, k_inter=4,
+                              area_size_cv=0.3, seed=7)
+    net = build_network(spec, seed=12)
+    sizes = spec.area_sizes()
+    assert len(set(sizes.tolist())) > 1, "sizes should differ"
+    eng = make_engine(net, spec, EngineConfig(neuron_model="ignore_and_fire"))
+    st = eng.init()
+    st, _ = eng.run(st, 100)
+    counts = np.asarray(st.spike_count)
+    alive = np.asarray(net.alive)
+    assert counts[~alive].sum() == 0, "ghost neurons must stay silent"
+    assert counts[alive].sum() > 0
+
+
+def test_mam_spec_properties():
+    spec = mam_spec(scale=0.001)
+    assert spec.n_areas == 32
+    assert spec.delay_ratio == 10
+    sizes = spec.area_sizes().astype(float)
+    cv = sizes.std() / sizes.mean()
+    assert 0.1 < cv < 0.3, f"MAM area-size CV {cv:.2f} (paper ~0.2)"
+    rates = spec.area_rates()
+    v2 = rates[list(MAM_AREA_NAMES).index("V2")]
+    assert v2 > rates.mean() * 1.3, "V2 must be among the hottest areas"
+
+
+def test_delay_tiers_respected(small_net, small_spec):
+    d_intra = np.asarray(small_net.delay_intra)
+    d_inter = np.asarray(small_net.delay_inter)
+    assert d_intra.min() >= 1
+    assert d_intra.max() <= small_spec.steps_intra_max
+    assert d_inter.min() >= small_spec.delay_ratio, \
+        "inter-area delays must respect the d_min_inter cutoff (eq. 1)"
+    assert d_inter.max() < small_net.ring_len
+
+
+def test_event_delivery_equals_dense_engine():
+    """Beyond-paper optimization: event-driven delivery (compact fired
+    neurons, scatter outgoing synapses) is bit-identical to the dense
+    gather-matvec path -- weights live on the exact 1/256 grid."""
+    from repro.core.engine import EngineConfig, make_engine
+
+    spec = mam_benchmark_spec(n_areas=4, n_per_area=48, k_intra=8, k_inter=8,
+                              rate_hz=30.0)
+    net = build_network(spec, seed=91856, outgoing=True)
+    dense = make_engine(net, spec, EngineConfig(
+        neuron_model="ignore_and_fire", schedule="structure_aware",
+        delivery="dense"))
+    event = make_engine(net, spec, EngineConfig(
+        neuron_model="ignore_and_fire", schedule="structure_aware",
+        delivery="event"))
+    sd, se = dense.init(), event.init()
+    for w in range(25):
+        sd, bd = dense.window(sd)
+        se, be = event.window(se)
+        assert np.array_equal(np.asarray(bd), np.asarray(be)), w
+        assert np.array_equal(np.asarray(sd.ring), np.asarray(se.ring)), w
+    assert int(sd.spike_count.sum()) > 100

@@ -1,0 +1,161 @@
+"""§2.2 / §2.3 theory validation against the paper's quoted numbers."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import cost_model as cm
+from repro.core import delivery_model as dm
+from repro.core import sync_model as sm
+
+
+# ------------------------------------------------------------------ §2.2
+
+
+def test_norm_ppf_cdf_roundtrip():
+    for p in (0.001, 0.035, 0.5, 0.9, 0.999):
+        assert abs(sm.norm_cdf(sm.norm_ppf(p)) - p) < 1e-7
+
+
+def test_blom_xi_monotone_and_magnitude():
+    xis = [sm.blom_xi(m) for m in (2, 16, 32, 64, 128)]
+    assert all(b > a for a, b in zip(xis, xis[1:]))
+    assert 2.4 < sm.blom_xi(128) < 2.8  # ~2.6 sigma for M=128
+
+
+def test_sync_ratio_eq11():
+    assert sm.sync_time_ratio(10) == pytest.approx(1 / math.sqrt(10))
+    c = sm.expected_wall_conventional(1000, 128, 1.6e-3, 0.05e-3)
+    s = sm.expected_wall_structure_aware(1000, 10, 128, 1.6e-3, 0.05e-3)
+    sync_c = c - 1000 * 1.6e-3
+    sync_s = s - 1000 * 1.6e-3
+    assert sync_s / sync_c == pytest.approx(1 / math.sqrt(10))
+
+
+def test_eq12_quantile_band():
+    """M=128: the upper 3.5% of cycle times hold ~99% of per-cycle maxima."""
+    tail = sm.tail_for_max_coverage(0.99, 128)
+    assert 0.03 < tail < 0.04
+    assert sm.max_tail_probability(0.035, 128) == pytest.approx(0.99, abs=0.01)
+
+
+def test_monte_carlo_iid_matches_eq11():
+    model = sm.CycleTimeModel(mu=1.6e-3, sigma=0.08e-3)
+    conv, struc = sm.simulate_schedules(model, m=128, s=20000, d=10, seed=0)
+    assert struc.sync / conv.sync == pytest.approx(1 / math.sqrt(10), rel=0.12)
+    assert struc.cv_lumped / conv.cv_lumped == pytest.approx(
+        1 / math.sqrt(10), rel=0.12)
+    assert struc.n_syncs == conv.n_syncs // 10
+
+
+def test_monte_carlo_serial_correlation_weakens_gain():
+    """The paper's §2.4.1 observation: persistent per-process slow phases
+    (Fig. 12) violate CLT independence and cap the CV-ratio well above
+    1/sqrt(D) (measured 0.71 vs predicted 0.32)."""
+    iid = sm.CycleTimeModel(mu=1.6e-3, sigma=0.065e-3)
+    corr = sm.CycleTimeModel(mu=1.6e-3, sigma=0.065e-3, rho=0.6,
+                             minor_mode_shift=0.3e-3, minor_mode_weight=0.02,
+                             minor_mode_dwell=5.0)
+    c0, s0 = sm.simulate_schedules(iid, 128, 20000, 10, seed=1)
+    c1, s1 = sm.simulate_schedules(corr, 128, 20000, 10, seed=1)
+    r_iid = s0.cv_lumped / c0.cv_lumped
+    r_corr = s1.cv_lumped / c1.cv_lumped
+    assert r_corr > r_iid * 1.5, (r_iid, r_corr)
+    assert 0.45 < r_corr < 0.9  # paper measures 0.71
+
+
+# ------------------------------------------------------------------ §2.3
+
+
+@pytest.mark.parametrize("m,t_m,expected_pct", [
+    (32, 48, 12), (32, 128, 29), (128, 48, 37), (128, 128, 43),
+])
+def test_fig6b_reductions_match_paper(m, t_m, expected_pct):
+    _, _, red = dm.fig6b_reduction(m, t_m)
+    assert abs(100 * red - expected_pct) < 1.6, (m, t_m, red)
+
+
+def test_delivery_model_advantage_grows_with_m():
+    reds = [dm.fig6b_reduction(m, 48)[2] for m in (16, 32, 64, 128)]
+    assert all(b > a for a, b in zip(reds, reds[1:]))
+
+
+def test_f_irr_bounds():
+    for m, t_m in ((16, 48), (128, 128)):
+        f_c = dm.f_irr_conventional(m * 130_000, 6000, m, t_m)
+        f_s = dm.f_irr_structure_aware(m * 130_000, 6000, m, t_m)
+        assert 0 < f_s <= f_c <= 1.0
+
+
+# ----------------------------------------------------------- cost model
+
+
+def test_fig7a_weak_scaling_reproduction():
+    """Calibrated model reproduces Fig. 7a within ~20%: conv 9.4 -> 22.7,
+    struct 8.5 -> 15.7; struct strictly faster, gap grows with M."""
+    wl = cm.WorkloadModel()
+    conv16 = cm.simulate_rtf(wl, cm.SUPERMUC, 16, "conventional", seed=1).total
+    conv128 = cm.simulate_rtf(wl, cm.SUPERMUC, 128, "conventional", seed=1).total
+    str16 = cm.simulate_rtf(wl, cm.SUPERMUC, 16, "structure_aware", seed=1).total
+    str128 = cm.simulate_rtf(wl, cm.SUPERMUC, 128, "structure_aware", seed=1).total
+    assert conv16 == pytest.approx(9.4, rel=0.25)
+    assert conv128 == pytest.approx(22.7, rel=0.25)
+    assert str16 == pytest.approx(8.5, rel=0.25)
+    assert str128 == pytest.approx(15.7, rel=0.25)
+    assert str128 < conv128 and str16 <= conv16 * 1.02
+    assert (conv128 - str128) > (conv16 - str16)
+
+
+def test_fig7a_phase_reductions_at_m128():
+    wl = cm.WorkloadModel()
+    c = cm.simulate_rtf(wl, cm.SUPERMUC, 128, "conventional", seed=1)
+    s = cm.simulate_rtf(wl, cm.SUPERMUC, 128, "structure_aware", seed=1)
+    dlv = 1 - s.deliver / c.deliver
+    comm = 1 - s.communicate / c.communicate
+    sync = 1 - s.synchronize / c.synchronize
+    assert 0.15 < dlv < 0.45      # paper: 25 %
+    assert 0.6 < comm < 0.97      # paper: 76 %
+    assert 0.25 < sync < 0.65     # paper: 48 %
+
+
+def test_fig8a_area_size_heterogeneity_increases_sync():
+    wl0 = cm.WorkloadModel(area_size_cv=0.0)
+    wl2 = cm.WorkloadModel(area_size_cv=0.2)
+    s0 = cm.simulate_rtf(wl0, cm.SUPERMUC, 64, "structure_aware", seed=2)
+    s2 = cm.simulate_rtf(wl2, cm.SUPERMUC, 64, "structure_aware", seed=2)
+    assert s2.synchronize > s0.synchronize * 1.5
+    assert s2.total > s0.total
+
+
+def test_fig8c_diminishing_returns_in_d():
+    """Communication gain saturates for D > 10 (paper Fig. 8c / eq. 11)."""
+    totals = {}
+    for d in (1, 5, 10, 20):
+        wl = cm.WorkloadModel(d=d)
+        totals[d] = cm.simulate_rtf(wl, cm.SUPERMUC, 64,
+                                    "structure_aware", seed=3).total
+    assert totals[5] < totals[1]
+    gain_1_5 = totals[1] - totals[5]
+    gain_5_10 = totals[5] - totals[10]
+    gain_10_20 = totals[10] - totals[20]
+    assert gain_5_10 < gain_1_5, "gain must shrink past D=5"
+    assert gain_10_20 < 0.5 * gain_1_5, "gain must be marginal past D=10"
+
+
+def test_fig9_jureca_vs_supermuc():
+    """JURECA (128 threads) is faster and less imbalance-sensitive (§2.4.3)."""
+    wl = cm.WorkloadModel(area_size_cv=0.2, rate_cv=0.25, neuron_model="lif")
+    sm_ = cm.simulate_rtf(wl, cm.SUPERMUC, 32, "structure_aware", seed=4)
+    ju = cm.simulate_rtf(wl, cm.JURECA, 32, "structure_aware", seed=4)
+    assert ju.total < sm_.total
+    assert ju.deliver < sm_.deliver
+
+
+def test_collective_model_sublinear():
+    """Fig. 4: one D-sized message beats D unit messages (latency regime)."""
+    mpi = cm.SUPERMUC_MPI
+    b = 317 * 128  # buffer/rank x ranks at M=128
+    ten_small = 10 * mpi.call_time_s(128, b)
+    one_big = mpi.call_time_s(128, 10 * b)
+    assert one_big < 0.3 * ten_small  # paper predicts 86% reduction
