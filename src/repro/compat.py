@@ -1,0 +1,44 @@
+"""Version-compat shims for the jax API surface this repo relies on.
+
+The repo targets both the jax that ships in the pinned container
+(0.4.x, where ``shard_map`` lives in ``jax.experimental`` and takes a
+``check_rep`` flag) and newer releases (``jax.shard_map`` with
+``check_vma``, ``jax.set_mesh``). Everything else imports these names
+from here so the divergence is confined to one module.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+__all__ = ["shard_map", "set_mesh"]
+
+try:  # jax >= 0.6: top-level export, `check_vma` kwarg
+    from jax import shard_map as _shard_map
+
+    _REP_KWARG = "check_vma"
+except ImportError:  # jax 0.4.x: experimental module, `check_rep` kwarg
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _REP_KWARG = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with the replication-check flag name papered over."""
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        **{_REP_KWARG: check_vma},
+    )
+
+
+def set_mesh(mesh):
+    """``jax.set_mesh`` where available, else the legacy global-mesh context.
+
+    On jax 0.4.x entering the ``Mesh`` object itself installs it as the
+    ambient physical mesh, which is what pjit/shard_map consult.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return contextlib.nullcontext() if mesh is None else mesh

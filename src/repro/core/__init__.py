@@ -7,6 +7,7 @@ from repro.core.areas import (
     mam_spec,
 )
 from repro.core.connectivity import Network, build_network
+from repro.core.delivery import BACKENDS as DELIVERY_BACKENDS
 from repro.core.engine import Engine, EngineConfig, SimState, make_engine
 from repro.core.dist_engine import (
     make_dist_engine,
@@ -29,6 +30,7 @@ __all__ = [
     "mam_spec",
     "Network",
     "build_network",
+    "DELIVERY_BACKENDS",
     "Engine",
     "EngineConfig",
     "SimState",

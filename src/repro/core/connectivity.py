@@ -12,9 +12,10 @@ but replaces pointer-chasing tables with rectangular tensors:
   ``d_min_inter`` cutoff).
 
 Areas are padded to a common ``n_pad`` ('ghost neurons', §4.1.1); the
-``alive`` mask freezes the padding. Weights are drawn on a 1/256 grid so f32
-ring-buffer accumulation is exact and the two communication schedules are
-bit-identical (see DESIGN.md §8).
+``alive`` mask freezes the padding. Weights are drawn on a 1/256 grid --
+every sum of such weights below 2^23/256 is exactly representable in f32, so
+ring-buffer accumulation is associative-exact and the two communication
+schedules (and all four delivery backends) are bit-identical.
 """
 
 from __future__ import annotations
@@ -69,6 +70,16 @@ class Network:
     ring_len: int = dataclasses.field(metadata=dict(static=True), default=0)
     delay_ratio: int = dataclasses.field(metadata=dict(static=True), default=1)
     dt_ms: float = dataclasses.field(metadata=dict(static=True), default=0.1)
+    # Per-pathway delay windows, computed at build time from the actual delay
+    # draws: all intra delays live in [steps_lo_intra, steps_lo_intra +
+    # r_span_intra) and likewise for inter. Delay-resolved delivery (the
+    # Pallas backend, see core/delivery.py) iterates only over this window
+    # instead of the full ring -- the short/long pathway split of §4.1.2 is
+    # what keeps each window narrow. r_span == 0 means "no synapses".
+    steps_lo_intra: int = dataclasses.field(metadata=dict(static=True), default=1)
+    r_span_intra: int = dataclasses.field(metadata=dict(static=True), default=0)
+    steps_lo_inter: int = dataclasses.field(metadata=dict(static=True), default=1)
+    r_span_inter: int = dataclasses.field(metadata=dict(static=True), default=0)
 
     @property
     def k_intra(self) -> int:
@@ -121,6 +132,13 @@ def network_sds(spec: MultiAreaSpec, *, size_multiple: int = 1) -> Network:
         ring_len=spec.ring_len,
         delay_ratio=spec.delay_ratio,
         dt_ms=spec.dt_ms,
+        # No delay draws to inspect: use the spec's tier cutoffs (a superset
+        # of any instantiated window, so lowering covers the real kernel).
+        steps_lo_intra=1,
+        r_span_intra=spec.steps_intra_max if K_i > 0 else 0,
+        steps_lo_inter=spec.steps_inter_min,
+        r_span_inter=(spec.steps_inter_max - spec.steps_inter_min + 1)
+        if K_e > 0 else 0,
     )
 
 
@@ -285,6 +303,13 @@ def build_network(
             out["wout_inter"] = jnp.asarray(w_.reshape(A, n_pad, -1))
             out["dout_inter"] = jnp.asarray(d_.reshape(A, n_pad, -1))
 
+    # Delay-window metadata for delay-resolved delivery: the tightest
+    # [lo, lo + span) covering the actual draws of each pathway table.
+    lo_i = int(delay_intra.min()) if delay_intra.size else 1
+    span_i = int(delay_intra.max()) - lo_i + 1 if delay_intra.size else 0
+    lo_e = int(delay_inter.min()) if delay_inter.size else D
+    span_e = int(delay_inter.max()) - lo_e + 1 if delay_inter.size else 0
+
     return Network(
         alive=jnp.asarray(alive),
         rate_hz=jnp.asarray(rate),
@@ -299,5 +324,9 @@ def build_network(
         ring_len=spec.ring_len,
         delay_ratio=D,
         dt_ms=spec.dt_ms,
+        steps_lo_intra=lo_i,
+        r_span_intra=span_i,
+        steps_lo_inter=lo_e,
+        r_span_inter=span_e,
         **out,
     )

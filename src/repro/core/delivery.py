@@ -1,0 +1,199 @@
+"""Backend-selectable spike delivery: the shared per-cycle hot path.
+
+The paper identifies the *deliver* phase as the dominant per-cycle compute
+cost and its irregular memory access as the thing a cache-aware rewrite must
+fix (§2.3, §3). Both engines (``engine.py`` single-host, ``dist_engine.py``
+sharded) route their intra-/inter-area delivery through this module, selected
+by ``EngineConfig.delivery_backend``:
+
+* ``"onehot"``  -- gather + one-hot-einsum deposit. Reference semantics; the
+  per-cycle ``[N, K, R]`` one-hot is a dense MXU contraction but materialises
+  the full ring axis for every synapse.
+* ``"scatter"`` -- gather + ``.at[].add`` deposit. No ``[N, K, R]`` tensor;
+  the baseline for large K.
+* ``"pallas"``  -- the tiled, *delay-resolved* kernel
+  (:func:`repro.kernels.ops.spike_deliver`): contributions are reduced over K
+  once per slot of the per-pathway delay window ``[steps_lo, steps_lo +
+  r_span)`` carried on :class:`~repro.core.connectivity.Network`, then rolled
+  into the ring with :func:`~repro.kernels.ops.apply_contrib`. The narrow
+  windows are exactly what the paper's short/long pathway split (§4.1.2)
+  buys.
+* ``"event"``   -- compact the fired neurons and scatter their *outgoing*
+  synapses (:func:`~repro.kernels.ops.event_deliver`). At brain-scale rates
+  (~0.025 % of neurons fire per 0.1 ms cycle) this replaces the dense
+  O(N * K) sweep with an O(s_max * K_out) scatter. Requires
+  ``build_network(outgoing=True)``.
+
+All four are bit-identical on the reference network: delivery weights live on
+the exact 1/256 grid, so f32 ring accumulation is associative-exact and
+neither scatter order nor slot-reduction order can change a ULP.
+
+:func:`compact_fired` implements the wire format of the distributed event
+path: fired neurons are compacted into fixed-size id packets *before* the
+exchange (NEST's spike-id wire format, the one the paper contrasts with
+dense vectors). The receive side scatters the ids through replicated
+outgoing tables straight into each device's ring shard
+(``ops.event_deliver_ids`` with a global->local ``tgt_map``). ``s_max`` caps
+the packet; the engines surface the spill in ``SimState.overflow``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ring_buffer
+from repro.core.connectivity import Network
+from repro.kernels import ops as kops
+
+__all__ = [
+    "BACKENDS",
+    "event_bounds",
+    "deliver_intra",
+    "deliver_inter",
+    "compact_fired",
+]
+
+BACKENDS = ("onehot", "scatter", "pallas", "event")
+
+
+def event_bounds(
+    net: Network, *, headroom: float, floor: int
+) -> tuple[int, int]:
+    """Static event-buffer bounds ``(s_max_area, s_max_all)``.
+
+    ``s_max = headroom x expected spikes/cycle + floor`` (cf. NEST's dynamic
+    spike-register resizing; sizing is static here, the engines surface
+    overruns via ``SimState.overflow``). The expectation uses the per-area
+    target rate, which for ignore-and-fire is the exact emission rate. The
+    event path's cost is s_max-bound, so ``floor`` is the knob that trades
+    burst tolerance against wasted scatter width.
+    """
+    mean_rate = (
+        float(jnp.asarray(net.rate_hz).mean())
+        if hasattr(net.rate_hz, "mean") else 2.5
+    )
+    a, n_pad = net.alive.shape
+    exp_area = n_pad * mean_rate * net.dt_ms * 1e-3
+    s_max_area = int(headroom * exp_area) + max(floor, 1)
+    s_max_all = int(headroom * exp_area * a) + 4 * max(floor, 1)
+    return s_max_area, s_max_all
+
+
+def _deposit(ring, vals, delays, t, *, onehot: bool):
+    a, n, r = ring.shape
+    k = vals.shape[-1]
+    fn = ring_buffer.deposit if onehot else ring_buffer.deposit_scatter
+    out = fn(ring.reshape(a * n, r), vals.reshape(a * n, k),
+             delays.reshape(a * n, k), t)
+    return out.reshape(a, n, r)
+
+
+def deliver_intra(
+    ring: jax.Array,         # [A, n, R] target rows (may be a device-local view)
+    area_spikes: jax.Array,  # [A, n_src] f32 complete per-area spike vectors
+    net: Network,            # tables with matching row view: src_intra [A, n, K]
+    t: jax.Array,
+    *,
+    backend: str,
+    s_max: int | None = None,
+) -> jax.Array:
+    """One cycle of intra-area (short-range pathway) delivery."""
+    a, n, r = ring.shape
+    if net.src_intra.shape[-1] == 0:
+        return ring
+    if backend == "event":
+        # Single-host layout only (ring covers the full area); the sharded
+        # event path compacts before the exchange -- see the engines.
+        return jax.vmap(
+            lambda rg, sp, tg, w, d: kops.event_deliver(
+                rg, sp > 0, tg, w, d, t, s_max=s_max)
+        )(ring, area_spikes, net.tgt_intra, net.wout_intra, net.dout_intra)
+    if backend == "pallas":
+        k = net.src_intra.shape[-1]
+        n_src = area_spikes.shape[-1]
+        # Lift per-area source indices into one flat id space so the whole
+        # network is a single kernel launch (grid over [A * n] row tiles).
+        offs = jnp.arange(a, dtype=jnp.int32) * n_src
+        src_g = (net.src_intra + offs[:, None, None]).reshape(a * n, k)
+        contrib = kops.spike_deliver(
+            area_spikes.reshape(-1), src_g,
+            net.w_intra.reshape(a * n, k), net.delay_intra.reshape(a * n, k),
+            steps_lo=net.steps_lo_intra, r_span=net.r_span_intra,
+        )
+        flat = kops.apply_contrib(
+            ring.reshape(a * n, r), contrib, t, net.steps_lo_intra)
+        return flat.reshape(a, n, r)
+    vals = net.w_intra * jax.vmap(lambda s, i: s[i])(area_spikes, net.src_intra)
+    return _deposit(ring, vals, net.delay_intra, t,
+                    onehot=(backend == "onehot"))
+
+
+def deliver_inter(
+    ring: jax.Array,         # [A, n, R] target rows (may be a device-local view)
+    flat_spikes: jax.Array,  # [N_global] f32 global spike vector for one cycle
+    net: Network,            # src_inter [A, n, K] holding *global* source ids
+    t: jax.Array,
+    *,
+    backend: str,
+    s_max: int | None = None,
+) -> jax.Array:
+    """One cycle of inter-area (long-range pathway) delivery."""
+    a, n, r = ring.shape
+    k = net.src_inter.shape[-1]
+    if k == 0:
+        return ring
+    if backend == "event":
+        k_out = net.tgt_inter.shape[-1]
+        flat = kops.event_deliver(
+            ring.reshape(a * n, r),
+            flat_spikes > 0,
+            net.tgt_inter.reshape(a * n, k_out),
+            net.wout_inter.reshape(a * n, k_out),
+            net.dout_inter.reshape(a * n, k_out),
+            t, s_max=s_max,
+        )
+        return flat.reshape(a, n, r)
+    if backend == "pallas":
+        contrib = kops.spike_deliver(
+            flat_spikes, net.src_inter.reshape(a * n, k),
+            net.w_inter.reshape(a * n, k), net.delay_inter.reshape(a * n, k),
+            steps_lo=net.steps_lo_inter, r_span=net.r_span_inter,
+        )
+        flat = kops.apply_contrib(
+            ring.reshape(a * n, r), contrib, t, net.steps_lo_inter)
+        return flat.reshape(a, n, r)
+    vals = net.w_inter * flat_spikes[net.src_inter]
+    return _deposit(ring, vals, net.delay_inter, t,
+                    onehot=(backend == "onehot"))
+
+
+# ---------------------------------------------------------------------------
+# Sparse id packets: the distributed event path's wire format.
+# ---------------------------------------------------------------------------
+
+
+def compact_fired(
+    fired: jax.Array,   # [...] bool
+    ids: jax.Array,     # [...] int32 payload per neuron (e.g. global ids)
+    *,
+    s_max: int,
+    invalid: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Compact fired neurons into a fixed-size id packet.
+
+    Returns ``(packet [s_max] int32, count scalar int32)``. The packet holds
+    ``ids`` of the first ``s_max`` fired neurons, padded with ``invalid``
+    (choose it >= the receiving table's row count so
+    :func:`repro.kernels.ops.event_deliver_ids` absorbs it). ``count`` is the
+    *true* number of fired neurons; ``count > s_max`` means the packet
+    dropped spikes -- the engines accumulate that spill into
+    ``SimState.overflow`` instead of failing silently.
+    """
+    f = fired.reshape(-1)
+    n = f.shape[0]
+    pos = jnp.nonzero(f, size=s_max, fill_value=n)[0]
+    ok = pos < n
+    packet = jnp.where(ok, ids.reshape(-1)[jnp.where(ok, pos, 0)],
+                       jnp.int32(invalid))
+    return packet.astype(jnp.int32), f.sum(dtype=jnp.int32)

@@ -1,6 +1,6 @@
 """Distributed engine: the structure-aware scheme on a (pod, data, model) mesh.
 
-Placement (DESIGN.md §4):
+Placement:
 
 * **structure-aware**: the area dimension ``A`` is sharded over the slow axes
   ``(pod, data)``; each area's ``n_pad`` neurons are sharded over the fast
@@ -15,6 +15,17 @@ Placement (DESIGN.md §4):
 
 Both produce spike trains bit-identical to the single-host reference engine
 (tests/test_distributed.py runs them in an 8-device subprocess).
+
+Delivery inside the shard_map window bodies goes through the shared dispatch
+in :mod:`repro.core.delivery` (``EngineConfig.delivery_backend``). The dense
+backends (onehot/scatter/pallas) exchange bit-packed spike vectors
+(``comm.gather_*``); the ``event`` backend instead compacts fired neurons
+into fixed-size *id packets* before each exchange -- NEST's sparse wire
+format, the one the paper contrasts with dense vectors -- and the receive
+side scatters the ids through replicated outgoing tables
+(``ops.event_deliver_ids``). Packet bounds are static (``s_max``); spills
+are counted in ``SimState.overflow`` (any nonzero value means spikes were
+dropped and the bounds must be raised).
 """
 
 from __future__ import annotations
@@ -27,17 +38,20 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
 
+from repro.compat import shard_map
+from repro.kernels import ops as kops
 from repro.core.areas import MultiAreaSpec
 from repro.core.connectivity import Network
-from repro.core import comm, neuron as neuron_lib, ring_buffer
+from repro.core import comm, delivery as delivery_lib, neuron as neuron_lib
+from repro.core import ring_buffer
 from repro.core.engine import (
     CONVENTIONAL,
     STRUCTURE_AWARE,
     Engine,
     EngineConfig,
     SimState,
+    make_fused_lif_update,
 )
 
 __all__ = [
@@ -60,19 +74,32 @@ def network_pspecs(mesh: Mesh, schedule: str, like: Network | None = None) -> Ne
     """A Network-shaped pytree of PartitionSpecs for the given schedule.
 
     ``like`` supplies the static metadata fields (pytree structure must match
-    exactly when used as shard_map in_specs).
+    exactly when used as shard_map in_specs). When ``like`` carries outgoing
+    (event-path) tables they are kept device-resident in full: intra tables
+    replicated over the subgroup (each device scans its areas' complete fired
+    lists), inter tables replicated everywhere (each device scans the global
+    packet) -- the NEST pattern where every rank receives all spikes and
+    delivers to its local targets.
     """
     if schedule == STRUCTURE_AWARE:
         area = P(_area_axes(mesh), _subgroup_axis(mesh))
         syn = P(_area_axes(mesh), _subgroup_axis(mesh), None)
+        out_intra = P(_area_axes(mesh), None, None)
     else:  # conventional round-robin analogue: slice every area everywhere
         area = P(None, tuple(mesh.axis_names))
         syn = P(None, tuple(mesh.axis_names), None)
+        out_intra = P(None, None, None)
     arrays = dict(
         alive=area, rate_hz=area,
         src_intra=syn, w_intra=syn, delay_intra=syn,
         src_inter=syn, w_inter=syn, delay_inter=syn,
     )
+    if like is None or like.tgt_intra is not None:
+        arrays.update(tgt_intra=out_intra, wout_intra=out_intra,
+                      dout_intra=out_intra)
+    if like is None or like.tgt_inter is not None:
+        rep = P(None, None, None)
+        arrays.update(tgt_inter=rep, wout_inter=rep, dout_inter=rep)
     if like is not None:
         return dataclasses.replace(like, **arrays)
     return Network(
@@ -92,7 +119,8 @@ def state_pspecs(mesh: Mesh, schedule: str, neuron_model: str) -> SimState:
         nstate = neuron_lib.LIFState(v=area, i_syn=area, refrac=area)
     else:
         nstate = neuron_lib.IafState(countdown=area)
-    return SimState(neuron=nstate, ring=ring, t=P(), spike_count=area)
+    return SimState(neuron=nstate, ring=ring, t=P(), spike_count=area,
+                    overflow=P())
 
 
 def shard_network(net: Network, mesh: Mesh, schedule: str) -> Network:
@@ -138,57 +166,60 @@ def make_dist_engine(
     """Build the distributed engine. ``net`` may be host-resident; callers on
     real hardware should pass ``shard_network(net, mesh, schedule)``."""
     cfg = config
+    backend = cfg.backend
     _validate(net, mesh, cfg.schedule)
+    if backend == "event" and net.tgt_intra is None:
+        raise ValueError("event delivery needs build_network(outgoing=True)")
     D = net.delay_ratio
     A, n_pad = net.alive.shape
     R = net.ring_len
     area_axes = _area_axes(mesh)
     subgroup = _subgroup_axis(mesh)
     all_axes = tuple(mesh.axis_names)
+    n_dev = mesh.size
     lif_params = cfg.lif
     if abs(lif_params.dt_ms - net.dt_ms) > 1e-12:
         lif_params = dataclasses.replace(lif_params, dt_ms=net.dt_ms)
+    fused_lif = make_fused_lif_update(lif_params) if cfg.fused else None
 
     drive_scale = spec.ext_rate_hz / 2.5
+
+    # Static event-packet bounds (see delivery.event_bounds): per-device
+    # shares of the single-host bounds, floored so tiny shards keep headroom.
+    if backend == "event":
+        s_max_area, s_max_all = delivery_lib.event_bounds(
+            net, headroom=cfg.s_max_headroom, floor=cfg.s_max_floor)
+        gsz = mesh.shape[subgroup]
+        s_max_loc = max(cfg.s_max_floor, -(-s_max_area // gsz))
+        s_max_dev = max(cfg.s_max_floor, -(-s_max_all // n_dev))
+    else:
+        s_max_loc = s_max_dev = 0
 
     def _update(neuron_state, i_in, t, alive, rate_hz, gids):
         if cfg.neuron_model == "lif":
             drive = neuron_lib.poisson_drive(
                 cfg.seed, t, gids, rate_hz * drive_scale, net.dt_ms, spec.w_ext
             )
+            if fused_lif is not None:
+                return fused_lif(neuron_state, i_in + drive, alive)
             return neuron_lib.lif_update(neuron_state, i_in + drive, alive, lif_params)
         return neuron_lib.ignore_and_fire_update(
             neuron_state, i_in, alive, rate_hz, net.dt_ms
         )
 
-    def _deposit(ring, vals, delays, t):
-        a, n, r = ring.shape
-        k = vals.shape[-1]
-        out = ring_buffer.deposit_scatter(
-            ring.reshape(a * n, r), vals.reshape(a * n, k),
-            delays.reshape(a * n, k), t,
-        )
-        return out.reshape(a, n, r)
-
-    def _deliver_intra(ring, spikes_area_f32, lnet, t):
-        """spikes_area_f32: [A_loc, n_pad] complete per-area vectors."""
-        vals = lnet.w_intra * jax.vmap(lambda s, i: s[i])(
-            spikes_area_f32, lnet.src_intra
-        )
-        return _deposit(ring, vals, lnet.delay_intra, t)
-
-    def _deliver_inter(ring, spikes_flat_f32, lnet, t):
-        """spikes_flat_f32: [A * n_pad] global spike vector for one cycle."""
-        if lnet.src_inter.shape[-1] == 0:
-            return ring
-        vals = lnet.w_inter * spikes_flat_f32[lnet.src_inter]
-        return _deposit(ring, vals, lnet.delay_inter, t)
+    def _axis_offset(axes, block: int):
+        """This device's row offset for a dim sharded over ``axes`` (row-major)."""
+        idx = jnp.int32(0)
+        for ax in axes:
+            idx = idx * mesh.shape[ax] + jax.lax.axis_index(ax)
+        return idx * block
 
     # ---------------- shard_map window bodies --------------------------------
 
     def window_struct(state: SimState, lnet: Network, gids: jax.Array):
         """Structure-aware: D local cycles + one lumped global exchange."""
         t0 = state.t
+        a_loc, n_loc = lnet.alive.shape
 
         def cycle(st, _):
             i_in, ring = ring_buffer.read_and_clear(st.ring, st.t)
@@ -196,31 +227,106 @@ def make_dist_engine(
                 st.neuron, i_in, st.t, lnet.alive, lnet.rate_hz, gids
             )
             s8 = spikes.astype(jnp.int8)
-            # Local pathway: complete this device's areas over the subgroup.
-            area_spikes = comm.gather_area(s8, subgroup_axis=subgroup)
-            ring = _deliver_intra(ring, area_spikes.astype(jnp.float32), lnet, st.t)
+            over = st.overflow
+            if backend == "event" and lnet.src_intra.shape[-1] > 0:
+                # Local pathway, sparse wire: compact fired neurons into
+                # per-area id packets *before* the subgroup exchange.
+                noff = jax.lax.axis_index(subgroup) * n_loc
+                ids = noff + jnp.arange(n_loc, dtype=jnp.int32)
+                packets, counts = jax.vmap(
+                    lambda f: delivery_lib.compact_fired(
+                        f, ids, s_max=s_max_loc, invalid=n_pad)
+                )(spikes)
+                over_local = jnp.maximum(counts - s_max_loc, 0).sum()
+                over = over + jax.lax.psum(over_local, all_axes)
+                wire = jax.lax.all_gather(
+                    packets, subgroup, axis=1, tiled=True)  # [A_loc, gsz*s]
+
+                # Scatter straight into this device's neuron window of each
+                # area: within-area target -> local row, -1 if not ours.
+                def to_local(i):
+                    il = i - noff
+                    keep = (il >= 0) & (il < n_loc)
+                    return jnp.where(keep, il, -1)
+
+                ring = jax.vmap(
+                    lambda r, idl, tg, w, d: kops.event_deliver_ids(
+                        r, idl, tg, w, d, st.t, tgt_map=to_local)
+                )(ring, wire, lnet.tgt_intra, lnet.wout_intra,
+                  lnet.dout_intra)
+            elif backend != "event":
+                # Local pathway, dense wire: complete this device's areas
+                # over the subgroup, then deliver via the shared dispatch.
+                area_spikes = comm.gather_area(s8, subgroup_axis=subgroup)
+                ring = delivery_lib.deliver_intra(
+                    ring, area_spikes.astype(jnp.float32), lnet, st.t,
+                    backend=backend)
             st = SimState(
                 neuron=nstate, ring=ring, t=st.t + 1,
                 spike_count=st.spike_count + spikes.astype(jnp.int32),
+                overflow=over,
             )
             return st, s8
 
         state, block = jax.lax.scan(cycle, state, None, length=D)
 
+        if lnet.src_inter.shape[-1] == 0:
+            return state, block
+
         # Global pathway: one collective for the whole window (paper Fig. 3).
+        if backend == "event":
+            # Sparse wire: one id packet per cycle of the window.
+            packets, counts = jax.vmap(
+                lambda sp: delivery_lib.compact_fired(
+                    sp != 0, gids, s_max=s_max_dev, invalid=A * n_pad)
+            )(block)                                     # [D, s], [D]
+            over = state.overflow + jax.lax.psum(
+                jnp.maximum(counts - s_max_dev, 0).sum(), all_axes)
+            wire = jax.lax.all_gather(
+                packets, all_axes, axis=1, tiled=True)   # [D, n_dev*s]
+            k_out = lnet.tgt_inter.shape[-1]
+            tgt_f = lnet.tgt_inter.reshape(A * n_pad, k_out)
+            w_f = lnet.wout_inter.reshape(A * n_pad, k_out)
+            d_f = lnet.dout_inter.reshape(A * n_pad, k_out)
+
+            # Scatter each cycle's global packet straight into this device's
+            # ring shard: global target id -> local row, -1 if another
+            # device owns it. No full-network buffer is ever materialised.
+            aoff = _axis_offset(area_axes, a_loc)
+            noff = _axis_offset((subgroup,), n_loc)
+
+            def to_local(g):
+                al = g // n_pad - aoff
+                il = g % n_pad - noff
+                keep = (al >= 0) & (al < a_loc) & (il >= 0) & (il < n_loc)
+                return jnp.where(keep, al * n_loc + il, -1)
+
+            def deliver_s(s, ring_flat):
+                return kops.event_deliver_ids(
+                    ring_flat, wire[s], tgt_f, w_f, d_f, t0 + s,
+                    tgt_map=to_local)
+
+            ring_flat = jax.lax.fori_loop(
+                0, D, deliver_s, state.ring.reshape(a_loc * n_loc, R))
+            return dataclasses.replace(
+                state, ring=ring_flat.reshape(a_loc, n_loc, R),
+                overflow=over), block
+
         gblock = comm.gather_global(
             block, area_axes=area_axes, subgroup_axis=subgroup
         )  # [D, A, n_pad] int8
         gflat = gblock.astype(jnp.float32).reshape(D, A * n_pad)
 
         def deliver_s(s, ring):
-            return _deliver_inter(ring, gflat[s], lnet, t0 + s)
+            return delivery_lib.deliver_inter(
+                ring, gflat[s], lnet, t0 + s, backend=backend)
 
         ring = jax.lax.fori_loop(0, D, deliver_s, state.ring)
         return dataclasses.replace(state, ring=ring), block
 
     def window_conv(state: SimState, lnet: Network, gids: jax.Array):
         """Conventional: global exchange every cycle (round-robin analogue)."""
+        a_loc, n_loc = lnet.alive.shape  # a_loc == A; n_loc = n_pad / n_dev
 
         def cycle(st, _):
             i_in, ring = ring_buffer.read_and_clear(st.ring, st.t)
@@ -228,15 +334,64 @@ def make_dist_engine(
                 st.neuron, i_in, st.t, lnet.alive, lnet.rate_hz, gids
             )
             s8 = spikes.astype(jnp.int8)
-            # One global all_gather per cycle: every device needs the full
-            # vector because its neurons' sources are scattered everywhere.
-            full = comm.gather_full(s8, all_axes)
-            full_f = full.astype(jnp.float32)  # [A, n_pad]
-            ring = _deliver_intra(ring, full_f, lnet, st.t)
-            ring = _deliver_inter(ring, full_f.reshape(-1), lnet, st.t)
+            over = st.overflow
+            if backend == "event":
+                # One sparse global exchange feeds both pathways.
+                packet, count = delivery_lib.compact_fired(
+                    spikes, gids, s_max=s_max_dev, invalid=A * n_pad)
+                over = over + jax.lax.psum(
+                    jnp.maximum(count - s_max_dev, 0), all_axes)
+                wire = jax.lax.all_gather(
+                    packet, all_axes, axis=0, tiled=True)  # [n_dev*s]
+                noff = _axis_offset(all_axes, n_loc)
+
+                # Both scatters go straight into this device's neuron window
+                # (rows [noff, noff + n_loc) of every area) -- no full
+                # [A, n_pad, R] buffer.
+                def win_local(i):
+                    il = i - noff
+                    keep = (il >= 0) & (il < n_loc)
+                    return jnp.where(keep, il, -1)
+
+                if lnet.src_intra.shape[-1] > 0:
+                    # Short-range: per-area within-area ids from the list.
+                    areas = jnp.arange(A, dtype=jnp.int32)
+                    ids_a = jnp.where(
+                        wire[None, :] // n_pad == areas[:, None],
+                        wire[None, :] % n_pad, n_pad)       # [A, S]
+                    ring = jax.vmap(
+                        lambda r, idl, tg, w, d: kops.event_deliver_ids(
+                            r, idl, tg, w, d, st.t, tgt_map=win_local)
+                    )(ring, ids_a, lnet.tgt_intra, lnet.wout_intra,
+                      lnet.dout_intra)
+                # Long-range: global target id -> (area row, local window).
+                if lnet.src_inter.shape[-1] > 0:
+                    k_out = lnet.tgt_inter.shape[-1]
+
+                    def glob_local(g):
+                        il = g % n_pad - noff
+                        keep = (il >= 0) & (il < n_loc)
+                        return jnp.where(keep, (g // n_pad) * n_loc + il, -1)
+
+                    ring = kops.event_deliver_ids(
+                        ring.reshape(A * n_loc, R), wire,
+                        lnet.tgt_inter.reshape(A * n_pad, k_out),
+                        lnet.wout_inter.reshape(A * n_pad, k_out),
+                        lnet.dout_inter.reshape(A * n_pad, k_out),
+                        st.t, tgt_map=glob_local).reshape(A, n_loc, R)
+            else:
+                # One global all_gather per cycle: every device needs the full
+                # vector because its neurons' sources are scattered everywhere.
+                full = comm.gather_full(s8, all_axes)
+                full_f = full.astype(jnp.float32)  # [A, n_pad]
+                ring = delivery_lib.deliver_intra(
+                    ring, full_f, lnet, st.t, backend=backend)
+                ring = delivery_lib.deliver_inter(
+                    ring, full_f.reshape(-1), lnet, st.t, backend=backend)
             st = SimState(
                 neuron=nstate, ring=ring, t=st.t + 1,
                 spike_count=st.spike_count + spikes.astype(jnp.int32),
+                overflow=over,
             )
             return st, s8
 
@@ -283,6 +438,7 @@ def make_dist_engine(
             ring=jnp.zeros((A, n_pad, R), jnp.float32),
             t=jnp.int32(0),
             spike_count=jnp.zeros((A, n_pad), jnp.int32),
+            overflow=jnp.int32(0),
         )
         shardings = jax.tree.map(
             lambda s: NamedSharding(mesh, s), st_specs,

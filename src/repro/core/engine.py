@@ -14,6 +14,11 @@ sequence (Fig. 3):
 Both schedules produce **bit-identical** spike trains: delivery weights live on
 an exact 1/256 grid, so f32 ring accumulation is associative-exact, and the
 external drive is a counter-based function of absolute model time.
+
+The per-cycle *deliver* hot path is backend-selectable
+(``EngineConfig.delivery_backend``) and shared with the distributed engine --
+see :mod:`repro.core.delivery` for the four backends and their cost
+trade-offs.
 """
 
 from __future__ import annotations
@@ -27,6 +32,7 @@ import jax.numpy as jnp
 
 from repro.core.areas import MultiAreaSpec
 from repro.core.connectivity import Network
+from repro.core import delivery as delivery_lib
 from repro.core import neuron as neuron_lib
 from repro.core import ring_buffer
 
@@ -44,18 +50,24 @@ class EngineConfig:
     lif: neuron_lib.LIFParams = dataclasses.field(
         default_factory=neuron_lib.LIFParams
     )
-    # When True use the one-hot-einsum deposit (reference semantics, small K);
-    # when False use scatter-add (production / large K). Results are identical.
+    # The per-cycle deliver hot path: 'onehot' | 'scatter' | 'pallas' |
+    # 'event' (see repro.core.delivery). The empty string derives the backend
+    # from the legacy knobs below, which predate the unified dispatch and are
+    # kept so existing configs/tests keep meaning the same thing.
+    delivery_backend: str = ""
+    # Legacy: one-hot-einsum (True) vs scatter-add (False) deposit.
     deposit_onehot: bool = True
-    # 'dense': gather-matvec over every synapse each cycle (paper-faithful
-    # baseline; what the Pallas kernel implements). 'event': compact the
-    # fired neurons and scatter their outgoing targets -- exploits the
-    # 0.025%-per-cycle firing sparsity for a >1000x multiply reduction
-    # (EXPERIMENTS.md §Perf). Requires build_network(outgoing=True).
+    # Legacy: 'dense' (gather-matvec) vs 'event' (compact + scatter).
     delivery: str = "dense"
-    # Event-buffer headroom: s_max = headroom x expected spikes/cycle + floor
+    # Use the fused Pallas LIF kernel (kernels.ops.lif_update) for the update
+    # phase. None = enable exactly when delivery_backend is 'pallas' (the
+    # all-kernel cycle); the flag exists so the fused update can be tested
+    # against the jnp chain under every backend.
+    fused_update: bool | None = None
+    # Event-buffer headroom: s_max = headroom x expected spikes/cycle + slack
     # (cf. NEST's dynamic spike-register resizing; static here). The event
-    # path's cost is s_max-bound, so the bound tracks the expected rate.
+    # path's cost is s_max-bound, so the bound tracks the expected rate;
+    # overruns are counted in SimState.overflow.
     s_max_headroom: float = 8.0
     s_max_floor: int = 16
 
@@ -66,6 +78,27 @@ class EngineConfig:
             raise ValueError(f"unknown schedule {self.schedule!r}")
         if self.delivery not in ("dense", "event"):
             raise ValueError(f"unknown delivery {self.delivery!r}")
+        if self.delivery_backend not in ("",) + delivery_lib.BACKENDS:
+            raise ValueError(
+                f"unknown delivery_backend {self.delivery_backend!r} "
+                f"(expected one of {delivery_lib.BACKENDS})"
+            )
+
+    @property
+    def backend(self) -> str:
+        """The resolved delivery backend (legacy knobs folded in)."""
+        if self.delivery_backend:
+            return self.delivery_backend
+        if self.delivery == "event":
+            return "event"
+        return "onehot" if self.deposit_onehot else "scatter"
+
+    @property
+    def fused(self) -> bool:
+        """Whether the update phase runs the fused Pallas LIF kernel."""
+        if self.fused_update is None:
+            return self.backend == "pallas"
+        return self.fused_update
 
 
 @jax.tree_util.register_dataclass
@@ -75,6 +108,11 @@ class SimState:
     ring: jax.Array           # [A, n_pad, R]
     t: jax.Array              # scalar int32, absolute cycle index
     spike_count: jax.Array    # [A, n_pad] int32 cumulative spikes
+    # Scalar int32: spikes dropped because an event-path packet exceeded its
+    # static s_max bound (0 unless delivery_backend == 'event'; any nonzero
+    # value means the run is no longer exact and s_max_headroom/floor must be
+    # raised).
+    overflow: Any = None
 
 
 class Engine(NamedTuple):
@@ -91,23 +129,23 @@ class Engine(NamedTuple):
     window_raw: Callable | None = None
 
 
-def _gather_intra(spikes_f32: jax.Array, src_intra: jax.Array) -> jax.Array:
-    """[A, N] spikes, [A, N, K] per-area source indices -> [A, N, K] values."""
-    return jax.vmap(lambda s, idx: s[idx])(spikes_f32, src_intra)
+def make_fused_lif_update(params: neuron_lib.LIFParams):
+    """An ``(state, i_in, alive) -> (state', spikes)`` closure over the fused
+    Pallas kernel, signature-compatible with :func:`repro.core.neuron.lif_update`."""
+    from repro.kernels import ops as kops
 
+    kw = dict(
+        p11=params.p11, p21=params.p21, p22=params.p22,
+        v_th=params.v_th_mv, v_reset=params.v_reset_mv,
+        t_ref_steps=params.t_ref_steps,
+    )
 
-def _gather_inter(spikes_f32: jax.Array, src_inter: jax.Array) -> jax.Array:
-    """[A, N] spikes, [A, N, K] *global* source ids -> [A, N, K] values."""
-    return spikes_f32.reshape(-1)[src_inter]
+    def update(state, i_in, alive):
+        v, i_syn, refrac, spikes = kops.lif_update(
+            state.v, state.i_syn, state.refrac, i_in, alive, **kw)
+        return neuron_lib.LIFState(v=v, i_syn=i_syn, refrac=refrac), spikes
 
-
-def _deposit(ring, vals, delays, t, *, onehot: bool):
-    a, n, r = ring.shape
-    k = vals.shape[-1]
-    fn = ring_buffer.deposit if onehot else ring_buffer.deposit_scatter
-    out = fn(ring.reshape(a * n, r), vals.reshape(a * n, k),
-             delays.reshape(a * n, k), t)
-    return out.reshape(a, n, r)
+    return update
 
 
 def make_engine(
@@ -123,11 +161,13 @@ def make_engine(
     D = net.delay_ratio
     A, n_pad = net.alive.shape
     cfg = config
-    if cfg.delivery == "event" and net.tgt_intra is None:
+    backend = cfg.backend
+    if backend == "event" and net.tgt_intra is None:
         raise ValueError("event delivery needs build_network(outgoing=True)")
     lif_params = cfg.lif
     if abs(lif_params.dt_ms - net.dt_ms) > 1e-12:
         lif_params = dataclasses.replace(lif_params, dt_ms=net.dt_ms)
+    fused_lif = make_fused_lif_update(lif_params) if cfg.fused else None
 
     # Per-neuron external drive rate for LIF: scaled by the area's target rate
     # relative to the 2.5 Hz reference, which induces the across-area activity
@@ -140,6 +180,8 @@ def make_engine(
             drive = neuron_lib.poisson_drive(
                 cfg.seed, t, gids, drive_rate, net.dt_ms, spec.w_ext
             )
+            if fused_lif is not None:
+                return fused_lif(neuron_state, i_in + drive, net.alive)
             return neuron_lib.lif_update(
                 neuron_state, i_in + drive, net.alive, lif_params
             )
@@ -147,43 +189,29 @@ def make_engine(
             neuron_state, i_in, net.alive, net.rate_hz, net.dt_ms
         )
 
-    mean_rate = float(jnp.asarray(net.rate_hz).mean()) if hasattr(
-        net.rate_hz, "mean") else 2.5
-    exp_area = n_pad * mean_rate * net.dt_ms * 1e-3
-    s_max_area = max(cfg.s_max_floor, int(cfg.s_max_headroom * exp_area + 8))
-    s_max_all = max(4 * cfg.s_max_floor,
-                    int(cfg.s_max_headroom * exp_area * A + 32))
+    s_max_area, s_max_all = delivery_lib.event_bounds(
+        net, headroom=cfg.s_max_headroom, floor=cfg.s_max_floor)
 
     def _deliver_intra(ring, spikes_f32, t):
-        if cfg.delivery == "event":
-            from repro.kernels import ops as kops
-
-            return jax.vmap(
-                lambda r, sp, tg, w, d: kops.event_deliver(
-                    r, sp > 0, tg, w, d, t, s_max=s_max_area)
-            )(ring, spikes_f32, net.tgt_intra, net.wout_intra, net.dout_intra)
-        vals = net.w_intra * _gather_intra(spikes_f32, net.src_intra)
-        return _deposit(ring, vals, net.delay_intra, t, onehot=cfg.deposit_onehot)
+        return delivery_lib.deliver_intra(
+            ring, spikes_f32, net, t, backend=backend, s_max=s_max_area)
 
     def _deliver_inter(ring, spikes_f32, t):
-        if net.k_inter == 0:
-            return ring
-        if cfg.delivery == "event":
-            from repro.kernels import ops as kops
+        return delivery_lib.deliver_inter(
+            ring, spikes_f32.reshape(-1), net, t,
+            backend=backend, s_max=s_max_all)
 
-            r = ring.shape[-1]
-            k_out = net.tgt_inter.shape[-1]
-            flat = kops.event_deliver(
-                ring.reshape(A * n_pad, r),
-                spikes_f32.reshape(-1) > 0,
-                net.tgt_inter.reshape(A * n_pad, k_out),
-                net.wout_inter.reshape(A * n_pad, k_out),
-                net.dout_inter.reshape(A * n_pad, k_out),
-                t, s_max=s_max_all,
-            )
-            return flat.reshape(A, n_pad, r)
-        vals = net.w_inter * _gather_inter(spikes_f32, net.src_inter)
-        return _deposit(ring, vals, net.delay_inter, t, onehot=cfg.deposit_onehot)
+    def _overflow(spikes, deliver_inter_now: bool):
+        """Spikes dropped by the event path's static packet bounds."""
+        if backend != "event":
+            return jnp.int32(0)
+        per_area = spikes.sum(axis=-1, dtype=jnp.int32)   # [A]
+        over = jnp.int32(0)
+        if net.k_intra > 0:
+            over = jnp.maximum(per_area - s_max_area, 0).sum()
+        if deliver_inter_now and net.k_inter > 0:
+            over = over + jnp.maximum(per_area.sum() - s_max_all, 0)
+        return over
 
     def _cycle(state: SimState, deliver_inter_now: bool):
         """deliver -> update -> collocate for one dt step."""
@@ -198,6 +226,7 @@ def make_engine(
             ring=ring,
             t=state.t + 1,
             spike_count=state.spike_count + spikes.astype(jnp.int32),
+            overflow=state.overflow + _overflow(spikes, deliver_inter_now),
         )
         return new_state, spikes
 
@@ -220,11 +249,18 @@ def make_engine(
         # The lumped 'global communication': deliver the whole [D, A, N] block.
         # Every inter-area delay is >= D, so slot (t0+s+d) is strictly in the
         # future of the last cycle read -- causality is preserved (paper §2.1).
-        def deliver_s(s, ring):
-            return _deliver_inter(ring, spikes[s].astype(jnp.float32), t0 + s)
+        def deliver_s(s, carry):
+            ring, over = carry
+            sp = spikes[s]
+            ring = _deliver_inter(ring, sp.astype(jnp.float32), t0 + s)
+            if backend == "event" and net.k_inter > 0:
+                over = over + jnp.maximum(
+                    sp.sum(dtype=jnp.int32) - s_max_all, 0)
+            return ring, over
 
-        ring = jax.lax.fori_loop(0, D, deliver_s, state.ring)
-        return dataclasses.replace(state, ring=ring), spikes
+        ring, over = jax.lax.fori_loop(
+            0, D, deliver_s, (state.ring, state.overflow))
+        return dataclasses.replace(state, ring=ring, overflow=over), spikes
 
     window_jit = jax.jit(window)
 
@@ -240,6 +276,7 @@ def make_engine(
             ring=jnp.zeros((A, n_pad, net.ring_len), jnp.float32),
             t=jnp.int32(0),
             spike_count=jnp.zeros((A, n_pad), jnp.int32),
+            overflow=jnp.int32(0),
         )
 
     @functools.partial(jax.jit, static_argnums=1)

@@ -39,6 +39,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
+
 from repro.configs.common import SHAPES, ShapeSpec
 from repro.configs.registry import arch_skips, get_arch, list_archs
 from repro.launch.hlo_stats import analyze_hlo
@@ -160,7 +162,7 @@ def dryrun_lm_cell(arch_id: str, shape_name: str, multi_pod: bool,
     fsdp_axis = "data" if bundle.cfg.param_count() >= 1e9 else None
     t0 = time.time()
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         if shape.kind == "train":
             hier_cfg = None
             if hierarchical and multi_pod:
@@ -266,10 +268,12 @@ def dryrun_snn_cell(schedule: str, multi_pod: bool, scale: float = 1.0) -> dict:
             "ring": sds((A, n_pad, R), jnp.float32),
             "t": sds((), jnp.int32),
             "spike_count": sds((A, n_pad), jnp.int32),
+            "overflow": sds((), jnp.int32),
         },
         {
             "neuron": st_specs.neuron, "ring": st_specs.ring,
             "t": st_specs.t, "spike_count": st_specs.spike_count,
+            "overflow": st_specs.overflow,
         },
         is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)),
     )
@@ -283,7 +287,7 @@ def dryrun_snn_cell(schedule: str, multi_pod: bool, scale: float = 1.0) -> dict:
     gids_sds = shard(sds((A, n_pad), jnp.int32), gid_spec)
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         lowered = jax.jit(eng.window_raw).lower(state_sds, net_in, gids_sds)
         compiled = lowered.compile()
     row.update(_analyze(lowered, compiled, n_devices))

@@ -37,7 +37,12 @@ def main() -> None:
                     choices=["conventional", "structure_aware"])
     ap.add_argument("--neuron", default=None,
                     choices=[None, "lif", "ignore_and_fire"])
-    ap.add_argument("--delivery", default="dense", choices=["dense", "event"])
+    ap.add_argument("--delivery", default="dense", choices=["dense", "event"],
+                    help="legacy knob; prefer --backend")
+    ap.add_argument("--backend", default="",
+                    choices=["", "onehot", "scatter", "pallas", "event"],
+                    help="delivery backend (repro.core.delivery); "
+                         "empty derives from --delivery")
     ap.add_argument("--seed", type=int, default=12,
                     help="paper seeds: 12, 654, 91856")
     ap.add_argument("--compare", action="store_true",
@@ -52,19 +57,19 @@ def main() -> None:
             n_areas=args.areas, n_per_area=args.n_per_area,
             k_intra=args.k // 2, k_inter=args.k // 2)
         neuron = args.neuron or "ignore_and_fire"
+    needs_outgoing = args.backend == "event" or args.delivery == "event"
     print(f"{args.model}: {spec.n_total:,} neurons / {spec.n_areas} areas, "
           f"K={spec.k_total}, D={spec.delay_ratio}, neuron={neuron}, "
-          f"delivery={args.delivery}, seed={args.seed}")
+          f"backend={args.backend or args.delivery}, seed={args.seed}")
 
-    net = build_network(spec, seed=args.seed,
-                        outgoing=args.delivery == "event")
+    net = build_network(spec, seed=args.seed, outgoing=needs_outgoing)
     schedules = ([args.schedule] if not args.compare
                  else ["conventional", "structure_aware"])
     spikes = {}
     for sched in schedules:
         eng = make_engine(net, spec, EngineConfig(
             neuron_model=neuron, schedule=sched, delivery=args.delivery,
-            deposit_onehot=False, seed=42))
+            delivery_backend=args.backend, deposit_onehot=False, seed=42))
         st = eng.init()
         n_windows = spec.steps_for(args.t_ms) // spec.delay_ratio
         st, _ = eng.window(st)  # compile
@@ -76,9 +81,11 @@ def main() -> None:
         t_s = float(st.t) * spec.dt_ms / 1000.0
         rate = float(st.spike_count.sum()) / (spec.n_total * t_s)
         rtf = wall / ((n_windows - 1) * spec.delay_ratio * spec.dt_ms / 1000)
+        overflow = int(st.overflow)
         print(f"  {sched:16s}: {wall:6.2f} s wall, RTF {rtf:8.1f}, "
               f"mean rate {rate:5.2f} Hz, "
-              f"{int(st.spike_count.sum()):,} spikes")
+              f"{int(st.spike_count.sum()):,} spikes"
+              + (f", OVERFLOW {overflow} (raise s_max!)" if overflow else ""))
         spikes[sched] = np.asarray(st.spike_count)
 
     if args.compare:

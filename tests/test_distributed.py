@@ -56,6 +56,48 @@ def test_dist_engine_equivalence_both_schedules():
     """))
 
 
+def test_dist_engine_delivery_backend_equivalence():
+    """Tentpole: every delivery backend, run through the shard_map window
+    bodies (2x4 mesh), reproduces the single-host reference bitwise. The
+    event backend exchanges sparse id packets instead of dense vectors and
+    must report zero overflow."""
+    print(_run("""
+        import numpy as np, jax
+        from repro.core.areas import mam_benchmark_spec
+        from repro.core.connectivity import build_network
+        from repro.core.engine import make_engine, EngineConfig
+        from repro.core.dist_engine import make_dist_engine
+
+        spec = mam_benchmark_spec(n_areas=4, n_per_area=32, k_intra=4,
+                                  k_inter=4, rate_hz=30.0)
+        net = build_network(spec, seed=12, size_multiple=8, outgoing=True)
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        ref = make_engine(net, spec, EngineConfig(
+            neuron_model="ignore_and_fire", schedule="conventional"))
+        s0 = ref.init()
+        blocks = []
+        for _ in range(6):
+            s0, b = ref.window(s0)
+            blocks.append(np.asarray(b))
+        assert sum(b.sum() for b in blocks) > 0
+        for backend in ("scatter", "pallas", "event"):
+            for sched in ("structure_aware", "conventional"):
+                eng = make_dist_engine(net, spec, mesh,
+                                       EngineConfig(
+                                           neuron_model="ignore_and_fire",
+                                           schedule=sched,
+                                           delivery_backend=backend,
+                                           s_max_floor=32))
+                st = eng.init()
+                for w in range(6):
+                    st, blk = eng.window(st)
+                    assert np.array_equal(np.asarray(blk).astype(bool),
+                                          blocks[w]), (backend, sched, w)
+                assert int(st.overflow) == 0, (backend, sched)
+        print("OK")
+    """))
+
+
 def test_dist_engine_multi_pod_mesh():
     """The 3-axis (pod, data, model) mesh also reproduces the reference."""
     print(_run("""
@@ -146,6 +188,7 @@ def test_moe_expert_parallel_lowering():
     print(_run("""
         import jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro import compat
         from repro.models.moe import MoEConfig, moe_apply, moe_init, moe_pspecs
 
         mesh = jax.make_mesh((2, 4), ("data", "model"))
@@ -158,7 +201,7 @@ def test_moe_expert_parallel_lowering():
         x = jax.device_put(
             jax.random.normal(jax.random.PRNGKey(1), (4, 16, 16)),
             NamedSharding(mesh, P("data", None, None)))
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             y, aux = jax.jit(lambda p, x: moe_apply(p, x, cfg))(p, x)
         assert y.shape == x.shape
         print("OK")
@@ -169,6 +212,7 @@ def test_pipeline_parallel_matches_sequential():
     """GPipe wrapper == sequential stage application (4-stage pipe)."""
     print(_run("""
         import jax, jax.numpy as jnp, numpy as np
+        from repro import compat
         from repro.train.pipeline import pipeline_apply
 
         mesh = jax.make_mesh((4,), ("pipe",))
@@ -181,7 +225,7 @@ def test_pipeline_parallel_matches_sequential():
             return jnp.tanh(x @ p["w"])
 
         x = jax.random.normal(jax.random.PRNGKey(1), (M, mb, d))
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             got = pipeline_apply(stage, params, x, mesh)
         # sequential reference
         ref = x

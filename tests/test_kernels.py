@@ -125,6 +125,41 @@ def test_event_deliver_equals_dense():
     assert np.allclose(np.asarray(got), want)
 
 
+def test_event_deliver_ids_matches_event_deliver():
+    """The id-packet entry point (the sparse wire format's receive side) ==
+    compacting locally and delivering: same scatter core, same result."""
+    rng = np.random.default_rng(11)
+    n_src, n_tgt, k_out, r, s_max = 120, 96, 6, 16, 32
+    spikes = jnp.asarray(rng.random(n_src) < 0.1)
+    tgt = jnp.asarray(rng.integers(0, n_tgt, (n_src, k_out)), jnp.int32)
+    w = jnp.asarray(np.round(rng.normal(0, 64, (n_src, k_out))) / 256.0,
+                    jnp.float32)
+    d = jnp.asarray(rng.integers(1, r - 1, (n_src, k_out)), jnp.int32)
+    ring = jnp.zeros((n_tgt, r), jnp.float32)
+    t = jnp.int32(3)
+    want = ops.event_deliver(ring, spikes, tgt, w, d, t, s_max=s_max)
+    # hand-built packet: fired ids in arbitrary order + sentinel padding
+    fired = np.flatnonzero(np.asarray(spikes))
+    rng.shuffle(fired)
+    packet = np.full(s_max, n_src, np.int32)
+    packet[: len(fired)] = fired
+    got = ops.event_deliver_ids(ring, jnp.asarray(packet), tgt, w, d, t)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_event_deliver_ids_absorbs_padding():
+    """Sentinel ids (>= N_src) and table padding rows (tgt=-1, w=0) must not
+    touch any real target row."""
+    n = 32
+    tgt = jnp.full((n, 2), -1, jnp.int32)        # all padding rows
+    w = jnp.zeros((n, 2), jnp.float32)
+    d = jnp.ones((n, 2), jnp.int32)
+    ring = jnp.zeros((n, 4), jnp.float32)
+    ids = jnp.asarray([0, 5, n, n + 7], jnp.int32)  # 2 real, 2 sentinel
+    out = ops.event_deliver_ids(ring, ids, tgt, w, d, jnp.int32(0))
+    assert float(jnp.abs(out).max()) == 0.0
+
+
 def test_event_deliver_s_max_bound():
     """With fewer events than s_max the result is exact; the buffer bound is
     the static analogue of NEST's spike-register resizing."""

@@ -5,7 +5,10 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.areas import mam_benchmark_spec
 from repro.core.connectivity import build_network

@@ -117,6 +117,100 @@ def test_delay_tiers_respected(small_net, small_spec):
     assert d_inter.max() < small_net.ring_len
 
 
+@pytest.mark.parametrize("backend", ["onehot", "scatter", "pallas", "event"])
+@pytest.mark.parametrize("schedule", ["conventional", "structure_aware"])
+def test_delivery_backends_bit_identical(backend, schedule):
+    """Tentpole invariant: every delivery backend (one-hot einsum, scatter-add,
+    delay-resolved Pallas kernel, event-driven compaction) produces spike
+    trains and ring buffers bit-identical to the reference -- weights on the
+    1/256 grid make ring accumulation order-exact, so the backends may
+    reorder sums freely."""
+    spec = mam_benchmark_spec(n_areas=4, n_per_area=48, k_intra=8, k_inter=8,
+                              rate_hz=30.0)
+    net = build_network(spec, seed=91856, outgoing=True)
+    ref = make_engine(net, spec, EngineConfig(
+        neuron_model="ignore_and_fire", schedule="conventional"))
+    eng = make_engine(net, spec, EngineConfig(
+        neuron_model="ignore_and_fire", schedule=schedule,
+        delivery_backend=backend, s_max_floor=64))
+    s0, st = ref.init(), eng.init()
+    for w in range(12):
+        s0, blk_ref = ref.window(s0)
+        st, blk = eng.window(st)
+        assert np.array_equal(np.asarray(blk), np.asarray(blk_ref)), (backend, w)
+        assert np.array_equal(np.asarray(s0.ring), np.asarray(st.ring)), (backend, w)
+    assert int(st.overflow) == 0, "event packets must not drop spikes here"
+    assert int(st.spike_count.sum()) > 0
+
+
+@pytest.mark.parametrize("backend", ["pallas", "event"])
+def test_delivery_backends_bit_identical_lif(backend):
+    """The two kernel-backed backends also reproduce the LIF reference
+    (float dynamics + Poisson drive) past the initial transient."""
+    spec = mam_benchmark_spec(n_areas=4, n_per_area=48, k_intra=8, k_inter=8)
+    net = build_network(spec, seed=12, outgoing=True)
+    ref = make_engine(net, spec, EngineConfig(
+        neuron_model="lif", schedule="conventional"))
+    eng = make_engine(net, spec, EngineConfig(
+        neuron_model="lif", schedule="structure_aware",
+        delivery_backend=backend, s_max_floor=192))
+    s0, st = ref.init(), eng.init()
+    for w in range(30):
+        s0, blk_ref = ref.window(s0)
+        st, blk = eng.window(st)
+        assert np.array_equal(np.asarray(blk), np.asarray(blk_ref)), (backend, w)
+    assert int(st.overflow) == 0
+    assert int(st.spike_count.sum()) > 0, "LIF must spike within 30 ms"
+
+
+def test_event_overflow_counter_reports_drops():
+    """An undersized event packet drops spikes *visibly*: SimState.overflow
+    counts them (the static analogue of NEST's spike-register resize)."""
+    spec = mam_benchmark_spec(n_areas=2, n_per_area=64, k_intra=4, k_inter=4,
+                              rate_hz=2000.0)
+    net = build_network(spec, seed=12, outgoing=True)
+    eng = make_engine(net, spec, EngineConfig(
+        neuron_model="ignore_and_fire", delivery_backend="event",
+        s_max_headroom=0.0, s_max_floor=1))
+    st = eng.init()
+    for _ in range(5):
+        st, _ = eng.window(st)
+    assert int(st.spike_count.sum()) > 0
+    assert int(st.overflow) > 0
+
+
+def test_fused_lif_update_matches_jnp_chain():
+    """The fused Pallas LIF kernel is a drop-in for the jnp update chain:
+    bit-identical trajectories under every backend."""
+    spec = mam_benchmark_spec(n_areas=4, n_per_area=48, k_intra=8, k_inter=8)
+    net = build_network(spec, seed=12)
+    plain = make_engine(net, spec, EngineConfig(
+        neuron_model="lif", delivery_backend="scatter", fused_update=False))
+    fused = make_engine(net, spec, EngineConfig(
+        neuron_model="lif", delivery_backend="scatter", fused_update=True))
+    sp, sf = plain.init(), fused.init()
+    for w in range(30):
+        sp, blk_p = plain.window(sp)
+        sf, blk_f = fused.window(sf)
+        assert np.array_equal(np.asarray(blk_p), np.asarray(blk_f)), w
+    assert int(sp.spike_count.sum()) > 0, "LIF must spike within 30 ms"
+
+
+def test_network_delay_window_metadata():
+    """build_network records the tight per-pathway delay windows that the
+    delay-resolved (Pallas) backend iterates over."""
+    spec = mam_benchmark_spec(n_areas=4, n_per_area=48, k_intra=8, k_inter=8)
+    net = build_network(spec, seed=12)
+    d_i, d_e = np.asarray(net.delay_intra), np.asarray(net.delay_inter)
+    assert net.steps_lo_intra == d_i.min()
+    assert net.steps_lo_intra + net.r_span_intra - 1 == d_i.max()
+    assert net.steps_lo_inter == d_e.min()
+    assert net.steps_lo_inter + net.r_span_inter - 1 == d_e.max()
+    # the windows are what keeps the kernel narrow: both well under the ring
+    assert net.r_span_intra < net.ring_len
+    assert net.steps_lo_inter >= net.delay_ratio
+
+
 def test_event_delivery_equals_dense_engine():
     """Beyond-paper optimization: event-driven delivery (compact fired
     neurons, scatter outgoing synapses) is bit-identical to the dense
