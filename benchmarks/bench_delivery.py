@@ -114,7 +114,16 @@ def bench_deliver_phase(name, spec, net, spikes, cycles: int, results: list):
 
 
 def bench_engine(name, spec, net, windows: int, results: list):
-    """End-to-end engine cycles/s (Engine.run: one dispatch, scan inside)."""
+    """End-to-end engine cycles/s (Engine.run: one dispatch, scan inside).
+
+    The four backend rows run the default structure-aware window -- since the
+    superstep refactor that is the fused D-cycle superstep (blocked ring
+    read/clear, live window buffer, single-pass lumped inter exchange). Two
+    extra rows keep the comparison honest in one file: ``event-percycle``
+    (superstep=False: the pre-refactor per-cycle window) and ``event-fused``
+    (the fused Pallas superstep kernel; on CPU it runs in interpret mode, so
+    that row measures semantics, not the kernel).
+    """
     import jax
     import numpy as np
 
@@ -122,15 +131,20 @@ def bench_engine(name, spec, net, windows: int, results: list):
 
     D = net.delay_ratio
     print(f"\n-- {name} / end-to-end engine ({windows} windows x D={D}) --")
-    print(f"{'backend':10s} {'cycles/s':>12s} {'wall s':>9s} "
+    print(f"{'backend':14s} {'cycles/s':>12s} {'wall s':>9s} "
           f"{'vs onehot':>10s}")
 
+    rows = [(b, dict(delivery_backend=b)) for b in BACKENDS]
+    rows.append(("event-percycle", dict(delivery_backend="event",
+                                        superstep=False)))
+    rows.append(("event-fused", dict(delivery_backend="event",
+                                     superstep_kernel=True)))
     ref_counts = None
     base = None
-    for backend in BACKENDS:
+    for label, kw in rows:
         eng = make_engine(net, spec, EngineConfig(
             neuron_model="ignore_and_fire", schedule="structure_aware",
-            delivery_backend=backend, s_max_floor=4))
+            s_max_floor=4, **kw))
         st0 = eng.init()
         st, _ = eng.run(st0, windows)        # compile
         jax.block_until_ready(st.ring)
@@ -142,15 +156,15 @@ def bench_engine(name, spec, net, windows: int, results: list):
             ref_counts = counts
         else:
             assert np.array_equal(counts, ref_counts), (
-                f"{backend} diverged from the reference spike train")
-        assert int(st.overflow) == 0, f"{backend} dropped spikes"
+                f"{label} diverged from the reference spike train")
+        assert int(st.overflow) == 0, f"{label} dropped spikes"
         cps = windows * D / wall
         if base is None:
             base = cps
         speedup = cps / base
-        print(f"{backend:10s} {cps:12.1f} {wall:9.3f} {speedup:9.2f}x")
+        print(f"{label:14s} {cps:12.1f} {wall:9.3f} {speedup:9.2f}x")
         results.append(dict(
-            config=name, phase="engine", backend=backend,
+            config=name, phase="engine", backend=label,
             cycles_per_s=round(cps, 2), wall_s=round(wall, 4),
             n_windows=windows, delay_ratio=D, n_neurons=spec.n_total,
             n_pad=net.n_pad, n_areas=spec.n_areas, k_total=spec.k_total,
@@ -184,7 +198,16 @@ def main(argv=None) -> None:
                     help="deliver-phase scan length per timing")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "..", "BENCH_delivery.json"))
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke mode: quickstart config only, tiny cycle "
+                         "counts, results NOT written to --out. Exercises "
+                         "every backend row (incl. the superstep and fused-"
+                         "kernel engine paths) plus the bit-exactness and "
+                         "overflow assertions, so the benchmark cannot rot.")
     args = ap.parse_args(argv)
+    if args.smoke:
+        args.windows = min(args.windows, 3)
+        args.cycles = min(args.cycles, 20)
     if args.windows < 1 or args.cycles < 1:
         ap.error("--windows and --cycles must be >= 1")
 
@@ -204,6 +227,8 @@ def main(argv=None) -> None:
         # Laptop-scale 32-area MAM: heterogeneous sizes/rates, D=10.
         ("mam_x0.001", mam_spec(scale=0.001)),
     ]
+    if args.smoke:
+        configs = configs[:1]
     for name, spec in configs:
         net = build_network(spec, seed=12, outgoing=True)
         print(f"\n== {name}: {spec.n_areas} areas x {net.n_pad} pad "
@@ -221,17 +246,23 @@ def main(argv=None) -> None:
         jax_version=jax.__version__,
         results=results,
     )
-    out = os.path.abspath(args.out)
-    with open(out, "w") as f:
-        json.dump(payload, f, indent=2)
-        f.write("\n")
-    print(f"\nwrote {out}")
+    if args.smoke:
+        print("\n--smoke: results not written (CI smoke run)")
+    else:
+        out = os.path.abspath(args.out)
+        with open(out, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"\nwrote {out}")
 
     by = {(r["config"], r["phase"], r["backend"]): r for r in results}
     ev = by[("quickstart", "deliver", "event")]["speedup_vs_onehot"]
     ee = by[("quickstart", "engine", "event")]["speedup_vs_onehot"]
     print(f"quickstart event vs onehot: {ev:.1f}x (deliver phase), "
           f"{ee:.1f}x (end-to-end)")
+    pc = by[("quickstart", "engine", "event-percycle")]["cycles_per_s"]
+    ss = by[("quickstart", "engine", "event")]["cycles_per_s"]
+    print(f"quickstart event superstep vs per-cycle window: {ss / pc:.2f}x")
 
 
 if __name__ == "__main__":

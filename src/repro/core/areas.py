@@ -179,9 +179,16 @@ class MultiAreaSpec:
 
         A spike emitted at step ``t`` with delay ``d`` lands in slot
         ``(t + d) % ring_len``; the slot for step ``t`` is read (and cleared)
-        at the start of step ``t``, so ``ring_len = max_delay + 1`` suffices.
+        at the start of step ``t``, so ``max_delay + 1`` slots suffice. The
+        length is rounded up to a multiple of the delay ratio ``D`` so that
+        window starts (``t0 ≡ 0 mod D``) always land on a slot-block boundary
+        -- the engines' fused D-cycle superstep reads and clears one
+        contiguous ``[.., D]`` block per window instead of one slot per cycle
+        (see ``repro.core.ring_buffer.read_and_clear_block``).
         """
-        return max(self.steps_intra_max, self.steps_inter_max) + 1
+        base = max(self.steps_intra_max, self.steps_inter_max) + 1
+        d = self.delay_ratio
+        return ((base + d - 1) // d) * d
 
     @property
     def k_total(self) -> int:

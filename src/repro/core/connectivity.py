@@ -86,6 +86,20 @@ class Network:
         return self.src_intra.shape[-1]
 
     @property
+    def live_window(self) -> int:
+        """Width W of the superstep's live window buffer (static).
+
+        Relative slots [0, D) are the window's own input columns; intra
+        deposits (delay <= steps_lo + r_span - 1) reach at most slot
+        D - 1 + max_intra_delay, so W = D + max_intra_delay makes every
+        within-window slot index wrap-free. Shared by both engines -- the
+        single source of truth for the window-width formula.
+        """
+        if self.k_intra == 0:
+            return self.delay_ratio
+        return self.delay_ratio + self.steps_lo_intra + self.r_span_intra - 1
+
+    @property
     def k_inter(self) -> int:
         return self.src_inter.shape[-1]
 

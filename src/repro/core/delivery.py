@@ -9,8 +9,17 @@ by ``EngineConfig.delivery_backend``:
 * ``"onehot"``  -- gather + one-hot-einsum deposit. Reference semantics; the
   per-cycle ``[N, K, R]`` one-hot is a dense MXU contraction but materialises
   the full ring axis for every synapse.
-* ``"scatter"`` -- gather + ``.at[].add`` deposit. No ``[N, K, R]`` tensor;
-  the baseline for large K.
+* ``"scatter"`` -- gather + ``.at[].add`` deposit. No ``[N, K, R]`` tensor.
+  NOTE the measured CPU crossover vs ``onehot`` (BENCH_delivery.json):
+  XLA lowers the scatter-add to a *serial* while-loop over all N*K updates
+  (~50 ns/synapse on the reference container -- confirmed in compiled HLO),
+  whereas the one-hot einsum does R x more multiplies fully vectorised. At
+  the quickstart shape (K=64, R=110) the dense einsum therefore wins
+  (~1.5x); at MAM-like small K (K=6) the scatter wins (~1.3x). The deposit
+  uses flattened single-column indices (see
+  :func:`repro.core.ring_buffer.deposit_scatter`), the fastest scatter
+  layout measured; on TPU the same op maps to the native scatter unit and
+  the crossover moves -- re-measure there before switching defaults.
 * ``"pallas"``  -- the tiled, *delay-resolved* kernel
   (:func:`repro.kernels.ops.spike_deliver`): contributions are reduced over K
   once per slot of the per-pathway delay window ``[steps_lo, steps_lo +
@@ -51,10 +60,19 @@ __all__ = [
     "event_bounds",
     "deliver_intra",
     "deliver_inter",
+    "deliver_inter_block",
     "compact_fired",
+    "compact_fired_block",
 ]
 
 BACKENDS = ("onehot", "scatter", "pallas", "event")
+
+# deliver_inter_block folds the window's cycle axis into the synapse axis;
+# for the one-hot backend that materialises an [N, D*K, R] tensor. Above
+# this element count (1 GiB f32) the blocked call deposits per cycle
+# instead -- production-scale MAM shards would otherwise need ~190 GiB of
+# temp per device (measured by launch/dryrun, see EXPERIMENTS.md).
+ONEHOT_FOLD_LIMIT = 2**28
 
 
 def event_bounds(
@@ -168,6 +186,92 @@ def deliver_inter(
                     onehot=(backend == "onehot"))
 
 
+def deliver_inter_block(
+    ring: jax.Array,     # [A, n, R] target rows (may be a device-local view)
+    block: jax.Array,    # [D, N_global] f32 global spike vectors, one per cycle
+    net: Network,        # src_inter [A, n, K] holding *global* source ids
+    t0: jax.Array,       # window start (cycle s of the block was emitted at t0+s)
+    *,
+    backend: str,
+    s_max: int | None = None,
+) -> jax.Array:
+    """One lumped window of inter-area delivery in a **single pass**.
+
+    The structure-aware schedule's window-end exchange used to replay
+    ``deliver_inter`` D times in a sequential ``fori_loop``; this entry point
+    delivers the whole ``[D, N]`` spike block at once. Per backend:
+
+    * ``event``  -- compact each cycle of the block into an id packet
+      (``compact_fired_block``: an ``(id, step)`` packet of bound
+      ``D * s_max``) and scatter all of them through the outgoing tables in
+      one :func:`repro.kernels.ops.event_deliver_block` pass.
+    * ``pallas`` -- D delay-resolved kernel launches whose ``[N, r_span]``
+      contributions are shift-summed into one ``[N, D-1+r_span]`` window,
+      rolled into the ring with a single ``apply_contrib``.
+    * ``onehot``/``scatter`` -- fold the window's cycle axis into the synapse
+      axis (``[N, D*K]`` values with delays offset by the cycle index) and
+      deposit once.
+
+    Cycle ``s`` of the block behaves exactly like ``deliver_inter(..., t0+s)``;
+    a window of per-cycle calls and one blocked call are bit-identical
+    (1/256-grid weights make deposit order irrelevant).
+    """
+    a, n, r = ring.shape
+    k = net.src_inter.shape[-1]
+    d_win = block.shape[0]
+    if k == 0:
+        return ring
+    if backend == "event":
+        k_out = net.tgt_inter.shape[-1]
+        n_src = a * n
+        # Positions ARE global ids on the complete network view, so the
+        # compaction reduces to a sized nonzero per cycle.
+        fired = jax.vmap(
+            lambda sp: kops.sized_nonzero(sp > 0, size=s_max, fill=n_src)
+        )(block)                                           # [D, s_max]
+        flat = kops.event_deliver_block(
+            ring.reshape(a * n, r), fired,
+            net.tgt_inter.reshape(a * n, k_out),
+            net.wout_inter.reshape(a * n, k_out),
+            net.dout_inter.reshape(a * n, k_out),
+            t0,
+        )
+        return flat.reshape(a, n, r)
+    if backend == "pallas":
+        span = net.r_span_inter
+        wide = None
+        for s in range(d_win):
+            contrib = kops.spike_deliver(
+                block[s], net.src_inter.reshape(a * n, k),
+                net.w_inter.reshape(a * n, k),
+                net.delay_inter.reshape(a * n, k),
+                steps_lo=net.steps_lo_inter, r_span=span,
+            )
+            shifted = jnp.pad(contrib, ((0, 0), (s, d_win - 1 - s)))
+            wide = shifted if wide is None else wide + shifted
+        flat = kops.apply_contrib(
+            ring.reshape(a * n, r), wide, t0, net.steps_lo_inter)
+        return flat.reshape(a, n, r)
+    # Dense deposits: cycle s with delay d targets slot (t0 + s + d) % R, so
+    # folding s into the delay turns the window into one [N, D*K] deposit.
+    # The one-hot deposit materialises [N, D*K, R]; beyond ~2^28 elements
+    # (1 GiB f32 -- production-scale MAM shards hit ~50G) that folding
+    # trades a catastrophic temp blow-up for a op-count win, so fall back
+    # to per-cycle deposits inside the block. Static shapes, static choice,
+    # bit-identical either way (1/256-grid exactness).
+    if backend == "onehot" and a * n * d_win * k * r > ONEHOT_FOLD_LIMIT:
+        for s in range(d_win):
+            vals = net.w_inter * block[s][net.src_inter]
+            ring = _deposit(ring, vals, net.delay_inter, t0 + s, onehot=True)
+        return ring
+    vals = net.w_inter[None] * block[:, net.src_inter]     # [D, A, n, K]
+    delays = net.delay_inter[None] + jnp.arange(
+        d_win, dtype=jnp.int32)[:, None, None, None]       # [D, A, n, K]
+    vals = jnp.moveaxis(vals, 0, 2).reshape(a, n, d_win * k)
+    delays = jnp.moveaxis(delays, 0, 2).reshape(a, n, d_win * k)
+    return _deposit(ring, vals, delays, t0, onehot=(backend == "onehot"))
+
+
 # ---------------------------------------------------------------------------
 # Sparse id packets: the distributed event path's wire format.
 # ---------------------------------------------------------------------------
@@ -192,8 +296,30 @@ def compact_fired(
     """
     f = fired.reshape(-1)
     n = f.shape[0]
-    pos = jnp.nonzero(f, size=s_max, fill_value=n)[0]
+    pos = kops.sized_nonzero(f, size=s_max, fill=n)
     ok = pos < n
     packet = jnp.where(ok, ids.reshape(-1)[jnp.where(ok, pos, 0)],
                        jnp.int32(invalid))
     return packet.astype(jnp.int32), f.sum(dtype=jnp.int32)
+
+
+def compact_fired_block(
+    fired: jax.Array,   # [D, ...] bool -- one window of spike rasters
+    ids: jax.Array,     # [...] int32 payload per neuron (e.g. global ids)
+    *,
+    s_max: int,
+    invalid: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Compact a whole window into one ``(id, step)`` packet.
+
+    Returns ``(packets [D, s_max] int32, counts [D] int32)`` -- the blocked
+    wire format of the lumped exchange: the step of each id is implicit in
+    its row, and the bound is ``D * s_max``. Packing is per cycle (each row is
+    :func:`compact_fired` of that cycle), so the spill accounting -- and,
+    under overflow, the *dropped spikes themselves* -- are identical to D
+    per-cycle packings; the engines accumulate ``max(counts - s_max, 0)``
+    into ``SimState.overflow`` either way.
+    """
+    return jax.vmap(
+        lambda f: compact_fired(f, ids, s_max=s_max, invalid=invalid)
+    )(fired)

@@ -52,6 +52,7 @@ from repro.core.engine import (
     EngineConfig,
     SimState,
     make_fused_lif_update,
+    resolve_params,
 )
 
 __all__ = [
@@ -170,6 +171,11 @@ def make_dist_engine(
     _validate(net, mesh, cfg.schedule)
     if backend == "event" and net.tgt_intra is None:
         raise ValueError("event delivery needs build_network(outgoing=True)")
+    if cfg.superstep_kernel:
+        raise ValueError(
+            "superstep_kernel is single-host only; the distributed engine "
+            "fuses the window at the jnp level (use_superstep)"
+        )
     D = net.delay_ratio
     A, n_pad = net.alive.shape
     R = net.ring_len
@@ -177,11 +183,11 @@ def make_dist_engine(
     subgroup = _subgroup_axis(mesh)
     all_axes = tuple(mesh.axis_names)
     n_dev = mesh.size
-    lif_params = cfg.lif
-    if abs(lif_params.dt_ms - net.dt_ms) > 1e-12:
-        lif_params = dataclasses.replace(lif_params, dt_ms=net.dt_ms)
+    lif_params, _ = resolve_params(net, spec, cfg)
     fused_lif = make_fused_lif_update(lif_params) if cfg.fused else None
 
+    # Per-shard form of resolve_params' drive_rate: the window bodies scale
+    # their device-local rate_hz slice by this factor.
     drive_scale = spec.ext_rate_hz / 2.5
 
     # Static event-packet bounds (see delivery.event_bounds): per-device
@@ -217,17 +223,32 @@ def make_dist_engine(
     # ---------------- shard_map window bodies --------------------------------
 
     def window_struct(state: SimState, lnet: Network, gids: jax.Array):
-        """Structure-aware: D local cycles + one lumped global exchange."""
+        """Structure-aware: D local cycles + one lumped global exchange.
+
+        With ``cfg.use_superstep`` (the default) the window is one fused
+        D-cycle superstep: a blocked ``[.., D]`` ring read/clear, D unrolled
+        cycles consuming window-static slots of the live buffer ``fut``, and
+        a *single-pass* blocked scatter of the lumped ``[D, ...]`` exchange
+        (the wire already carried the whole window; now the receive side
+        stops replaying it cycle by cycle).
+        """
         t0 = state.t
         a_loc, n_loc = lnet.alive.shape
 
-        def cycle(st, _):
-            i_in, ring = ring_buffer.read_and_clear(st.ring, st.t)
+        def cycle_body(st_ring, t, neuron, spike_count, over, fut_mode):
+            """One deliver->update->collocate cycle; ``fut_mode`` means
+            ``st_ring`` is the live window buffer and ``t`` the static
+            within-window index (deposits are wrap-free by construction)."""
+            ring = st_ring
+            if fut_mode:
+                i_in, t_abs = ring[..., t], t0 + t
+            else:
+                i_in, ring = ring_buffer.read_and_clear(ring, t)
+                t_abs = t
             nstate, spikes = _update(
-                st.neuron, i_in, st.t, lnet.alive, lnet.rate_hz, gids
+                neuron, i_in, t_abs, lnet.alive, lnet.rate_hz, gids
             )
             s8 = spikes.astype(jnp.int8)
-            over = st.overflow
             if backend == "event" and lnet.src_intra.shape[-1] > 0:
                 # Local pathway, sparse wire: compact fired neurons into
                 # per-area id packets *before* the subgroup exchange.
@@ -251,7 +272,7 @@ def make_dist_engine(
 
                 ring = jax.vmap(
                     lambda r, idl, tg, w, d: kops.event_deliver_ids(
-                        r, idl, tg, w, d, st.t, tgt_map=to_local)
+                        r, idl, tg, w, d, t, tgt_map=to_local)
                 )(ring, wire, lnet.tgt_intra, lnet.wout_intra,
                   lnet.dout_intra)
             elif backend != "event":
@@ -259,27 +280,59 @@ def make_dist_engine(
                 # over the subgroup, then deliver via the shared dispatch.
                 area_spikes = comm.gather_area(s8, subgroup_axis=subgroup)
                 ring = delivery_lib.deliver_intra(
-                    ring, area_spikes.astype(jnp.float32), lnet, st.t,
+                    ring, area_spikes.astype(jnp.float32), lnet, t,
                     backend=backend)
-            st = SimState(
-                neuron=nstate, ring=ring, t=st.t + 1,
-                spike_count=st.spike_count + spikes.astype(jnp.int32),
-                overflow=over,
-            )
-            return st, s8
+            return ring, nstate, spike_count + spikes.astype(jnp.int32), over, s8
 
-        state, block = jax.lax.scan(cycle, state, None, length=D)
+        if cfg.use_superstep:
+            fut, ring = ring_buffer.open_window(
+                state.ring, t0, D, lnet.live_window)
+            neuron, spike_count, over = (
+                state.neuron, state.spike_count, state.overflow)
+            if cfg.superstep_unroll:
+                cols = []
+                for s in range(D):  # unrolled: static slot indices throughout
+                    fut, neuron, spike_count, over, s8 = cycle_body(
+                        fut, s, neuron, spike_count, over, fut_mode=True)
+                    cols.append(s8)
+                block = jnp.stack(cols)
+            else:
+                # Scan over the live window buffer (see engine.py): the
+                # cheap [.., W] column access without the ~Dx op blow-up of
+                # a fully unrolled jnp graph.
+                def sbody(carry, s):
+                    fut, neuron, spike_count, over = carry
+                    fut, neuron, spike_count, over, s8 = cycle_body(
+                        fut, s, neuron, spike_count, over, fut_mode=True)
+                    return (fut, neuron, spike_count, over), s8
+
+                (fut, neuron, spike_count, over), block = jax.lax.scan(
+                    sbody, (fut, neuron, spike_count, over),
+                    jnp.arange(D, dtype=jnp.int32))
+            ring = ring_buffer.merge_window_tail(ring, fut[..., D:], t0 + D)
+            state = SimState(
+                neuron=neuron, ring=ring, t=t0 + D,
+                spike_count=spike_count, overflow=over,
+            )
+        else:
+            def cycle(st, _):
+                ring, nstate, spike_count, over, s8 = cycle_body(
+                    st.ring, st.t, st.neuron, st.spike_count, st.overflow,
+                    fut_mode=False)
+                return SimState(neuron=nstate, ring=ring, t=st.t + 1,
+                                spike_count=spike_count, overflow=over), s8
+
+            state, block = jax.lax.scan(cycle, state, None, length=D)
 
         if lnet.src_inter.shape[-1] == 0:
             return state, block
 
         # Global pathway: one collective for the whole window (paper Fig. 3).
         if backend == "event":
-            # Sparse wire: one id packet per cycle of the window.
-            packets, counts = jax.vmap(
-                lambda sp: delivery_lib.compact_fired(
-                    sp != 0, gids, s_max=s_max_dev, invalid=A * n_pad)
-            )(block)                                     # [D, s], [D]
+            # Sparse wire: one (id, step) packet for the whole window.
+            packets, counts = delivery_lib.compact_fired_block(
+                block != 0, gids, s_max=s_max_dev, invalid=A * n_pad
+            )                                            # [D, s], [D]
             over = state.overflow + jax.lax.psum(
                 jnp.maximum(counts - s_max_dev, 0).sum(), all_axes)
             wire = jax.lax.all_gather(
@@ -289,9 +342,9 @@ def make_dist_engine(
             w_f = lnet.wout_inter.reshape(A * n_pad, k_out)
             d_f = lnet.dout_inter.reshape(A * n_pad, k_out)
 
-            # Scatter each cycle's global packet straight into this device's
-            # ring shard: global target id -> local row, -1 if another
-            # device owns it. No full-network buffer is ever materialised.
+            # Scatter the global packets straight into this device's ring
+            # shard: global target id -> local row, -1 if another device
+            # owns it. No full-network buffer is ever materialised.
             aoff = _axis_offset(area_axes, a_loc)
             noff = _axis_offset((subgroup,), n_loc)
 
@@ -301,13 +354,19 @@ def make_dist_engine(
                 keep = (al >= 0) & (al < a_loc) & (il >= 0) & (il < n_loc)
                 return jnp.where(keep, al * n_loc + il, -1)
 
-            def deliver_s(s, ring_flat):
-                return kops.event_deliver_ids(
-                    ring_flat, wire[s], tgt_f, w_f, d_f, t0 + s,
-                    tgt_map=to_local)
+            if cfg.use_superstep:
+                # Single-pass blocked receive: all D packets in one scatter.
+                ring_flat = kops.event_deliver_block(
+                    state.ring.reshape(a_loc * n_loc, R), wire,
+                    tgt_f, w_f, d_f, t0, tgt_map=to_local)
+            else:
+                def deliver_s(s, ring_flat):
+                    return kops.event_deliver_ids(
+                        ring_flat, wire[s], tgt_f, w_f, d_f, t0 + s,
+                        tgt_map=to_local)
 
-            ring_flat = jax.lax.fori_loop(
-                0, D, deliver_s, state.ring.reshape(a_loc * n_loc, R))
+                ring_flat = jax.lax.fori_loop(
+                    0, D, deliver_s, state.ring.reshape(a_loc * n_loc, R))
             return dataclasses.replace(
                 state, ring=ring_flat.reshape(a_loc, n_loc, R),
                 overflow=over), block
@@ -316,6 +375,12 @@ def make_dist_engine(
             block, area_axes=area_axes, subgroup_axis=subgroup
         )  # [D, A, n_pad] int8
         gflat = gblock.astype(jnp.float32).reshape(D, A * n_pad)
+
+        if cfg.use_superstep:
+            # Single-pass blocked receive for the dense backends too.
+            ring = delivery_lib.deliver_inter_block(
+                state.ring, gflat, lnet, t0, backend=backend)
+            return dataclasses.replace(state, ring=ring), block
 
         def deliver_s(s, ring):
             return delivery_lib.deliver_inter(

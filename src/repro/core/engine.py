@@ -70,6 +70,36 @@ class EngineConfig:
     # overruns are counted in SimState.overflow.
     s_max_headroom: float = 8.0
     s_max_floor: int = 16
+    # Fuse the structure-aware window into one D-cycle superstep: blocked
+    # ring read/clear (one [.., D] slice per window instead of D dynamic
+    # slot updates), D unrolled cycles with window-static slot indices, and a
+    # single-pass lumped inter delivery (delivery.deliver_inter_block) in
+    # place of the window-end loop of D sequential deliver_inter calls.
+    # None = enabled exactly for the structure-aware schedule (the
+    # conventional schedule exchanges every cycle, so there is no window to
+    # fuse); False forces the legacy per-cycle scan, kept as the semantic
+    # reference for the equivalence/overflow suites.
+    superstep: bool | None = None
+    # Python-unroll the superstep's D cycles (fully static slot indices).
+    # Default False: the cycle loop stays a lax.scan over the *live window
+    # buffer* (cheap [.., W] column access instead of full-ring updates) --
+    # unrolling the jnp graph multiplies the XLA op count ~Dx, which on the
+    # CPU backend costs more in per-op dispatch than the static indices
+    # save. The fused Pallas kernel (superstep_kernel) always unrolls
+    # in-kernel, where the cycles fuse into one VMEM-resident program.
+    superstep_unroll: bool = False
+    # Run the window body as the fused Pallas superstep kernel
+    # (kernels.cycle): membrane state and the live ring slots stay in VMEM
+    # across the D unrolled cycles (update + intra delivery fused); the
+    # lumped inter exchange still goes through the selected backend.
+    # Single-host structure-aware engine only. NOTE on overflow semantics
+    # with delivery_backend='event': the kernel's intra delivery is dense
+    # (delay-resolved), so the intra packet bound s_max_area does not apply
+    # -- intra spikes can neither drop nor count toward SimState.overflow;
+    # only the inter packet bound remains. Identical trajectories to the
+    # unfused event engine are therefore guaranteed only while the unfused
+    # engine reports overflow == 0 (its own exactness condition anyway).
+    superstep_kernel: bool = False
 
     def __post_init__(self) -> None:
         if self.neuron_model not in ("lif", "ignore_and_fire"):
@@ -83,6 +113,22 @@ class EngineConfig:
                 f"unknown delivery_backend {self.delivery_backend!r} "
                 f"(expected one of {delivery_lib.BACKENDS})"
             )
+        if self.superstep is True and self.schedule != STRUCTURE_AWARE:
+            raise ValueError(
+                "superstep=True requires the structure-aware schedule; "
+                "the conventional schedule exchanges every cycle and has "
+                "no window to fuse"
+            )
+        if self.superstep_kernel:
+            if self.schedule != STRUCTURE_AWARE:
+                raise ValueError(
+                    "superstep_kernel fuses the structure-aware window; "
+                    "the conventional schedule has no window to fuse"
+                )
+            if self.superstep is False:
+                raise ValueError(
+                    "superstep_kernel=True conflicts with superstep=False"
+                )
 
     @property
     def backend(self) -> str:
@@ -99,6 +145,13 @@ class EngineConfig:
         if self.fused_update is None:
             return self.backend == "pallas"
         return self.fused_update
+
+    @property
+    def use_superstep(self) -> bool:
+        """Whether the window runs as one fused D-cycle superstep."""
+        if self.schedule != STRUCTURE_AWARE:
+            return False
+        return True if self.superstep is None else self.superstep
 
 
 @jax.tree_util.register_dataclass
@@ -148,6 +201,81 @@ def make_fused_lif_update(params: neuron_lib.LIFParams):
     return update
 
 
+def resolve_params(net: Network, spec: MultiAreaSpec, cfg: EngineConfig):
+    """``(lif_params, drive_rate)`` as the engines actually run them.
+
+    The dt-corrected LIF propagators and the per-neuron external drive rate
+    (area rate relative to the 2.5 Hz reference scales ``spec.ext_rate_hz``,
+    the Fig. 8b heterogeneity). Single source of truth shared by both
+    engines and the phase profiler (``launch/simulate.py --profile``), so
+    profiling always times the same math the engine executes.
+    """
+    lif_params = cfg.lif
+    if abs(lif_params.dt_ms - net.dt_ms) > 1e-12:
+        lif_params = dataclasses.replace(lif_params, dt_ms=net.dt_ms)
+    drive_rate = net.rate_hz / 2.5 * spec.ext_rate_hz
+    return lif_params, drive_rate
+
+
+def make_fused_superstep(
+    net: Network,
+    spec: MultiAreaSpec,
+    cfg: EngineConfig,
+    lif_params: neuron_lib.LIFParams,
+    drive_rate: jax.Array,
+    gids: jax.Array,
+):
+    """A ``(neuron_state, fut, t0) -> (state', spikes[D, A, n] bool, fut')``
+    closure over the fused Pallas superstep kernel (:mod:`repro.kernels.cycle`).
+
+    The kernel advances all D cycles of a window with membrane state and the
+    live window slots VMEM-resident, reproducing the unfused cycle body
+    bit-for-bit (same LIF propagators, same counter-based drive, 1/256-grid
+    intra deposits). With the event backend the kernel's *dense* intra
+    delivery has no packet bound, so equality with the unfused event engine
+    holds exactly while that engine reports zero overflow (see the
+    ``EngineConfig.superstep_kernel`` note).
+    """
+    from repro.kernels import ops as kops
+
+    D = net.delay_ratio
+    steps_lo = net.steps_lo_intra
+    r_span = net.r_span_intra if net.k_intra > 0 else 0
+
+    if cfg.neuron_model == "lif":
+        p = lif_params
+        drive_p = drive_rate * (net.dt_ms * 1e-3)
+        kw = dict(
+            p11=p.p11, p21=p.p21, p22=p.p22, v_th=p.v_th_mv,
+            v_reset=p.v_reset_mv, t_ref_steps=p.t_ref_steps,
+            seed=cfg.seed, w_ext=spec.w_ext,
+        )
+
+        def run_lif(neuron_state, fut, t0):
+            v, i_syn, refrac, fut, spk = kops.superstep_lif(
+                neuron_state.v, neuron_state.i_syn, neuron_state.refrac,
+                fut, drive_p, gids, net.alive, net.src_intra, net.w_intra,
+                net.delay_intra, t0,
+                d_win=D, steps_lo=steps_lo, r_span=r_span, **kw)
+            state = neuron_lib.LIFState(v=v, i_syn=i_syn, refrac=refrac)
+            return state, jnp.moveaxis(spk, 0, 1) != 0, fut
+
+        return run_lif
+
+    # ignore_and_fire: the same static interval/phase rule as the jnp update.
+    interval = neuron_lib.iaf_interval(net.rate_hz, net.dt_ms)
+
+    def run_iaf(neuron_state, fut, t0):
+        del t0  # emission is input- and time-base-independent
+        cd, fut, spk = kops.superstep_iaf(
+            neuron_state.countdown, fut, interval, net.alive,
+            net.src_intra, net.w_intra, net.delay_intra,
+            d_win=D, steps_lo=steps_lo, r_span=r_span)
+        return neuron_lib.IafState(countdown=cd), jnp.moveaxis(spk, 0, 1) != 0, fut
+
+    return run_iaf
+
+
 def make_engine(
     net: Network,
     spec: MultiAreaSpec,
@@ -164,15 +292,8 @@ def make_engine(
     backend = cfg.backend
     if backend == "event" and net.tgt_intra is None:
         raise ValueError("event delivery needs build_network(outgoing=True)")
-    lif_params = cfg.lif
-    if abs(lif_params.dt_ms - net.dt_ms) > 1e-12:
-        lif_params = dataclasses.replace(lif_params, dt_ms=net.dt_ms)
+    lif_params, drive_rate = resolve_params(net, spec, cfg)
     fused_lif = make_fused_lif_update(lif_params) if cfg.fused else None
-
-    # Per-neuron external drive rate for LIF: scaled by the area's target rate
-    # relative to the 2.5 Hz reference, which induces the across-area activity
-    # heterogeneity studied in Fig. 8b / §2.4.3.
-    drive_rate = net.rate_hz / 2.5 * spec.ext_rate_hz
     gids = jnp.arange(A * n_pad, dtype=jnp.int32).reshape(A, n_pad)
 
     def _update(neuron_state, i_in, t):
@@ -230,6 +351,77 @@ def make_engine(
         )
         return new_state, spikes
 
+    # Live-window width of the fused superstep: relative slots [0, D) are the
+    # window's own input columns, [D, W) the overhang that intra deposits can
+    # reach past the window end; every within-window slot index is wrap-free
+    # (see Network.live_window).
+    W = net.live_window
+
+    fused_window = (
+        make_fused_superstep(net, spec, cfg, lif_params, drive_rate, gids)
+        if cfg.superstep_kernel else None
+    )
+
+    def window_superstep(state: SimState) -> tuple[SimState, jax.Array]:
+        """One fused D-cycle superstep (structure-aware schedule).
+
+        Blocked ring access: windows are phase-aligned (t0 ≡ 0 mod D and
+        ring_len ≡ 0 mod D), so the window's D input slots are one contiguous
+        block -- read and cleared once, consumed at static indices.
+        """
+        t0 = state.t
+        fut, ring = ring_buffer.open_window(state.ring, t0, D, W)
+        neuron_state = state.neuron
+        over = state.overflow
+        if fused_window is not None:
+            neuron_state, spikes_blk, fut = fused_window(
+                neuron_state, fut, t0)
+        elif cfg.superstep_unroll:
+            cols = []
+            for s in range(D):  # unrolled: s is static, slot math vanishes
+                neuron_state, spikes = _update(
+                    neuron_state, fut[..., s], t0 + s)
+                fut = _deliver_intra(fut, spikes.astype(jnp.float32), s)
+                over = over + _overflow(spikes, deliver_inter_now=False)
+                cols.append(spikes)
+            spikes_blk = jnp.stack(cols)
+        else:
+            # Scan over the live window: slot access touches only the small
+            # [.., W] buffer (wrap-free by construction), never the ring.
+            def body(carry, s):
+                neuron_state, fut, over = carry
+                neuron_state, spikes = _update(
+                    neuron_state, fut[..., s], t0 + s)
+                fut = _deliver_intra(fut, spikes.astype(jnp.float32), s)
+                over = over + _overflow(spikes, deliver_inter_now=False)
+                return (neuron_state, fut, over), spikes
+
+            (neuron_state, fut, over), spikes_blk = jax.lax.scan(
+                body, (neuron_state, fut, over),
+                jnp.arange(D, dtype=jnp.int32))
+        ring = ring_buffer.merge_window_tail(ring, fut[..., D:], t0 + D)
+
+        # The lumped 'global communication', single pass: the whole [D, A, N]
+        # block through deliver_inter_block. Every inter-area delay is >= D,
+        # so slot (t0+s+d) is strictly in the future of the window -- causal
+        # (paper §2.1) and bit-identical to D per-cycle deliveries.
+        if net.k_inter > 0:
+            block_flat = spikes_blk.reshape(D, -1).astype(jnp.float32)
+            ring = delivery_lib.deliver_inter_block(
+                ring, block_flat, net, t0, backend=backend, s_max=s_max_all)
+            if backend == "event":
+                counts = spikes_blk.reshape(D, -1).sum(
+                    axis=-1, dtype=jnp.int32)
+                over = over + jnp.maximum(counts - s_max_all, 0).sum()
+        new_state = SimState(
+            neuron=neuron_state,
+            ring=ring,
+            t=t0 + D,
+            spike_count=state.spike_count + spikes_blk.astype(jnp.int32).sum(0),
+            overflow=over,
+        )
+        return new_state, spikes_blk
+
     def window(state: SimState) -> tuple[SimState, jax.Array]:
         t0 = state.t
         if cfg.schedule == CONVENTIONAL:
@@ -240,15 +432,16 @@ def make_engine(
             state, spikes = jax.lax.scan(body, state, None, length=D)
             return state, spikes
 
-        # Structure-aware: local-only cycles, lumped inter delivery at the end.
+        if cfg.use_superstep:
+            return window_superstep(state)
+
+        # Legacy structure-aware window (the semantic reference for the
+        # superstep): per-cycle scan + a fori_loop of D inter deliveries.
         def body(st, _):
             return _cycle(st, deliver_inter_now=False)
 
         state, spikes = jax.lax.scan(body, state, None, length=D)
 
-        # The lumped 'global communication': deliver the whole [D, A, N] block.
-        # Every inter-area delay is >= D, so slot (t0+s+d) is strictly in the
-        # future of the last cycle read -- causality is preserved (paper §2.1).
         def deliver_s(s, carry):
             ring, over = carry
             sp = spikes[s]

@@ -33,6 +33,7 @@ __all__ = [
     "lif_init",
     "lif_update",
     "IafState",
+    "iaf_interval",
     "ignore_and_fire_init",
     "ignore_and_fire_update",
     "poisson_drive",
@@ -166,6 +167,21 @@ class IafState(NamedTuple):
     countdown: jax.Array  # steps until next spike, int32 (<0: never fires)
 
 
+def iaf_interval(rate_hz: jax.Array, dt_ms: float) -> jax.Array:
+    """Per-neuron firing interval in steps (single source of truth).
+
+    ``round(1 / (rate * dt))`` clamped to >= 1; rate 0 maps to a
+    never-fires sentinel. Shared by init, update and the fused superstep
+    kernel (kernels/cycle.py) so the emission rule cannot drift between the
+    unfused and fused engines.
+    """
+    return jnp.where(
+        rate_hz > 0,
+        jnp.maximum(jnp.round(1000.0 / (rate_hz * dt_ms)).astype(jnp.int32), 1),
+        jnp.int32(jnp.iinfo(jnp.int32).max // 2),
+    )
+
+
 def ignore_and_fire_init(
     alive: jax.Array,
     rate_hz: jax.Array,
@@ -178,11 +194,7 @@ def ignore_and_fire_init(
     activity is stationary (the paper's benchmark has constant aggregate rate)
     and any sharding reproduces the same spike trains.
     """
-    interval = jnp.where(
-        rate_hz > 0,
-        jnp.maximum(jnp.round(1000.0 / (rate_hz * dt_ms)).astype(jnp.int32), 1),
-        jnp.int32(jnp.iinfo(jnp.int32).max // 2),
-    )
+    interval = iaf_interval(rate_hz, dt_ms)
     if gids is None:
         gids = jnp.arange(alive.size, dtype=jnp.int32).reshape(alive.shape)
     phase = gids % interval
@@ -201,10 +213,6 @@ def ignore_and_fire_update(
     delivery cost exists) but ignored by the dynamics, as in the paper."""
     del i_in  # received but ignored -- that's the point of ignore-and-fire
     spikes = (state.countdown == 0) & alive
-    interval = jnp.where(
-        rate_hz > 0,
-        jnp.maximum(jnp.round(1000.0 / (rate_hz * dt_ms)).astype(jnp.int32), 1),
-        jnp.int32(jnp.iinfo(jnp.int32).max // 2),
-    )
+    interval = iaf_interval(rate_hz, dt_ms)
     countdown = jnp.where(spikes, interval - 1, state.countdown - 1)
     return IafState(countdown=countdown), spikes

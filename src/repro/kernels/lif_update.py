@@ -18,11 +18,35 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["lif_update_pallas", "TILE"]
+__all__ = ["lif_update_pallas", "lif_step_math", "TILE"]
 
 # 8 sublanes x 128 lanes x 8 = one comfortably VMEM-resident f32 block per
 # state array (6 arrays live at once: v, i_syn, refrac, i_in, alive + outs).
 TILE = 8 * 128 * 8
+
+
+def lif_step_math(
+    v, i_syn, refrac, i_in, alive,
+    *, p11: float, p21: float, p22: float,
+    v_th: float, v_reset: float, t_ref_steps: int,
+):
+    """One exact-propagator LIF step on in-register values.
+
+    The shared cycle body of this kernel and the fused superstep kernel
+    (:mod:`repro.kernels.cycle`); bit-identical to the jnp chain in
+    ``repro.core.neuron.lif_update``. ``alive`` is bool; returns
+    ``(v', i_syn', refrac', spikes bool)``.
+    """
+    refractory = refrac > 0
+    i_new = i_syn * p11 + i_in
+    v_prop = v * p22 + i_syn * p21
+    v_new = jnp.where(refractory, v_reset, v_prop)
+    spikes = (v_new >= v_th) & alive & ~refractory
+    v_out = jnp.where(spikes, v_reset, v_new)
+    refrac_out = jnp.where(
+        spikes, jnp.int32(t_ref_steps), jnp.maximum(refrac - 1, 0)
+    )
+    return v_out, i_new, refrac_out, spikes
 
 
 def _kernel(
@@ -31,22 +55,15 @@ def _kernel(
     *, p11: float, p21: float, p22: float,
     v_th: float, v_reset: float, t_ref_steps: int,
 ):
-    v = v_ref[...]
-    i_syn = i_syn_ref[...]
-    refrac = refrac_ref[...]
-    alive = alive_ref[...] != 0
-
-    refractory = refrac > 0
-    i_new = i_syn * p11 + i_in_ref[...]
-    v_prop = v * p22 + i_syn * p21
-    v_new = jnp.where(refractory, v_reset, v_prop)
-    spikes = (v_new >= v_th) & alive & ~refractory
-
-    v_out_ref[...] = jnp.where(spikes, v_reset, v_new)
-    i_out_ref[...] = i_new
-    refrac_out_ref[...] = jnp.where(
-        spikes, jnp.int32(t_ref_steps), jnp.maximum(refrac - 1, 0)
+    v_out, i_out, refrac_out, spikes = lif_step_math(
+        v_ref[...], i_syn_ref[...], refrac_ref[...], i_in_ref[...],
+        alive_ref[...] != 0,
+        p11=p11, p21=p21, p22=p22, v_th=v_th, v_reset=v_reset,
+        t_ref_steps=t_ref_steps,
     )
+    v_out_ref[...] = v_out
+    i_out_ref[...] = i_out
+    refrac_out_ref[...] = refrac_out
     spike_out_ref[...] = spikes.astype(jnp.int8)
 
 

@@ -29,9 +29,24 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["spike_deliver_pallas", "TILE_N"]
+__all__ = ["spike_deliver_pallas", "delay_resolved_contrib", "TILE_N"]
 
 TILE_N = 128  # target-neuron rows per grid step; [TILE_N, K] stays in VMEM
+
+
+def delay_resolved_contrib(vals, j, r_span: int):
+    """Reduce synapse values over K once per slot of the delay window.
+
+    ``vals [N, K]`` are the per-synapse contributions (w * spike), ``j [N, K]``
+    the slot offsets in ``[0, r_span)``. One reduction over K per slot;
+    ``r_span`` is a small compile-time constant (per-pathway delay width), so
+    this unrolls into r_span masked row-sums -- no MXU, pure VPU. Shared by
+    this kernel and the fused superstep kernel (:mod:`repro.kernels.cycle`).
+    """
+    cols = []
+    for r in range(r_span):
+        cols.append(jnp.sum(jnp.where(j == r, vals, 0.0), axis=1))
+    return jnp.stack(cols, axis=1)
 
 
 def _kernel(spk_ref, src_ref, w_ref, d_ref, out_ref, *, steps_lo: int, r_span: int):
@@ -39,13 +54,7 @@ def _kernel(spk_ref, src_ref, w_ref, d_ref, out_ref, *, steps_lo: int, r_span: i
     idx = src_ref[...]            # [TILE_N, K]
     vals = w_ref[...] * spk[idx]  # gather + scale, one VPU pass
     j = d_ref[...] - steps_lo     # slot offsets in [0, r_span)
-    # One reduction over K per slot in the window. r_span is a small
-    # compile-time constant (per-pathway delay width), so this unrolls into
-    # r_span masked row-sums -- no MXU, pure VPU.
-    cols = []
-    for r in range(r_span):
-        cols.append(jnp.sum(jnp.where(j == r, vals, 0.0), axis=1))
-    out_ref[...] = jnp.stack(cols, axis=1)
+    out_ref[...] = delay_resolved_contrib(vals, j, r_span)
 
 
 @functools.partial(

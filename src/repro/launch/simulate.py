@@ -16,11 +16,120 @@ import argparse
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.areas import mam_benchmark_spec, mam_spec
 from repro.core.connectivity import build_network
 from repro.core.engine import EngineConfig, make_engine
+
+
+def _time_loop(fn, *args, repeats: int = 3):
+    """Best wall time of a jitted callable (compiles on the first call)."""
+    jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def profile_phases(net, spec, cfg: EngineConfig, cycles: int = 200) -> None:
+    """Per-phase timing table: where a cycle's wall time actually goes.
+
+    Times each phase of the deliver -> update -> collocate cycle in
+    isolation (a jitted scan of `cycles` iterations per phase), so perf PRs
+    can attribute wins without ad-hoc instrumentation: ring read/clear
+    (per-cycle and blocked), neuron update, intra delivery, and inter
+    delivery (per-cycle and the superstep's single-pass block).
+    """
+    from repro.core import delivery, neuron as neuron_lib, ring_buffer
+    from repro.core.engine import resolve_params
+
+    backend = cfg.backend
+    A, n_pad = net.alive.shape
+    D = net.delay_ratio
+    # The engines' own param/drive derivation -- the profiler must time the
+    # same math Engine.run executes.
+    lif_params, drive_rate = resolve_params(net, spec, cfg)
+    eng = make_engine(net, spec, cfg)
+    st = eng.init()
+    st, blk = eng.window(st)  # warmed-up state + a real spike raster
+    ring0 = st.ring
+    sf = blk[int(np.argsort(np.asarray(blk).reshape(D, -1).sum(1))[D // 2])
+             ].astype(jnp.float32)
+    block_f = blk.astype(jnp.float32).reshape(D, -1)
+    s_max_area, s_max_all = delivery.event_bounds(
+        net, headroom=cfg.s_max_headroom, floor=cfg.s_max_floor)
+    ts = jnp.arange(cycles, dtype=jnp.int32)
+
+    @jax.jit
+    def ph_read(ring):
+        def body(r, t):
+            i_in, r = ring_buffer.read_and_clear(r, t)
+            return r, i_in.sum()
+        return jax.lax.scan(body, ring, ts)
+
+    @jax.jit
+    def ph_read_block(ring):
+        def body(r, w):
+            blk_, r = ring_buffer.read_and_clear_block(r, w * D, D)
+            return r, blk_.sum()
+        return jax.lax.scan(body, ring, jnp.arange(cycles // D, dtype=jnp.int32))
+
+    @jax.jit
+    def ph_update(nstate):
+        def body(ns, t):
+            if cfg.neuron_model == "lif":
+                gids = jnp.arange(A * n_pad, dtype=jnp.int32).reshape(A, n_pad)
+                drive = neuron_lib.poisson_drive(
+                    cfg.seed, t, gids, drive_rate, net.dt_ms, spec.w_ext)
+                ns, spk = neuron_lib.lif_update(
+                    ns, drive, net.alive, lif_params)
+            else:
+                ns, spk = neuron_lib.ignore_and_fire_update(
+                    ns, None, net.alive, net.rate_hz, net.dt_ms)
+            return ns, spk.sum()
+        return jax.lax.scan(body, nstate, ts)
+
+    @jax.jit
+    def ph_intra(ring):
+        def body(r, t):
+            return delivery.deliver_intra(
+                r, sf, net, t, backend=backend, s_max=s_max_area), None
+        return jax.lax.scan(body, ring, ts)
+
+    @jax.jit
+    def ph_inter(ring):
+        def body(r, t):
+            return delivery.deliver_inter(
+                r, sf.reshape(-1), net, t, backend=backend,
+                s_max=s_max_all), None
+        return jax.lax.scan(body, ring, ts)
+
+    @jax.jit
+    def ph_inter_block(ring):
+        def body(r, w):
+            return delivery.deliver_inter_block(
+                r, block_f, net, w * D, backend=backend,
+                s_max=s_max_all), None
+        return jax.lax.scan(body, ring, jnp.arange(cycles // D, dtype=jnp.int32))
+
+    rows = [
+        ("ring read/clear (per-cycle)", _time_loop(ph_read, ring0)),
+        ("ring read/clear (blocked)", _time_loop(ph_read_block, ring0)),
+        ("neuron update (+drive)", _time_loop(ph_update, st.neuron)),
+        ("intra deliver", _time_loop(ph_intra, ring0)),
+        ("inter deliver (per-cycle)", _time_loop(ph_inter, ring0)),
+        ("inter deliver (blocked)", _time_loop(ph_inter_block, ring0)),
+    ]
+    print(f"\n-- phase profile: backend={backend}, {cycles} cycles each --")
+    print(f"{'phase':30s} {'us/cycle':>10s} {'cycles/s':>12s}")
+    for name, wall in rows:
+        print(f"{name:30s} {wall / cycles * 1e6:10.2f} {cycles / wall:12.1f}")
+    win = _time_loop(eng.window, st)
+    print(f"{'full window / D':30s} {win / D * 1e6:10.2f} {D / win:12.1f}")
 
 
 def main() -> None:
@@ -47,6 +156,9 @@ def main() -> None:
                     help="paper seeds: 12, 654, 91856")
     ap.add_argument("--compare", action="store_true",
                     help="run both schedules, assert identical spikes")
+    ap.add_argument("--profile", action="store_true",
+                    help="report per-phase timings (ring read/clear, update, "
+                         "intra/inter deliver) before the run")
     args = ap.parse_args()
 
     if args.model == "mam":
@@ -63,6 +175,11 @@ def main() -> None:
           f"backend={args.backend or args.delivery}, seed={args.seed}")
 
     net = build_network(spec, seed=args.seed, outgoing=needs_outgoing)
+    if args.profile:
+        profile_phases(net, spec, EngineConfig(
+            neuron_model=neuron, schedule=args.schedule,
+            delivery=args.delivery, delivery_backend=args.backend,
+            deposit_onehot=False, seed=42))
     schedules = ([args.schedule] if not args.compare
                  else ["conventional", "structure_aware"])
     spikes = {}

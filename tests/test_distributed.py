@@ -58,9 +58,11 @@ def test_dist_engine_equivalence_both_schedules():
 
 def test_dist_engine_delivery_backend_equivalence():
     """Tentpole: every delivery backend, run through the shard_map window
-    bodies (2x4 mesh), reproduces the single-host reference bitwise. The
-    event backend exchanges sparse id packets instead of dense vectors and
-    must report zero overflow."""
+    bodies (2x4 mesh), reproduces the single-host reference bitwise -- under
+    both the fused D-cycle superstep (default: blocked ring access +
+    single-pass blocked receive of the lumped exchange) and the legacy
+    per-cycle window. The event backend exchanges sparse id packets instead
+    of dense vectors and must report zero overflow."""
     print(_run("""
         import numpy as np, jax
         from repro.core.areas import mam_benchmark_spec
@@ -80,20 +82,25 @@ def test_dist_engine_delivery_backend_equivalence():
             s0, b = ref.window(s0)
             blocks.append(np.asarray(b))
         assert sum(b.sum() for b in blocks) > 0
-        for backend in ("scatter", "pallas", "event"):
-            for sched in ("structure_aware", "conventional"):
-                eng = make_dist_engine(net, spec, mesh,
-                                       EngineConfig(
-                                           neuron_model="ignore_and_fire",
-                                           schedule=sched,
-                                           delivery_backend=backend,
-                                           s_max_floor=32))
-                st = eng.init()
-                for w in range(6):
-                    st, blk = eng.window(st)
-                    assert np.array_equal(np.asarray(blk).astype(bool),
-                                          blocks[w]), (backend, sched, w)
-                assert int(st.overflow) == 0, (backend, sched)
+        cases = [(b, sched, None) for b in ("scatter", "pallas", "event")
+                 for sched in ("structure_aware", "conventional")]
+        # The legacy (superstep=False) windows must stay equivalent too.
+        cases += [("event", "structure_aware", False),
+                  ("scatter", "structure_aware", False)]
+        for backend, sched, superstep in cases:
+            eng = make_dist_engine(net, spec, mesh,
+                                   EngineConfig(
+                                       neuron_model="ignore_and_fire",
+                                       schedule=sched,
+                                       delivery_backend=backend,
+                                       s_max_floor=32,
+                                       superstep=superstep))
+            st = eng.init()
+            for w in range(6):
+                st, blk = eng.window(st)
+                assert np.array_equal(np.asarray(blk).astype(bool),
+                                      blocks[w]), (backend, sched, w)
+            assert int(st.overflow) == 0, (backend, sched)
         print("OK")
     """))
 

@@ -160,6 +160,97 @@ def test_event_deliver_ids_absorbs_padding():
     assert float(jnp.abs(out).max()) == 0.0
 
 
+@pytest.mark.parametrize("n,size,density", [
+    (64, 8, 0.1), (1000, 16, 0.0), (1000, 16, 0.9),  # overflow case included
+    (257, 4, 0.02), (8192, 128, 0.001),
+])
+def test_sized_nonzero_matches_jnp(n, size, density):
+    """The searchsorted compaction == jnp.nonzero(size=, fill_value=) exactly,
+    including which indices survive under overflow (first `size` by index).
+    It replaces the sized-nonzero sort in every event path (~13x faster on
+    CPU at N~6k: the sort was the hidden per-cycle cost of compaction)."""
+    rng = np.random.default_rng(n + size)
+    mask = jnp.asarray(rng.random(n) < density)
+    want = jnp.nonzero(mask, size=size, fill_value=n)[0]
+    got = ops.sized_nonzero(mask, size=size, fill=n)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_event_deliver_block_matches_per_cycle_ids():
+    """The single-pass blocked receive == D sequential per-cycle id scatters
+    (same packets, slots offset by the implicit step), bitwise."""
+    rng = np.random.default_rng(7)
+    n_src, n_tgt, k_out, r, s_max, d_win = 120, 96, 6, 20, 8, 10
+    tgt = jnp.asarray(rng.integers(0, n_tgt, (n_src, k_out)), jnp.int32)
+    w = jnp.asarray(np.round(rng.normal(0, 64, (n_src, k_out))) / 256.0,
+                    jnp.float32)
+    d = jnp.asarray(rng.integers(1, r - 1, (n_src, k_out)), jnp.int32)
+    ids = np.full((d_win, s_max), n_src, np.int32)
+    for s in range(d_win):
+        k = rng.integers(0, s_max + 1)
+        ids[s, :k] = rng.choice(n_src, k, replace=False)
+    ids = jnp.asarray(ids)
+    ring = jnp.zeros((n_tgt, r), jnp.float32)
+    t0 = jnp.int32(13)
+    want = ring
+    for s in range(d_win):
+        want = ops.event_deliver_ids(want, ids[s], tgt, w, d, t0 + s)
+    got = ops.event_deliver_block(ring, ids, tgt, w, d, t0)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_superstep_kernels_match_unfused_window():
+    """kernels/cycle.py: one fused window (D cycles of update + intra
+    delivery on a VMEM-resident live buffer) == the unfused op chain."""
+    from repro.core.neuron import counter_uniform
+
+    rng = np.random.default_rng(3)
+    a, n, k, d_win, lo, span = 3, 96, 8, 5, 1, 6
+    w_width = d_win + lo + span - 1
+    src = jnp.asarray(rng.integers(0, n, (a, n, k)), jnp.int32)
+    w = jnp.asarray(np.round(rng.normal(0, 64, (a, n, k))) / 256.0, jnp.float32)
+    delay = jnp.asarray(rng.integers(lo, lo + span, (a, n, k)), jnp.int32)
+    alive = jnp.asarray(rng.random((a, n)) < 0.9)
+    fut0 = jnp.asarray(
+        np.round(rng.normal(0, 512, (a, n, w_width))) / 256.0, jnp.float32)
+    gids = jnp.arange(a * n, dtype=jnp.int32).reshape(a, n)
+    drive_p = jnp.full((a, n), 0.3, jnp.float32)
+    v = jnp.asarray(rng.normal(5, 4, (a, n)), jnp.float32)
+    i_syn = jnp.asarray(rng.normal(100, 50, (a, n)), jnp.float32)
+    refrac = jnp.asarray(rng.integers(0, 3, (a, n)), jnp.int32)
+    kw = dict(LIF_KW, t_ref_steps=3)
+    t0 = jnp.int32(0)
+
+    got = ops.superstep_lif(
+        v, i_syn, refrac, fut0, drive_p, gids, alive, src, w, delay, t0,
+        d_win=d_win, steps_lo=lo, r_span=span, seed=11, w_ext=88.0, **kw)
+
+    # unfused oracle: per-cycle lif_update kernel + dense masked deposit
+    @jax.jit
+    def oracle(v, i_syn, refrac, fut):
+        spikes = []
+        for s in range(d_win):
+            u = counter_uniform(11, t0 + s, gids)
+            i_in = fut[..., s] + (u < drive_p).astype(jnp.float32) * 88.0
+            v, i_syn, refrac, spk = ops.lif_update(
+                v, i_syn, refrac, i_in, alive, **kw)
+            spikes.append(spk)
+            vals = w * spk.astype(jnp.float32)[
+                jnp.arange(a)[:, None, None], src]
+            for j in range(span):
+                col = jnp.sum(
+                    jnp.where(delay - lo == j, vals, 0.0), axis=-1)
+                fut = fut.at[..., s + lo + j].add(col)
+        return v, i_syn, refrac, fut, jnp.stack(spikes, axis=1)
+
+    want = oracle(v, i_syn, refrac, fut0)
+    names = ("v", "i_syn", "refrac", "fut", "spikes")
+    for name, g, ww in zip(names, got, want):
+        g = np.asarray(g)
+        ww = np.asarray(ww.astype(jnp.int8) if name == "spikes" else ww)
+        assert np.array_equal(g, ww), name
+
+
 def test_event_deliver_s_max_bound():
     """With fewer events than s_max the result is exact; the buffer bound is
     the static analogue of NEST's spike-register resizing."""

@@ -79,6 +79,41 @@ def test_ring_buffer_deposit_read_roundtrip(n, r, k, t, seed):
 
 @settings(**SETTINGS)
 @given(
+    n=st.integers(4, 48),
+    d=st.sampled_from([2, 5, 10]),
+    blocks=st.integers(2, 6),
+    tail_w=st.integers(0, 12),
+    w0=st.integers(0, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_blocked_ring_access_equals_per_cycle(n, d, blocks, tail_w, w0, seed):
+    """read_and_clear_block + merge_window_tail == per-cycle read_and_clear:
+    for any phase-aligned window start, the blocked path reads the same
+    slots, clears the same slots, and the merged tail lands where per-cycle
+    deposits would."""
+    rng = np.random.default_rng(seed)
+    r = d * blocks
+    tail_w = min(tail_w, r)
+    t0 = jnp.int32(w0 * d)
+    ring = jnp.asarray(np.round(rng.normal(0, 64, (n, r))) / 256.0, jnp.float32)
+    blk, cleared = ring_buffer.read_and_clear_block(ring, t0, d)
+    ring_ref = ring
+    for s in range(d):
+        i_in, ring_ref = ring_buffer.read_and_clear(ring_ref, t0 + s)
+        assert np.array_equal(np.asarray(blk[..., s]), np.asarray(i_in)), s
+    assert np.array_equal(np.asarray(cleared), np.asarray(ring_ref))
+    if tail_w:
+        tail = jnp.asarray(
+            np.round(rng.normal(0, 64, (n, tail_w))) / 256.0, jnp.float32)
+        got = ring_buffer.merge_window_tail(cleared, tail, t0 + d)
+        want = np.asarray(cleared).copy()
+        for j in range(tail_w):
+            want[:, (int(t0) + d + j) % r] += np.asarray(tail[:, j])
+        assert np.allclose(np.asarray(got), want, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(
     seed=st.integers(0, 1000),
     t=st.integers(0, 10_000),
     n=st.integers(8, 256),

@@ -163,6 +163,150 @@ def test_delivery_backends_bit_identical_lif(backend):
     assert int(st.spike_count.sum()) > 0, "LIF must spike within 30 ms"
 
 
+@pytest.mark.parametrize("backend", ["onehot", "scatter", "pallas", "event"])
+def test_superstep_matches_legacy_window_bitwise(backend):
+    """Tentpole: the fused D-cycle superstep (blocked ring read/clear, live
+    window buffer, single-pass lumped inter delivery) is bit-identical to
+    the legacy per-cycle window -- spike blocks AND rings -- for every
+    backend, in both the scanned and the fully unrolled variant."""
+    spec = mam_benchmark_spec(n_areas=4, n_per_area=48, k_intra=8, k_inter=8,
+                              rate_hz=30.0)
+    net = build_network(spec, seed=91856, outgoing=True)
+    legacy = make_engine(net, spec, EngineConfig(
+        neuron_model="ignore_and_fire", schedule="structure_aware",
+        delivery_backend=backend, s_max_floor=64, superstep=False))
+    fused = make_engine(net, spec, EngineConfig(
+        neuron_model="ignore_and_fire", schedule="structure_aware",
+        delivery_backend=backend, s_max_floor=64))
+    unroll = make_engine(net, spec, EngineConfig(
+        neuron_model="ignore_and_fire", schedule="structure_aware",
+        delivery_backend=backend, s_max_floor=64, superstep_unroll=True))
+    sl, sf, su = legacy.init(), fused.init(), unroll.init()
+    for w in range(12):
+        sl, bl = legacy.window(sl)
+        sf, bf = fused.window(sf)
+        su, bu = unroll.window(su)
+        assert np.array_equal(np.asarray(bl), np.asarray(bf)), (backend, w)
+        assert np.array_equal(np.asarray(bl), np.asarray(bu)), (backend, w)
+        assert np.array_equal(np.asarray(sl.ring), np.asarray(sf.ring)), (backend, w)
+        assert np.array_equal(np.asarray(sl.ring), np.asarray(su.ring)), (backend, w)
+    assert int(sl.spike_count.sum()) > 0
+
+
+@pytest.mark.parametrize("neuron_model", ["ignore_and_fire", "lif"])
+def test_fused_superstep_kernel_matches_reference(neuron_model):
+    """The fused Pallas superstep kernel (kernels/cycle.py: membrane state and
+    live ring slots VMEM-resident across the D unrolled cycles) reproduces
+    the conventional per-cycle reference bitwise for both neuron models."""
+    spec = mam_benchmark_spec(n_areas=4, n_per_area=48, k_intra=8, k_inter=8,
+                              rate_hz=30.0)
+    net = build_network(spec, seed=91856, outgoing=True)
+    ref = make_engine(net, spec, EngineConfig(
+        neuron_model=neuron_model, schedule="conventional"))
+    eng = make_engine(net, spec, EngineConfig(
+        neuron_model=neuron_model, schedule="structure_aware",
+        delivery_backend="event", s_max_floor=64, superstep_kernel=True))
+    s0, st = ref.init(), eng.init()
+    for w in range(12):
+        s0, blk_ref = ref.window(s0)
+        st, blk = eng.window(st)
+        assert np.array_equal(np.asarray(blk), np.asarray(blk_ref)), w
+        assert np.array_equal(np.asarray(s0.ring), np.asarray(st.ring)), w
+    assert int(st.overflow) == 0
+    assert int(st.spike_count.sum()) > 0
+
+
+def test_superstep_kernel_config_validation():
+    with pytest.raises(ValueError):
+        EngineConfig(schedule="conventional", superstep_kernel=True)
+    with pytest.raises(ValueError):
+        EngineConfig(superstep=False, superstep_kernel=True)
+    with pytest.raises(ValueError):
+        EngineConfig(schedule="conventional", superstep=True)
+    # superstep=None/False with the conventional schedule stays valid.
+    assert not EngineConfig(schedule="conventional").use_superstep
+    assert not EngineConfig(schedule="conventional",
+                            superstep=False).use_superstep
+
+
+def test_ring_len_phase_aligned():
+    """The ring length is padded to a multiple of D so window starts land on
+    slot-block boundaries (the blocked read/clear's alignment contract)."""
+    spec = mam_benchmark_spec(n_areas=4, n_per_area=48, k_intra=8, k_inter=8)
+    assert spec.ring_len % spec.delay_ratio == 0
+    assert spec.ring_len >= max(spec.steps_intra_max, spec.steps_inter_max) + 1
+    net = build_network(spec, seed=12)
+    assert net.ring_len % net.delay_ratio == 0
+
+
+def test_overflow_identical_across_schedules_and_blocked_path():
+    """Overflow accounting invariant: a forced-overflow run (tiny packet
+    bound, synchronized firing) reports a *nonzero* spill count identical
+    between the conventional schedule, the legacy per-cycle structure-aware
+    window, and the blocked (superstep) delivery -- per-cycle packing is
+    preserved inside the blocked packet, so the same spikes drop."""
+    spec = mam_benchmark_spec(n_areas=2, n_per_area=64, k_intra=4, k_inter=4,
+                              rate_hz=2000.0)  # interval 5: massed firing
+    net = build_network(spec, seed=12, outgoing=True)
+    counts = {}
+    for name, kw in [
+        ("conventional", dict(schedule="conventional")),
+        ("legacy", dict(schedule="structure_aware", superstep=False)),
+        ("superstep", dict(schedule="structure_aware")),
+        ("superstep_unroll", dict(schedule="structure_aware",
+                                  superstep_unroll=True)),
+    ]:
+        eng = make_engine(net, spec, EngineConfig(
+            neuron_model="ignore_and_fire", delivery_backend="event",
+            s_max_headroom=0.0, s_max_floor=1, **kw))
+        st = eng.init()
+        for _ in range(5):
+            st, _ = eng.window(st)
+        counts[name] = int(st.overflow)
+        assert int(st.spike_count.sum()) > 0
+    assert counts["conventional"] > 0
+    assert len(set(counts.values())) == 1, counts
+
+
+def test_deliver_inter_block_equals_per_cycle():
+    """delivery.deliver_inter_block(block) == D sequential deliver_inter
+    calls, bitwise, for every backend (the single-pass lumped exchange)."""
+    import jax.numpy as jnp
+
+    from repro.core import delivery
+
+    spec = mam_benchmark_spec(n_areas=4, n_per_area=48, k_intra=8, k_inter=8,
+                              rate_hz=30.0)
+    net = build_network(spec, seed=12, outgoing=True)
+    A, n_pad = net.alive.shape
+    D = net.delay_ratio
+    rng = np.random.default_rng(0)
+    block = jnp.asarray(rng.random((D, A * n_pad)) < 0.02, jnp.float32)
+    ring0 = jnp.asarray(
+        np.round(rng.normal(0, 8, (A, n_pad, net.ring_len))) / 256.0,
+        jnp.float32)
+    t0 = jnp.int32(3 * D)
+    for backend in ["onehot", "scatter", "pallas", "event"]:
+        want = ring0
+        for s in range(D):
+            want = delivery.deliver_inter(
+                want, block[s], net, t0 + s, backend=backend, s_max=256)
+        got = delivery.deliver_inter_block(
+            ring0, block, net, t0, backend=backend, s_max=256)
+        assert np.array_equal(np.asarray(got), np.asarray(want)), backend
+    # The memory guard (per-cycle deposits inside the block beyond the
+    # one-hot fold limit) must be bit-identical to the folded form.
+    import repro.core.delivery as delivery_mod
+    limit = delivery_mod.ONEHOT_FOLD_LIMIT
+    try:
+        delivery_mod.ONEHOT_FOLD_LIMIT = 0
+        got = delivery.deliver_inter_block(ring0, block, net, t0,
+                                           backend="onehot")
+    finally:
+        delivery_mod.ONEHOT_FOLD_LIMIT = limit
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
 def test_event_overflow_counter_reports_drops():
     """An undersized event packet drops spikes *visibly*: SimState.overflow
     counts them (the static analogue of NEST's spike-register resize)."""
