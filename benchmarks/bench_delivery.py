@@ -173,6 +173,61 @@ def bench_engine(name, spec, net, windows: int, results: list):
         ))
 
 
+def bench_wire_volume(name, spec, net, results: list):
+    """Dense-vs-routed wire bytes per window (static exchange accounting).
+
+    Pure shape/adjacency arithmetic from ``repro.core.exchange`` -- the same
+    counters the distributed engines report on ``Engine.wire_bytes`` -- for
+    a modelled structure-aware mesh (``min(8, A)`` area groups x 2-device
+    subgroups). Recorded for both wire formats: the event backend's id
+    packets (routed vs dense is apples-to-apples: fewer rounds AND smaller
+    per-edge packets) and the dense backends' bit-packed vectors (the
+    routed global pathway always ships id packets, so at dense-graph tiny
+    scales packed bits can win -- the table keeps that honest). On a
+    sparse area graph the routed exchange must ship strictly fewer global
+    bytes than the dense mesh collectives; asserted below for the
+    ``*_sparse`` config.
+    """
+    from repro.core import exchange as exchange_lib
+    from repro.core.connectivity import area_adjacency
+
+    A = spec.n_areas
+    n_groups = A if A <= 8 else 8
+    gsz = 2
+    adj = area_adjacency(net, spec)
+    print(f"\n-- {name} / wire volume (bytes/window, mesh-total, "
+          f"{n_groups} groups x {gsz} subgroup) --")
+    print(f"{'backend':10s} {'exchange':10s} {'local':>12s} {'global':>12s} "
+          f"{'total':>12s} {'rounds':>7s}")
+    out = {}
+    for backend in ("event", "scatter"):
+        rep = exchange_lib.wire_report(
+            net, adj, backend=backend, n_groups=n_groups, gsz=gsz,
+            headroom=8.0, floor=4)
+        for exch in ("dense", "routed"):
+            r = rep[exch]
+            rounds = r.get("rounds", max(n_groups - 1, 0))
+            print(f"{backend:10s} {exch:10s} {r['local_bytes']:12,d} "
+                  f"{r['global_bytes']:12,d} {r['total_bytes']:12,d} "
+                  f"{rounds:7d}")
+            results.append(dict(
+                config=name, phase="wire", backend=backend, exchange=exch,
+                local_bytes=r["local_bytes"], global_bytes=r["global_bytes"],
+                total_bytes=r["total_bytes"], rounds=rounds,
+                edges=r.get("edges"), n_groups=n_groups, gsz=gsz,
+                n_areas=A, delay_ratio=net.delay_ratio,
+            ))
+        out[backend] = rep
+    if name.endswith("_sparse"):
+        ev = out["event"]
+        assert (ev["routed"]["global_bytes"] < ev["dense"]["global_bytes"]), (
+            "routed exchange must ship strictly fewer global bytes on a "
+            "sparse area graph")
+        assert ev["routed"]["rounds"] < ev["routed"]["dense_rounds"], (
+            "routing must actually skip rounds on a sparse area graph")
+    return out
+
+
 def _representative_spikes(spec, net):
     """A real spike raster cycle from a warmed-up reference run."""
     import numpy as np
@@ -213,7 +268,8 @@ def main(argv=None) -> None:
 
     import jax
 
-    from repro.core.areas import mam_benchmark_spec, mam_spec
+    from repro.core.areas import (
+        mam_benchmark_spec, mam_spec, ring_area_adjacency)
     from repro.core.connectivity import build_network
     from repro.kernels.ops import default_interpret
 
@@ -226,17 +282,25 @@ def main(argv=None) -> None:
             n_areas=4, n_per_area=256, k_intra=32, k_inter=32)),
         # Laptop-scale 32-area MAM: heterogeneous sizes/rates, D=10.
         ("mam_x0.001", mam_spec(scale=0.001)),
+        # A deliberately sparse area graph (directed ring, width 2 of 8
+        # areas): the connectivity-routed exchange must skip rounds and
+        # ship strictly fewer global bytes here (asserted).
+        ("quickstart_sparse", mam_benchmark_spec(
+            n_areas=8, n_per_area=256, k_intra=32, k_inter=32,
+            area_adjacency=ring_area_adjacency(8, width=2))),
     ]
     if args.smoke:
-        configs = configs[:1]
+        configs = [configs[0], configs[2]]
     for name, spec in configs:
         net = build_network(spec, seed=12, outgoing=True)
         print(f"\n== {name}: {spec.n_areas} areas x {net.n_pad} pad "
               f"({spec.n_total} live), K={spec.k_total}, "
               f"D={net.delay_ratio}, ring={net.ring_len} ==")
-        spikes = _representative_spikes(spec, net)
-        bench_deliver_phase(name, spec, net, spikes, args.cycles, results)
-        bench_engine(name, spec, net, args.windows, results)
+        if not name.endswith("_sparse"):
+            spikes = _representative_spikes(spec, net)
+            bench_deliver_phase(name, spec, net, spikes, args.cycles, results)
+            bench_engine(name, spec, net, args.windows, results)
+        bench_wire_volume(name, spec, net, results)
 
     payload = dict(
         benchmark="delivery_backends",
@@ -255,7 +319,8 @@ def main(argv=None) -> None:
             f.write("\n")
         print(f"\nwrote {out}")
 
-    by = {(r["config"], r["phase"], r["backend"]): r for r in results}
+    by = {(r["config"], r["phase"], r["backend"]): r for r in results
+          if r["phase"] != "wire"}
     ev = by[("quickstart", "deliver", "event")]["speedup_vs_onehot"]
     ee = by[("quickstart", "engine", "event")]["speedup_vs_onehot"]
     print(f"quickstart event vs onehot: {ev:.1f}x (deliver phase), "
@@ -263,6 +328,12 @@ def main(argv=None) -> None:
     pc = by[("quickstart", "engine", "event-percycle")]["cycles_per_s"]
     ss = by[("quickstart", "engine", "event")]["cycles_per_s"]
     print(f"quickstart event superstep vs per-cycle window: {ss / pc:.2f}x")
+    wire = {(r["config"], r["backend"], r["exchange"]): r for r in results
+            if r["phase"] == "wire"}
+    dn = wire[("quickstart_sparse", "event", "dense")]["global_bytes"]
+    rt = wire[("quickstart_sparse", "event", "routed")]["global_bytes"]
+    print(f"quickstart_sparse routed vs dense global wire: "
+          f"{rt:,} vs {dn:,} B/window ({dn / rt:.2f}x fewer)")
 
 
 if __name__ == "__main__":

@@ -170,7 +170,7 @@ def measured_engine_walltime() -> Iterator[Row]:
     for sched in ("conventional", "structure_aware"):
         eng = make_engine(net, spec, EngineConfig(
             neuron_model="ignore_and_fire", schedule=sched,
-            deposit_onehot=False))
+            delivery_backend="scatter"))
         st = eng.init()
         st, _ = eng.run(st, 5)  # warm up + compile
         jax.block_until_ready(st.ring)
@@ -239,6 +239,33 @@ def measured_kernels() -> Iterator[Row]:
            bench(lif_ref, v, i_syn, refrac, i_in, alive), "us_per_call")
 
 
+def routed_vs_dense_comm() -> Iterator[Row]:
+    """Cost-model pricing of the exchange layer's wire counters: feed the
+    dense and connectivity-routed mesh-total bytes per window
+    (repro.core.exchange.wire_report, the numbers Engine.wire_bytes ships)
+    into simulate_rtf's communication term on a sparse area graph."""
+    from repro.core import exchange as exchange_lib
+    from repro.core.areas import mam_benchmark_spec, ring_area_adjacency
+    from repro.core.connectivity import area_adjacency, build_network
+
+    spec = mam_benchmark_spec(
+        n_areas=8, n_per_area=128, k_intra=16, k_inter=16,
+        area_adjacency=ring_area_adjacency(8, width=2))
+    net = build_network(spec, seed=12, outgoing=True)
+    rep = exchange_lib.wire_report(
+        net, area_adjacency(net, spec), backend="event", n_groups=8, gsz=2)
+    wl = cm.WorkloadModel(n_m=spec.n_total // 8, k_n=spec.k_total)
+    for name in ("dense", "routed"):
+        b = rep[name]["total_bytes"]
+        r = cm.simulate_rtf(wl, cm.SUPERMUC, 16, "structure_aware",
+                            seed=3, bytes_per_window=b)
+        yield (f"wire/{name}_bytes_per_window", float(b), "exchange_counter")
+        yield (f"wire/{name}_rtf_comm", r.communicate, "rtf")
+    yield ("wire/routed_vs_dense_bytes",
+           rep["routed"]["total_bytes"] / rep["dense"]["total_bytes"],
+           "lt_1_on_sparse_graph")
+
+
 def fig12_serial_correlation() -> Iterator[Row]:
     """Appendix Fig. 12: per-process cycle times show persistent elevated
     phases. We report the lag-k autocorrelation of the generative model that
@@ -269,6 +296,7 @@ ALL = (
     fig8_heterogeneity,
     fig9_real_world_mam,
     fig12_serial_correlation,
+    routed_vs_dense_comm,
     measured_engine_walltime,
     measured_kernels,
 )

@@ -37,7 +37,8 @@ def main() -> None:
     print(f"ghost-neuron padding (heterogeneous areas -> N_max): {ghost:.1%}")
 
     eng = make_engine(net, spec, EngineConfig(
-        neuron_model="lif", schedule=args.schedule, deposit_onehot=False))
+        neuron_model="lif", schedule=args.schedule,
+        delivery_backend="scatter"))
     st = eng.init()
     n_windows = spec.steps_for(args.t_ms) // spec.delay_ratio
     st, _ = eng.window(st)

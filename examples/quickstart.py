@@ -26,7 +26,7 @@ def main() -> None:
 
     engines = {
         sched: make_engine(net, spec, EngineConfig(
-            neuron_model="lif", schedule=sched, deposit_onehot=False))
+            neuron_model="lif", schedule=sched, delivery_backend="scatter"))
         for sched in ("conventional", "structure_aware")
     }
     states = {k: e.init() for k, e in engines.items()}

@@ -5,9 +5,11 @@ from repro.core.areas import (
     MultiAreaSpec,
     mam_benchmark_spec,
     mam_spec,
+    ring_area_adjacency,
 )
 from repro.core.connectivity import Network, build_network
 from repro.core.delivery import BACKENDS as DELIVERY_BACKENDS
+from repro.core.exchange import EXCHANGES
 from repro.core.engine import Engine, EngineConfig, SimState, make_engine
 from repro.core.dist_engine import (
     make_dist_engine,
@@ -28,9 +30,11 @@ __all__ = [
     "MultiAreaSpec",
     "mam_benchmark_spec",
     "mam_spec",
+    "ring_area_adjacency",
     "Network",
     "build_network",
     "DELIVERY_BACKENDS",
+    "EXCHANGES",
     "Engine",
     "EngineConfig",
     "SimState",

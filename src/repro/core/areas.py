@@ -32,6 +32,7 @@ __all__ = [
     "MultiAreaSpec",
     "mam_benchmark_spec",
     "mam_spec",
+    "ring_area_adjacency",
     "MAM_AREA_NAMES",
 ]
 
@@ -94,6 +95,15 @@ class MultiAreaSpec:
     # -- connectivity -------------------------------------------------------
     k_intra: int = 3000
     k_inter: int = 3000
+    # Optional area->area adjacency mask: ``area_adjacency[src][tgt]`` truthy
+    # iff source area ``src`` is allowed to project into target area ``tgt``.
+    # ``None`` means all-to-all (every other area), the MAM default. A sparse
+    # mask restricts the inter-area source draws in ``build_network`` -- the
+    # connectivity-routed global pathway (``core/exchange.RoutedExchange``)
+    # then ships spike packets only along edges that exist. Stored as nested
+    # tuples so the spec stays hashable/frozen; see
+    # :func:`ring_area_adjacency` for a canonical sparse example.
+    area_adjacency: tuple[tuple[int, ...], ...] | None = None
     exc_fraction: float = 0.8
     # Weights are drawn on a 1/256 grid (exactly representable in f32) so that
     # ring-buffer accumulation is associative-exact and the conventional and
@@ -129,6 +139,20 @@ class MultiAreaSpec:
             raise ValueError("in-degrees must be >= 0")
         if len(self.areas) == 1 and self.k_inter > 0:
             raise ValueError("single-area network cannot have inter-area synapses")
+        if self.area_adjacency is not None:
+            a = len(self.areas)
+            adj = np.asarray(self.area_adjacency, dtype=bool)
+            if adj.shape != (a, a):
+                raise ValueError(
+                    f"area_adjacency must be [{a}, {a}], got {adj.shape}"
+                )
+            if self.k_inter > 0:
+                valid = adj & ~np.eye(a, dtype=bool)
+                if not valid.any(axis=0).all():
+                    raise ValueError(
+                        "area_adjacency must give every target area at least "
+                        "one non-self source area when k_inter > 0"
+                    )
 
     # -- derived quantities ---------------------------------------------------
 
@@ -207,6 +231,43 @@ class MultiAreaSpec:
             raise ValueError("t_model_ms must be a multiple of dt_ms")
         return int(round(s))
 
+    def adjacency_matrix(self) -> np.ndarray:
+        """The [A, A] bool source->target adjacency this spec allows.
+
+        ``None`` (the default) means all-to-all minus the diagonal; inter-area
+        self-projections never exist (intra-area synapses are the separate
+        short-range tier).
+        """
+        a = self.n_areas
+        if self.area_adjacency is None:
+            adj = ~np.eye(a, dtype=bool)
+        else:
+            adj = np.asarray(self.area_adjacency, dtype=bool) & ~np.eye(
+                a, dtype=bool)
+        if self.k_inter == 0:
+            adj = np.zeros((a, a), dtype=bool)
+        return adj
+
+
+def ring_area_adjacency(
+    n_areas: int, width: int = 1
+) -> tuple[tuple[int, ...], ...]:
+    """A deliberately sparse area graph: a directed ring of degree ``width``.
+
+    ``adj[src][tgt]`` is 1 iff ``(tgt - src) mod A`` is in ``[1, width]`` --
+    each area projects only to its next ``width`` neighbours, so a
+    connectivity-routed exchange genuinely skips most group->group edges
+    (the all-to-all MAM default makes every edge exist). Used by the
+    exchange equivalence/wire-volume suites.
+    """
+    if not 1 <= width < n_areas:
+        raise ValueError(f"width must be in [1, {n_areas - 1}]")
+    return tuple(
+        tuple(1 if ((t - s) % n_areas) in range(1, width + 1) else 0
+              for t in range(n_areas))
+        for s in range(n_areas)
+    )
+
 
 def mam_benchmark_spec(
     n_areas: int = 4,
@@ -220,6 +281,7 @@ def mam_benchmark_spec(
     area_size_cv: float = 0.0,
     rate_cv: float = 0.0,
     seed: int = 12,
+    area_adjacency: tuple[tuple[int, ...], ...] | None = None,
 ) -> MultiAreaSpec:
     """The homogeneous MAM-benchmark (paper §4.2), arbitrarily scalable.
 
@@ -250,6 +312,7 @@ def mam_benchmark_spec(
         d_min_inter_ms=d_min_inter_ms,
         k_intra=k_intra if n_areas > 1 else k_intra + k_inter,
         k_inter=k_inter if n_areas > 1 else 0,
+        area_adjacency=area_adjacency,
     )
 
 

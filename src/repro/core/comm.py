@@ -1,4 +1,4 @@
-"""Two-tier spike exchange primitives (the paper's two communication pathways).
+"""Dense spike-exchange primitives (bit-packed gathers over the mesh tiers).
 
 The paper's §4.1.2 introduces *separate communication pathways* for short- and
 long-range spikes. On a TPU mesh ``(pod, data, model)``:
@@ -6,13 +6,24 @@ long-range spikes. On a TPU mesh ``(pod, data, model)``:
 * the **local pathway** runs every cycle but only over the ``model`` axis --
   the subgroup of devices hosting one area (the paper's proposed ``MPI_Group``
   generalisation). On hardware these are nearest-neighbour ICI hops.
-* the **global pathway** runs every D-th cycle over *all* axes and carries the
-  lumped ``[D, ...]`` spike block (larger, rarer messages -- the sublinear
+* the **global pathway** runs every D-th cycle and carries the lumped
+  ``[D, ...]`` spike block (larger, rarer messages -- the sublinear
   collective-cost regime of Fig. 4).
 
-Spikes travel as int8 (1 byte/neuron/step; a neuron fires at most once per
-0.1 ms step because of refractoriness), which both matches NEST's byte-level
-spike compression spirit and keeps collective bytes honest for the roofline.
+This module provides the *dense wire format* for both: bit-packed spike
+vectors assembled with tiled ``all_gather`` (``gather_area`` /
+``gather_global`` / ``gather_full``). It is one of the wire formats behind
+the pluggable exchange layer (:mod:`repro.core.exchange`): the
+``DenseMeshExchange`` uses these gathers for the dense delivery backends and
+compacted id packets for the event backend; the connectivity-``routed``
+exchange replaces the global gather entirely with ppermute packet rounds
+over the area-adjacency group graph, so fired ids only travel along edges
+that exist.
+
+Spikes travel as one *bit* per neuron per cycle on the dense wire (a neuron
+fires at most once per 0.1 ms step because of refractoriness), which both
+matches NEST's byte-level spike compression spirit and keeps collective
+bytes honest for the roofline.
 
 All functions below are written for use *inside* ``shard_map``.
 """

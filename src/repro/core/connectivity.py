@@ -29,7 +29,7 @@ import numpy as np
 
 from repro.core.areas import MultiAreaSpec
 
-__all__ = ["Network", "build_network", "network_sds"]
+__all__ = ["Network", "build_network", "network_sds", "area_adjacency"]
 
 
 @jax.tree_util.register_dataclass
@@ -118,13 +118,35 @@ class Network:
         )
 
 
-def network_sds(spec: MultiAreaSpec, *, size_multiple: int = 1) -> Network:
+def _outgoing_k_bound(k: int) -> int:
+    """Deterministic upper estimate of ``build_network``'s outgoing row width.
+
+    The real ``K_out`` is the maximum in-edge count over source neurons --
+    data-dependent, concentrated around the in-degree ``k`` with Poisson
+    fluctuations. The dry-run only needs a shape of the right order to lower
+    and compile, so we take mean + ~6 sigma (+ slack for tiny ``k``).
+    """
+    import math
+
+    if k <= 0:
+        return 0
+    return int(k + math.ceil(6.0 * math.sqrt(k)) + 8)
+
+
+def network_sds(
+    spec: MultiAreaSpec, *, size_multiple: int = 1, outgoing: bool = False
+) -> Network:
     """ShapeDtypeStruct stand-in for :func:`build_network` (no allocation).
 
     The production-scale MAM has ~25 billion synapses (~300 GB of
     connectivity tensors) -- far beyond this host. The dry-run only needs
     shapes/dtypes to lower and compile, so this constructs the Network pytree
-    with ShapeDtypeStruct leaves, exactly mirroring build_network.
+    with ShapeDtypeStruct leaves, mirroring build_network -- including, with
+    ``outgoing=True``, the inverted ``tgt_*/wout_*/dout_*`` tables the event
+    backend (and the routed exchange's global pathway) scatter through, so
+    ``launch/dryrun.py`` can lower those paths at production scale. The
+    outgoing row width is the deterministic bound of
+    :func:`_outgoing_k_bound` (the instantiated width is data-dependent).
     """
     import jax
 
@@ -132,6 +154,21 @@ def network_sds(spec: MultiAreaSpec, *, size_multiple: int = 1) -> Network:
     n_pad = spec.padded_area_size(size_multiple)
     K_i, K_e = spec.k_intra, spec.k_inter
     s = jax.ShapeDtypeStruct
+    out: dict = {}
+    if outgoing:
+        k_oi = _outgoing_k_bound(K_i)
+        out.update(
+            tgt_intra=s((A, n_pad, k_oi), jnp.int32),
+            wout_intra=s((A, n_pad, k_oi), jnp.float32),
+            dout_intra=s((A, n_pad, k_oi), jnp.int32),
+        )
+        if K_e > 0:
+            k_oe = _outgoing_k_bound(K_e)
+            out.update(
+                tgt_inter=s((A, n_pad, k_oe), jnp.int32),
+                wout_inter=s((A, n_pad, k_oe), jnp.float32),
+                dout_inter=s((A, n_pad, k_oe), jnp.int32),
+            )
     return Network(
         alive=s((A, n_pad), jnp.bool_),
         rate_hz=s((A, n_pad), jnp.float32),
@@ -153,6 +190,7 @@ def network_sds(spec: MultiAreaSpec, *, size_multiple: int = 1) -> Network:
         steps_lo_inter=spec.steps_inter_min,
         r_span_inter=(spec.steps_inter_max - spec.steps_inter_min + 1)
         if K_e > 0 else 0,
+        **out,
     )
 
 
@@ -246,13 +284,17 @@ def build_network(
     for a in range(A):
         src_intra[a] = rng.integers(0, sizes[a], size=(n_pad, K_i), dtype=np.int32)
 
-    # ---- inter-area: uniform source area != target area, then uniform neuron.
+    # ---- inter-area: uniform source area over the allowed adjacency (the
+    # default all-to-all mask draws uniformly from the other A-1 areas, the
+    # original behaviour), then uniform neuron within the source area.
+    adj = spec.adjacency_matrix()  # [A_src, A_tgt] bool, diagonal-free
     src_inter = np.zeros((A, n_pad, K_e), dtype=np.int32)
     if K_e > 0:
         for a in range(A):
-            # Draw source areas uniformly from the other A-1 areas.
-            other = rng.integers(0, A - 1, size=(n_pad, K_e), dtype=np.int32)
-            src_area = np.where(other >= a, other + 1, other)
+            allowed = np.flatnonzero(adj[:, a]).astype(np.int32)
+            pick = rng.integers(0, len(allowed), size=(n_pad, K_e),
+                                dtype=np.int32)
+            src_area = allowed[pick]
             idx = rng.integers(0, 1 << 30, size=(n_pad, K_e)) % sizes[src_area]
             src_inter[a] = src_area * n_pad + idx.astype(np.int32)
 
@@ -344,3 +386,32 @@ def build_network(
         r_span_inter=span_e,
         **out,
     )
+
+
+def area_adjacency(
+    net: Network, spec: MultiAreaSpec | None = None
+) -> np.ndarray:
+    """The realised area->area adjacency: ``adj[src, tgt]`` iff any neuron of
+    target area ``tgt`` (live or ghost -- ghosts receive deposits too, so the
+    routed exchange must ship to them for bit-identical rings) draws a source
+    from area ``src``.
+
+    Computed from the instantiated ``src_inter`` tables when the network
+    carries data; for a :func:`network_sds` stand-in (ShapeDtypeStruct
+    leaves, nothing to inspect) it falls back to the *spec-level* adjacency
+    (``MultiAreaSpec.area_adjacency``, all-to-all by default) -- a superset
+    of any instantiation, which is the safe direction: routing over a
+    superset ships some empty packets but never drops a synapse.
+    """
+    A = net.n_areas
+    if net.k_inter == 0:
+        return np.zeros((A, A), dtype=bool)
+    if not hasattr(net.src_inter, "__array__"):  # ShapeDtypeStruct stand-in
+        if spec is None:
+            return ~np.eye(A, dtype=bool)
+        return spec.adjacency_matrix()
+    src_area = np.asarray(net.src_inter) // net.n_pad        # [A_tgt, n, K]
+    adj = np.zeros((A, A), dtype=bool)
+    for tgt in range(A):
+        adj[np.unique(src_area[tgt]), tgt] = True
+    return adj

@@ -209,12 +209,19 @@ def simulate_rtf(
     *,
     t_model_s: float = 1.0,
     seed: int = 0,
+    bytes_per_window: float | None = None,
 ) -> PhaseBreakdown:
     """Monte-Carlo the full schedule and return per-phase real-time factors.
 
     Mirrors the paper's instrumentation: per-phase times are averaged over
     processes; synchronization is the mean waiting time at the barrier before
     the collective; communicate is the pure data exchange (Fig. 1b).
+
+    ``bytes_per_window`` overrides the analytic spike-buffer estimate with a
+    measured mesh-total wire volume -- the static counters the exchange
+    layer reports (``repro.core.exchange``, ``Engine.wire_bytes``), so the
+    model can price the dense vs connectivity-routed global pathway from
+    the same numbers the engines ship.
     """
     rng = np.random.default_rng(seed)
     s = int(round(t_model_s / (wl.dt_ms * 1e-3)))
@@ -249,9 +256,11 @@ def simulate_rtf(
     mean_compute = cycle_t.sum(axis=1).mean()
     t_sync = wall_compute_wait - mean_compute
 
-    # Data exchange: spikes from d cycles, all processes' buffers.
-    spikes_per_window = wl.spikes_per_proc_cycle() * d
-    bytes_per_window = spikes_per_window * wl.bytes_per_spike * m
+    # Data exchange: spikes from d cycles, all processes' buffers -- unless
+    # the caller supplies the exchange layer's measured wire volume.
+    if bytes_per_window is None:
+        spikes_per_window = wl.spikes_per_proc_cycle() * d
+        bytes_per_window = spikes_per_window * wl.bytes_per_spike * m
     n_windows = s // d
     t_comm = n_windows * hw.mpi.call_time_s(m, bytes_per_window)
     # The structure-aware local exchange is a buffer swap -- negligible, but

@@ -57,6 +57,7 @@ from repro.kernels import ops as kops
 
 __all__ = [
     "BACKENDS",
+    "expected_area_spikes",
     "event_bounds",
     "deliver_intra",
     "deliver_inter",
@@ -75,6 +76,23 @@ BACKENDS = ("onehot", "scatter", "pallas", "event")
 ONEHOT_FOLD_LIMIT = 2**28
 
 
+def expected_area_spikes(net: Network) -> float:
+    """Expected spikes per (padded) area per cycle -- the packet-sizing rule.
+
+    Uses the per-area target rate, which for ignore-and-fire is the exact
+    emission rate; ShapeDtypeStruct stand-ins (dry-run lowering) carry no
+    rate data and fall back to the 2.5 Hz MAM ground state. Single source of
+    truth for :func:`event_bounds` and the routed exchange's per-edge bounds
+    (``repro.core.exchange``), so the wire accounting always prices the
+    bounds the engines actually ship.
+    """
+    mean_rate = (
+        float(jnp.asarray(net.rate_hz).mean())
+        if hasattr(net.rate_hz, "mean") else 2.5
+    )
+    return net.alive.shape[1] * mean_rate * net.dt_ms * 1e-3
+
+
 def event_bounds(
     net: Network, *, headroom: float, floor: int
 ) -> tuple[int, int]:
@@ -82,17 +100,13 @@ def event_bounds(
 
     ``s_max = headroom x expected spikes/cycle + floor`` (cf. NEST's dynamic
     spike-register resizing; sizing is static here, the engines surface
-    overruns via ``SimState.overflow``). The expectation uses the per-area
-    target rate, which for ignore-and-fire is the exact emission rate. The
-    event path's cost is s_max-bound, so ``floor`` is the knob that trades
-    burst tolerance against wasted scatter width.
+    overruns via ``SimState.overflow``). The expectation is
+    :func:`expected_area_spikes`. The event path's cost is s_max-bound, so
+    ``floor`` is the knob that trades burst tolerance against wasted
+    scatter width.
     """
-    mean_rate = (
-        float(jnp.asarray(net.rate_hz).mean())
-        if hasattr(net.rate_hz, "mean") else 2.5
-    )
-    a, n_pad = net.alive.shape
-    exp_area = n_pad * mean_rate * net.dt_ms * 1e-3
+    a = net.alive.shape[0]
+    exp_area = expected_area_spikes(net)
     s_max_area = int(headroom * exp_area) + max(floor, 1)
     s_max_all = int(headroom * exp_area * a) + 4 * max(floor, 1)
     return s_max_area, s_max_all
@@ -293,14 +307,15 @@ def compact_fired(
     *true* number of fired neurons; ``count > s_max`` means the packet
     dropped spikes -- the engines accumulate that spill into
     ``SimState.overflow`` instead of failing silently.
+
+    The ``D == 1`` special case of :func:`repro.kernels.ops
+    .compact_ids_block` -- one compaction primitive serves every packet
+    (local pathway, lumped window, routed edges).
     """
-    f = fired.reshape(-1)
-    n = f.shape[0]
-    pos = kops.sized_nonzero(f, size=s_max, fill=n)
-    ok = pos < n
-    packet = jnp.where(ok, ids.reshape(-1)[jnp.where(ok, pos, 0)],
-                       jnp.int32(invalid))
-    return packet.astype(jnp.int32), f.sum(dtype=jnp.int32)
+    packet, count = kops.compact_ids_block(
+        fired.reshape(1, -1), ids.reshape(1, -1),
+        size=s_max, fill_id=invalid)
+    return packet[0], count[0]
 
 
 def compact_fired_block(
@@ -320,6 +335,7 @@ def compact_fired_block(
     per-cycle packings; the engines accumulate ``max(counts - s_max, 0)``
     into ``SimState.overflow`` either way.
     """
-    return jax.vmap(
-        lambda f: compact_fired(f, ids, s_max=s_max, invalid=invalid)
-    )(fired)
+    d_win = fired.shape[0]
+    return kops.compact_ids_block(
+        fired.reshape(d_win, -1), ids.reshape(-1),
+        size=s_max, fill_id=invalid)

@@ -1,4 +1,4 @@
-"""Distributed engine: the structure-aware scheme on a (pod, data, model) mesh.
+"""Distributed engine: the shared window core on a (pod, data, model) mesh.
 
 Placement:
 
@@ -6,26 +6,40 @@ Placement:
   ``(pod, data)``; each area's ``n_pad`` neurons are sharded over the fast
   ``model`` axis (the intra-area device subgroup -- the paper's ``MPI_Group``
   generalisation). Per cycle only the subgroup communicates (local pathway);
-  every D-th cycle the lumped ``[D, ...]`` spike block crosses the whole mesh
-  (global pathway).
+  every D-th cycle the lumped ``[D, ...]`` spike block crosses the area-group
+  graph (global pathway).
 
 * **conventional**: the round-robin analogue -- every device hosts a slice of
   *every* area (``n_pad`` sharded over all axes). Perfect balance, zero
   structure: the full spike vector must be exchanged globally every cycle.
 
-Both produce spike trains bit-identical to the single-host reference engine
-(tests/test_distributed.py runs them in an 8-device subprocess).
+The window body itself lives in :mod:`repro.core.schedule` (shared with the
+single-host engine -- superstep, legacy window and conventional scan
+included); this module only validates the placement, selects the exchange
+(``EngineConfig.exchange``) and wraps the body in ``shard_map``:
 
-Delivery inside the shard_map window bodies goes through the shared dispatch
-in :mod:`repro.core.delivery` (``EngineConfig.delivery_backend``). The dense
-backends (onehot/scatter/pallas) exchange bit-packed spike vectors
-(``comm.gather_*``); the ``event`` backend instead compacts fired neurons
-into fixed-size *id packets* before each exchange -- NEST's sparse wire
-format, the one the paper contrasts with dense vectors -- and the receive
-side scatters the ids through replicated outgoing tables
-(``ops.event_deliver_ids``). Packet bounds are static (``s_max``); spills
-are counted in ``SimState.overflow`` (any nonzero value means spikes were
-dropped and the bounds must be raised).
+* ``'dense'`` (:class:`repro.core.exchange.DenseMeshExchange`): the dense
+  backends exchange bit-packed spike vectors (``comm.gather_*``); the
+  ``event`` backend compacts fired neurons into fixed-size *id packets*
+  before each exchange (NEST's sparse wire format) and the receive side
+  scatters the ids through replicated outgoing tables. Either way the
+  global pathway is a mesh-wide ``all_gather``: every device receives every
+  fired id, even from areas that project nothing into its shard.
+
+* ``'routed'`` (:class:`repro.core.exchange.RoutedExchange`): the global
+  pathway mirrors network structure. The area->area adjacency computed at
+  build time (:func:`repro.core.connectivity.area_adjacency`) is folded to
+  the device-group graph; the window-end exchange ships id packets only
+  along group->group edges that exist, via ``ppermute`` rotation rounds
+  with per-edge ``s_max`` bounds. Sparse area graphs skip most rounds and
+  ship strictly fewer bytes (see ``Engine.wire_bytes`` and
+  ``benchmarks/bench_delivery.py``).
+
+All exchanges produce spike trains bit-identical to the single-host
+reference engine (tests/test_distributed.py, tests/test_exchange.py run them
+in 8-device subprocesses). Packet bounds are static; spills are counted in
+``SimState.overflow`` (any nonzero value means spikes were dropped and the
+bounds must be raised).
 """
 
 from __future__ import annotations
@@ -33,18 +47,18 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.kernels import ops as kops
 from repro.core.areas import MultiAreaSpec
+from repro.core import connectivity as connectivity_lib
 from repro.core.connectivity import Network
-from repro.core import comm, delivery as delivery_lib, neuron as neuron_lib
-from repro.core import ring_buffer
+from repro.core import exchange as exchange_lib
+from repro.core import neuron as neuron_lib
+from repro.core import schedule as schedule_lib
 from repro.core.engine import (
     CONVENTIONAL,
     STRUCTURE_AWARE,
@@ -158,6 +172,21 @@ def _validate(net: Network, mesh: Mesh, schedule: str) -> None:
             )
 
 
+def _make_exchange(
+    net: Network, spec: MultiAreaSpec, mesh: Mesh, cfg: EngineConfig
+) -> exchange_lib.Exchange:
+    name = cfg.exchange or "dense"
+    if name == "local":
+        raise ValueError(
+            "exchange='local' is the single-host identity; the distributed "
+            "engine needs 'dense' or 'routed'"
+        )
+    if name == "routed":
+        adjacency = connectivity_lib.area_adjacency(net, spec)
+        return exchange_lib.RoutedExchange(net, cfg, mesh, adjacency)
+    return exchange_lib.DenseMeshExchange(net, cfg, mesh)
+
+
 def make_dist_engine(
     net: Network,
     spec: MultiAreaSpec,
@@ -182,285 +211,13 @@ def make_dist_engine(
     area_axes = _area_axes(mesh)
     subgroup = _subgroup_axis(mesh)
     all_axes = tuple(mesh.axis_names)
-    n_dev = mesh.size
     lif_params, _ = resolve_params(net, spec, cfg)
     fused_lif = make_fused_lif_update(lif_params) if cfg.fused else None
 
-    # Per-shard form of resolve_params' drive_rate: the window bodies scale
-    # their device-local rate_hz slice by this factor.
-    drive_scale = spec.ext_rate_hz / 2.5
-
-    # Static event-packet bounds (see delivery.event_bounds): per-device
-    # shares of the single-host bounds, floored so tiny shards keep headroom.
-    if backend == "event":
-        s_max_area, s_max_all = delivery_lib.event_bounds(
-            net, headroom=cfg.s_max_headroom, floor=cfg.s_max_floor)
-        gsz = mesh.shape[subgroup]
-        s_max_loc = max(cfg.s_max_floor, -(-s_max_area // gsz))
-        s_max_dev = max(cfg.s_max_floor, -(-s_max_all // n_dev))
-    else:
-        s_max_loc = s_max_dev = 0
-
-    def _update(neuron_state, i_in, t, alive, rate_hz, gids):
-        if cfg.neuron_model == "lif":
-            drive = neuron_lib.poisson_drive(
-                cfg.seed, t, gids, rate_hz * drive_scale, net.dt_ms, spec.w_ext
-            )
-            if fused_lif is not None:
-                return fused_lif(neuron_state, i_in + drive, alive)
-            return neuron_lib.lif_update(neuron_state, i_in + drive, alive, lif_params)
-        return neuron_lib.ignore_and_fire_update(
-            neuron_state, i_in, alive, rate_hz, net.dt_ms
-        )
-
-    def _axis_offset(axes, block: int):
-        """This device's row offset for a dim sharded over ``axes`` (row-major)."""
-        idx = jnp.int32(0)
-        for ax in axes:
-            idx = idx * mesh.shape[ax] + jax.lax.axis_index(ax)
-        return idx * block
-
-    # ---------------- shard_map window bodies --------------------------------
-
-    def window_struct(state: SimState, lnet: Network, gids: jax.Array):
-        """Structure-aware: D local cycles + one lumped global exchange.
-
-        With ``cfg.use_superstep`` (the default) the window is one fused
-        D-cycle superstep: a blocked ``[.., D]`` ring read/clear, D unrolled
-        cycles consuming window-static slots of the live buffer ``fut``, and
-        a *single-pass* blocked scatter of the lumped ``[D, ...]`` exchange
-        (the wire already carried the whole window; now the receive side
-        stops replaying it cycle by cycle).
-        """
-        t0 = state.t
-        a_loc, n_loc = lnet.alive.shape
-
-        def cycle_body(st_ring, t, neuron, spike_count, over, fut_mode):
-            """One deliver->update->collocate cycle; ``fut_mode`` means
-            ``st_ring`` is the live window buffer and ``t`` the static
-            within-window index (deposits are wrap-free by construction)."""
-            ring = st_ring
-            if fut_mode:
-                i_in, t_abs = ring[..., t], t0 + t
-            else:
-                i_in, ring = ring_buffer.read_and_clear(ring, t)
-                t_abs = t
-            nstate, spikes = _update(
-                neuron, i_in, t_abs, lnet.alive, lnet.rate_hz, gids
-            )
-            s8 = spikes.astype(jnp.int8)
-            if backend == "event" and lnet.src_intra.shape[-1] > 0:
-                # Local pathway, sparse wire: compact fired neurons into
-                # per-area id packets *before* the subgroup exchange.
-                noff = jax.lax.axis_index(subgroup) * n_loc
-                ids = noff + jnp.arange(n_loc, dtype=jnp.int32)
-                packets, counts = jax.vmap(
-                    lambda f: delivery_lib.compact_fired(
-                        f, ids, s_max=s_max_loc, invalid=n_pad)
-                )(spikes)
-                over_local = jnp.maximum(counts - s_max_loc, 0).sum()
-                over = over + jax.lax.psum(over_local, all_axes)
-                wire = jax.lax.all_gather(
-                    packets, subgroup, axis=1, tiled=True)  # [A_loc, gsz*s]
-
-                # Scatter straight into this device's neuron window of each
-                # area: within-area target -> local row, -1 if not ours.
-                def to_local(i):
-                    il = i - noff
-                    keep = (il >= 0) & (il < n_loc)
-                    return jnp.where(keep, il, -1)
-
-                ring = jax.vmap(
-                    lambda r, idl, tg, w, d: kops.event_deliver_ids(
-                        r, idl, tg, w, d, t, tgt_map=to_local)
-                )(ring, wire, lnet.tgt_intra, lnet.wout_intra,
-                  lnet.dout_intra)
-            elif backend != "event":
-                # Local pathway, dense wire: complete this device's areas
-                # over the subgroup, then deliver via the shared dispatch.
-                area_spikes = comm.gather_area(s8, subgroup_axis=subgroup)
-                ring = delivery_lib.deliver_intra(
-                    ring, area_spikes.astype(jnp.float32), lnet, t,
-                    backend=backend)
-            return ring, nstate, spike_count + spikes.astype(jnp.int32), over, s8
-
-        if cfg.use_superstep:
-            fut, ring = ring_buffer.open_window(
-                state.ring, t0, D, lnet.live_window)
-            neuron, spike_count, over = (
-                state.neuron, state.spike_count, state.overflow)
-            if cfg.superstep_unroll:
-                cols = []
-                for s in range(D):  # unrolled: static slot indices throughout
-                    fut, neuron, spike_count, over, s8 = cycle_body(
-                        fut, s, neuron, spike_count, over, fut_mode=True)
-                    cols.append(s8)
-                block = jnp.stack(cols)
-            else:
-                # Scan over the live window buffer (see engine.py): the
-                # cheap [.., W] column access without the ~Dx op blow-up of
-                # a fully unrolled jnp graph.
-                def sbody(carry, s):
-                    fut, neuron, spike_count, over = carry
-                    fut, neuron, spike_count, over, s8 = cycle_body(
-                        fut, s, neuron, spike_count, over, fut_mode=True)
-                    return (fut, neuron, spike_count, over), s8
-
-                (fut, neuron, spike_count, over), block = jax.lax.scan(
-                    sbody, (fut, neuron, spike_count, over),
-                    jnp.arange(D, dtype=jnp.int32))
-            ring = ring_buffer.merge_window_tail(ring, fut[..., D:], t0 + D)
-            state = SimState(
-                neuron=neuron, ring=ring, t=t0 + D,
-                spike_count=spike_count, overflow=over,
-            )
-        else:
-            def cycle(st, _):
-                ring, nstate, spike_count, over, s8 = cycle_body(
-                    st.ring, st.t, st.neuron, st.spike_count, st.overflow,
-                    fut_mode=False)
-                return SimState(neuron=nstate, ring=ring, t=st.t + 1,
-                                spike_count=spike_count, overflow=over), s8
-
-            state, block = jax.lax.scan(cycle, state, None, length=D)
-
-        if lnet.src_inter.shape[-1] == 0:
-            return state, block
-
-        # Global pathway: one collective for the whole window (paper Fig. 3).
-        if backend == "event":
-            # Sparse wire: one (id, step) packet for the whole window.
-            packets, counts = delivery_lib.compact_fired_block(
-                block != 0, gids, s_max=s_max_dev, invalid=A * n_pad
-            )                                            # [D, s], [D]
-            over = state.overflow + jax.lax.psum(
-                jnp.maximum(counts - s_max_dev, 0).sum(), all_axes)
-            wire = jax.lax.all_gather(
-                packets, all_axes, axis=1, tiled=True)   # [D, n_dev*s]
-            k_out = lnet.tgt_inter.shape[-1]
-            tgt_f = lnet.tgt_inter.reshape(A * n_pad, k_out)
-            w_f = lnet.wout_inter.reshape(A * n_pad, k_out)
-            d_f = lnet.dout_inter.reshape(A * n_pad, k_out)
-
-            # Scatter the global packets straight into this device's ring
-            # shard: global target id -> local row, -1 if another device
-            # owns it. No full-network buffer is ever materialised.
-            aoff = _axis_offset(area_axes, a_loc)
-            noff = _axis_offset((subgroup,), n_loc)
-
-            def to_local(g):
-                al = g // n_pad - aoff
-                il = g % n_pad - noff
-                keep = (al >= 0) & (al < a_loc) & (il >= 0) & (il < n_loc)
-                return jnp.where(keep, al * n_loc + il, -1)
-
-            if cfg.use_superstep:
-                # Single-pass blocked receive: all D packets in one scatter.
-                ring_flat = kops.event_deliver_block(
-                    state.ring.reshape(a_loc * n_loc, R), wire,
-                    tgt_f, w_f, d_f, t0, tgt_map=to_local)
-            else:
-                def deliver_s(s, ring_flat):
-                    return kops.event_deliver_ids(
-                        ring_flat, wire[s], tgt_f, w_f, d_f, t0 + s,
-                        tgt_map=to_local)
-
-                ring_flat = jax.lax.fori_loop(
-                    0, D, deliver_s, state.ring.reshape(a_loc * n_loc, R))
-            return dataclasses.replace(
-                state, ring=ring_flat.reshape(a_loc, n_loc, R),
-                overflow=over), block
-
-        gblock = comm.gather_global(
-            block, area_axes=area_axes, subgroup_axis=subgroup
-        )  # [D, A, n_pad] int8
-        gflat = gblock.astype(jnp.float32).reshape(D, A * n_pad)
-
-        if cfg.use_superstep:
-            # Single-pass blocked receive for the dense backends too.
-            ring = delivery_lib.deliver_inter_block(
-                state.ring, gflat, lnet, t0, backend=backend)
-            return dataclasses.replace(state, ring=ring), block
-
-        def deliver_s(s, ring):
-            return delivery_lib.deliver_inter(
-                ring, gflat[s], lnet, t0 + s, backend=backend)
-
-        ring = jax.lax.fori_loop(0, D, deliver_s, state.ring)
-        return dataclasses.replace(state, ring=ring), block
-
-    def window_conv(state: SimState, lnet: Network, gids: jax.Array):
-        """Conventional: global exchange every cycle (round-robin analogue)."""
-        a_loc, n_loc = lnet.alive.shape  # a_loc == A; n_loc = n_pad / n_dev
-
-        def cycle(st, _):
-            i_in, ring = ring_buffer.read_and_clear(st.ring, st.t)
-            nstate, spikes = _update(
-                st.neuron, i_in, st.t, lnet.alive, lnet.rate_hz, gids
-            )
-            s8 = spikes.astype(jnp.int8)
-            over = st.overflow
-            if backend == "event":
-                # One sparse global exchange feeds both pathways.
-                packet, count = delivery_lib.compact_fired(
-                    spikes, gids, s_max=s_max_dev, invalid=A * n_pad)
-                over = over + jax.lax.psum(
-                    jnp.maximum(count - s_max_dev, 0), all_axes)
-                wire = jax.lax.all_gather(
-                    packet, all_axes, axis=0, tiled=True)  # [n_dev*s]
-                noff = _axis_offset(all_axes, n_loc)
-
-                # Both scatters go straight into this device's neuron window
-                # (rows [noff, noff + n_loc) of every area) -- no full
-                # [A, n_pad, R] buffer.
-                def win_local(i):
-                    il = i - noff
-                    keep = (il >= 0) & (il < n_loc)
-                    return jnp.where(keep, il, -1)
-
-                if lnet.src_intra.shape[-1] > 0:
-                    # Short-range: per-area within-area ids from the list.
-                    areas = jnp.arange(A, dtype=jnp.int32)
-                    ids_a = jnp.where(
-                        wire[None, :] // n_pad == areas[:, None],
-                        wire[None, :] % n_pad, n_pad)       # [A, S]
-                    ring = jax.vmap(
-                        lambda r, idl, tg, w, d: kops.event_deliver_ids(
-                            r, idl, tg, w, d, st.t, tgt_map=win_local)
-                    )(ring, ids_a, lnet.tgt_intra, lnet.wout_intra,
-                      lnet.dout_intra)
-                # Long-range: global target id -> (area row, local window).
-                if lnet.src_inter.shape[-1] > 0:
-                    k_out = lnet.tgt_inter.shape[-1]
-
-                    def glob_local(g):
-                        il = g % n_pad - noff
-                        keep = (il >= 0) & (il < n_loc)
-                        return jnp.where(keep, (g // n_pad) * n_loc + il, -1)
-
-                    ring = kops.event_deliver_ids(
-                        ring.reshape(A * n_loc, R), wire,
-                        lnet.tgt_inter.reshape(A * n_pad, k_out),
-                        lnet.wout_inter.reshape(A * n_pad, k_out),
-                        lnet.dout_inter.reshape(A * n_pad, k_out),
-                        st.t, tgt_map=glob_local).reshape(A, n_loc, R)
-            else:
-                # One global all_gather per cycle: every device needs the full
-                # vector because its neurons' sources are scattered everywhere.
-                full = comm.gather_full(s8, all_axes)
-                full_f = full.astype(jnp.float32)  # [A, n_pad]
-                ring = delivery_lib.deliver_intra(
-                    ring, full_f, lnet, st.t, backend=backend)
-                ring = delivery_lib.deliver_inter(
-                    ring, full_f.reshape(-1), lnet, st.t, backend=backend)
-            st = SimState(
-                neuron=nstate, ring=ring, t=st.t + 1,
-                spike_count=st.spike_count + spikes.astype(jnp.int32),
-                overflow=over,
-            )
-            return st, s8
-
-        return jax.lax.scan(cycle, state, None, length=D)
+    exchange = _make_exchange(net, spec, mesh, cfg)
+    update_fn = schedule_lib.make_update_fn(
+        cfg, spec, net.dt_ms, lif_params, fused_lif)
+    window_body = schedule_lib.make_window_fn(cfg, exchange, update_fn)
 
     # ---------------- assemble jitted entry points ---------------------------
 
@@ -476,9 +233,8 @@ def make_dist_engine(
     else:
         block_spec = P(None, None, all_axes)
 
-    body = window_struct if cfg.schedule == STRUCTURE_AWARE else window_conv
     window_sm = shard_map(
-        body,
+        window_body,
         mesh=mesh,
         in_specs=(st_specs, nt_specs, gid_spec),
         out_specs=(st_specs, block_spec),
@@ -520,4 +276,5 @@ def make_dist_engine(
         return jax.lax.scan(step, state, None, length=n_windows)
 
     return Engine(init=init, window=window, run=run, config=cfg,
-                  delay_ratio=D, window_raw=window_sm)
+                  delay_ratio=D, window_raw=window_sm,
+                  wire_bytes=exchange.wire_bytes(net))

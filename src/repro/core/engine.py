@@ -1,31 +1,32 @@
-"""Single-host reference engine: conventional vs structure-aware schedules.
+"""Single-host reference engine: a thin assembly over the shared window core.
 
-This is the semantic reference for the distributed engine and the Pallas
-kernels. It advances the network in *windows* of ``D`` cycles (``D`` = delay
-ratio, paper eq. (1)); each cycle is the paper's deliver -> update -> collocate
-sequence (Fig. 3):
+The engine advances the network in *windows* of ``D`` cycles (``D`` = delay
+ratio, paper eq. (1)); each cycle is the paper's deliver -> update ->
+collocate sequence (Fig. 3):
 
-* ``conventional``: inter-area spikes are delivered every cycle (this is what
-  the per-cycle global ``MPI_Alltoall`` achieves in the reference code);
+* ``conventional``: inter-area spikes are delivered every cycle;
 * ``structure_aware``: inter-area spikes are *accumulated* for the whole
-  window and delivered in one lumped exchange at the window end. Causality is
-  guaranteed because every inter-area delay is >= D steps.
+  window and delivered in one lumped exchange at the window end. Causality
+  is guaranteed because every inter-area delay is >= D steps.
 
-Both schedules produce **bit-identical** spike trains: delivery weights live on
-an exact 1/256 grid, so f32 ring accumulation is associative-exact, and the
-external drive is a counter-based function of absolute model time.
+Both schedules produce **bit-identical** spike trains: delivery weights live
+on an exact 1/256 grid, so f32 ring accumulation is associative-exact, and
+the external drive is a counter-based function of absolute model time.
 
-The per-cycle *deliver* hot path is backend-selectable
-(``EngineConfig.delivery_backend``) and shared with the distributed engine --
-see :mod:`repro.core.delivery` for the four backends and their cost
-trade-offs.
+The window/cycle bodies live in :mod:`repro.core.schedule`, shared with the
+distributed engine (``dist_engine.py``) and parameterized by an
+:class:`repro.core.exchange.Exchange`; this module only resolves the config,
+builds the single-host :class:`~repro.core.exchange.LocalExchange`, and jits
+the assembled window. The per-cycle *deliver* hot path is backend-selectable
+(``EngineConfig.delivery_backend``) -- see :mod:`repro.core.delivery`.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, NamedTuple
+import warnings
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -33,13 +34,19 @@ import jax.numpy as jnp
 from repro.core.areas import MultiAreaSpec
 from repro.core.connectivity import Network
 from repro.core import delivery as delivery_lib
+from repro.core import exchange as exchange_lib
 from repro.core import neuron as neuron_lib
-from repro.core import ring_buffer
+from repro.core import schedule as schedule_lib
+from repro.core.schedule import CONVENTIONAL, STRUCTURE_AWARE, SimState
 
-__all__ = ["EngineConfig", "SimState", "Engine", "make_engine"]
-
-CONVENTIONAL = "conventional"
-STRUCTURE_AWARE = "structure_aware"
+__all__ = [
+    "EngineConfig",
+    "SimState",
+    "Engine",
+    "make_engine",
+    "CONVENTIONAL",
+    "STRUCTURE_AWARE",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,14 +58,22 @@ class EngineConfig:
         default_factory=neuron_lib.LIFParams
     )
     # The per-cycle deliver hot path: 'onehot' | 'scatter' | 'pallas' |
-    # 'event' (see repro.core.delivery). The empty string derives the backend
-    # from the legacy knobs below, which predate the unified dispatch and are
-    # kept so existing configs/tests keep meaning the same thing.
+    # 'event' (see repro.core.delivery). The empty string resolves the legacy
+    # knobs below (or 'onehot' when none are set); the `backend` property is
+    # the single resolution point.
     delivery_backend: str = ""
-    # Legacy: one-hot-einsum (True) vs scatter-add (False) deposit.
-    deposit_onehot: bool = True
-    # Legacy: 'dense' (gather-matvec) vs 'event' (compact + scatter).
-    delivery: str = "dense"
+    # How spikes travel between distributed shards (repro.core.exchange):
+    # 'dense' (mesh-wide collectives) | 'routed' (connectivity-routed packet
+    # rounds over the area-adjacency group graph; structure-aware only).
+    # '' resolves to 'local' for the single-host engine and 'dense' for the
+    # distributed one.
+    exchange: str = ""
+    # DEPRECATED: one-hot-einsum (True) vs scatter-add (False) deposit.
+    # Predates the unified dispatch; use delivery_backend='onehot'/'scatter'.
+    deposit_onehot: bool | None = None
+    # DEPRECATED: 'dense' (gather-matvec) vs 'event' (compact + scatter).
+    # Use delivery_backend='event' (or a dense backend) instead.
+    delivery: str | None = None
     # Use the fused Pallas LIF kernel (kernels.ops.lif_update) for the update
     # phase. None = enable exactly when delivery_backend is 'pallas' (the
     # all-kernel cycle); the flag exists so the fused update can be tested
@@ -106,12 +121,30 @@ class EngineConfig:
             raise ValueError(f"unknown neuron model {self.neuron_model!r}")
         if self.schedule not in (CONVENTIONAL, STRUCTURE_AWARE):
             raise ValueError(f"unknown schedule {self.schedule!r}")
-        if self.delivery not in ("dense", "event"):
+        if self.delivery not in (None, "dense", "event"):
             raise ValueError(f"unknown delivery {self.delivery!r}")
+        if self.deposit_onehot is not None or self.delivery is not None:
+            warnings.warn(
+                "EngineConfig.deposit_onehot/delivery are deprecated; use "
+                "delivery_backend='onehot'|'scatter'|'pallas'|'event' (the "
+                "`backend` property is the single resolution point)",
+                DeprecationWarning,
+                stacklevel=3,
+            )
         if self.delivery_backend not in ("",) + delivery_lib.BACKENDS:
             raise ValueError(
                 f"unknown delivery_backend {self.delivery_backend!r} "
                 f"(expected one of {delivery_lib.BACKENDS})"
+            )
+        if self.exchange not in ("",) + exchange_lib.EXCHANGES:
+            raise ValueError(
+                f"unknown exchange {self.exchange!r} "
+                f"(expected one of {exchange_lib.EXCHANGES})"
+            )
+        if self.exchange == "routed" and self.schedule != STRUCTURE_AWARE:
+            raise ValueError(
+                "exchange='routed' routes the structure-aware window's "
+                "lumped global pathway; the conventional schedule has none"
             )
         if self.superstep is True and self.schedule != STRUCTURE_AWARE:
             raise ValueError(
@@ -132,12 +165,14 @@ class EngineConfig:
 
     @property
     def backend(self) -> str:
-        """The resolved delivery backend (legacy knobs folded in)."""
+        """The resolved delivery backend (deprecated knobs folded in)."""
         if self.delivery_backend:
             return self.delivery_backend
         if self.delivery == "event":
             return "event"
-        return "onehot" if self.deposit_onehot else "scatter"
+        if self.deposit_onehot is False:
+            return "scatter"
+        return "onehot"
 
     @property
     def fused(self) -> bool:
@@ -154,20 +189,6 @@ class EngineConfig:
         return True if self.superstep is None else self.superstep
 
 
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass
-class SimState:
-    neuron: Any               # LIFState or IafState pytree
-    ring: jax.Array           # [A, n_pad, R]
-    t: jax.Array              # scalar int32, absolute cycle index
-    spike_count: jax.Array    # [A, n_pad] int32 cumulative spikes
-    # Scalar int32: spikes dropped because an event-path packet exceeded its
-    # static s_max bound (0 unless delivery_backend == 'event'; any nonzero
-    # value means the run is no longer exact and s_max_headroom/floor must be
-    # raised).
-    overflow: Any = None
-
-
 class Engine(NamedTuple):
     init: Callable[[], SimState]
     # Advance one window of D cycles; returns (state', spikes[D, A, n_pad] bool).
@@ -180,6 +201,9 @@ class Engine(NamedTuple):
     # (state, net, gids) -> (state, block), used by the dry-run to lower with
     # ShapeDtypeStruct connectivity (production scale, no allocation).
     window_raw: Callable | None = None
+    # Static mesh-total wire bytes per window of the selected exchange
+    # (repro.core.exchange; all zeros for the single-host LocalExchange).
+    wire_bytes: dict | None = None
 
 
 def make_fused_lif_update(params: neuron_lib.LIFParams):
@@ -205,15 +229,22 @@ def resolve_params(net: Network, spec: MultiAreaSpec, cfg: EngineConfig):
     """``(lif_params, drive_rate)`` as the engines actually run them.
 
     The dt-corrected LIF propagators and the per-neuron external drive rate
-    (area rate relative to the 2.5 Hz reference scales ``spec.ext_rate_hz``,
-    the Fig. 8b heterogeneity). Single source of truth shared by both
-    engines and the phase profiler (``launch/simulate.py --profile``), so
-    profiling always times the same math the engine executes.
+    ``rate_hz * (ext_rate_hz / 2.5)`` -- the area rate relative to the 2.5 Hz
+    reference scales ``spec.ext_rate_hz`` (Fig. 8b heterogeneity), in the
+    exact expression the shared update closure uses
+    (:func:`repro.core.schedule.make_update_fn`), so the fused superstep
+    kernel and the phase profiler time/drive the same math bit-for-bit.
     """
     lif_params = cfg.lif
     if abs(lif_params.dt_ms - net.dt_ms) > 1e-12:
         lif_params = dataclasses.replace(lif_params, dt_ms=net.dt_ms)
-    drive_rate = net.rate_hz / 2.5 * spec.ext_rate_hz
+    # ShapeDtypeStruct stand-ins (dry-run lowering) carry no data to scale;
+    # the eager drive_rate is only consumed by the single-host fused kernel
+    # and the phase profiler, which always hold real networks.
+    drive_rate = (
+        net.rate_hz * (spec.ext_rate_hz / 2.5)
+        if hasattr(net.rate_hz, "__array__") else None
+    )
     return lif_params, drive_rate
 
 
@@ -284,11 +315,17 @@ def make_engine(
     """Build a jitted reference engine for ``net``.
 
     The returned callables close over the (host-resident) connectivity; the
-    distributed engine in ``dist_engine.py`` shards the same computation.
+    distributed engine in ``dist_engine.py`` shards the same window body
+    (:mod:`repro.core.schedule`) over a device mesh.
     """
     D = net.delay_ratio
     A, n_pad = net.alive.shape
     cfg = config
+    if cfg.exchange not in ("", "local"):
+        raise ValueError(
+            f"exchange={cfg.exchange!r} needs a device mesh; the single-host "
+            "engine is exchange-free (use make_dist_engine)"
+        )
     backend = cfg.backend
     if backend == "event" and net.tgt_intra is None:
         raise ValueError("event delivery needs build_network(outgoing=True)")
@@ -296,166 +333,19 @@ def make_engine(
     fused_lif = make_fused_lif_update(lif_params) if cfg.fused else None
     gids = jnp.arange(A * n_pad, dtype=jnp.int32).reshape(A, n_pad)
 
-    def _update(neuron_state, i_in, t):
-        if cfg.neuron_model == "lif":
-            drive = neuron_lib.poisson_drive(
-                cfg.seed, t, gids, drive_rate, net.dt_ms, spec.w_ext
-            )
-            if fused_lif is not None:
-                return fused_lif(neuron_state, i_in + drive, net.alive)
-            return neuron_lib.lif_update(
-                neuron_state, i_in + drive, net.alive, lif_params
-            )
-        return neuron_lib.ignore_and_fire_update(
-            neuron_state, i_in, net.alive, net.rate_hz, net.dt_ms
-        )
-
-    s_max_area, s_max_all = delivery_lib.event_bounds(
-        net, headroom=cfg.s_max_headroom, floor=cfg.s_max_floor)
-
-    def _deliver_intra(ring, spikes_f32, t):
-        return delivery_lib.deliver_intra(
-            ring, spikes_f32, net, t, backend=backend, s_max=s_max_area)
-
-    def _deliver_inter(ring, spikes_f32, t):
-        return delivery_lib.deliver_inter(
-            ring, spikes_f32.reshape(-1), net, t,
-            backend=backend, s_max=s_max_all)
-
-    def _overflow(spikes, deliver_inter_now: bool):
-        """Spikes dropped by the event path's static packet bounds."""
-        if backend != "event":
-            return jnp.int32(0)
-        per_area = spikes.sum(axis=-1, dtype=jnp.int32)   # [A]
-        over = jnp.int32(0)
-        if net.k_intra > 0:
-            over = jnp.maximum(per_area - s_max_area, 0).sum()
-        if deliver_inter_now and net.k_inter > 0:
-            over = over + jnp.maximum(per_area.sum() - s_max_all, 0)
-        return over
-
-    def _cycle(state: SimState, deliver_inter_now: bool):
-        """deliver -> update -> collocate for one dt step."""
-        i_in, ring = ring_buffer.read_and_clear(state.ring, state.t)
-        neuron_state, spikes = _update(state.neuron, i_in, state.t)
-        sf = spikes.astype(jnp.float32)
-        ring = _deliver_intra(ring, sf, state.t)
-        if deliver_inter_now:
-            ring = _deliver_inter(ring, sf, state.t)
-        new_state = SimState(
-            neuron=neuron_state,
-            ring=ring,
-            t=state.t + 1,
-            spike_count=state.spike_count + spikes.astype(jnp.int32),
-            overflow=state.overflow + _overflow(spikes, deliver_inter_now),
-        )
-        return new_state, spikes
-
-    # Live-window width of the fused superstep: relative slots [0, D) are the
-    # window's own input columns, [D, W) the overhang that intra deposits can
-    # reach past the window end; every within-window slot index is wrap-free
-    # (see Network.live_window).
-    W = net.live_window
-
+    exchange = exchange_lib.LocalExchange(net, cfg)
+    update_fn = schedule_lib.make_update_fn(
+        cfg, spec, net.dt_ms, lif_params, fused_lif)
     fused_window = (
         make_fused_superstep(net, spec, cfg, lif_params, drive_rate, gids)
         if cfg.superstep_kernel else None
     )
+    window_body = schedule_lib.make_window_fn(
+        cfg, exchange, update_fn, fused_superstep=fused_window)
 
-    def window_superstep(state: SimState) -> tuple[SimState, jax.Array]:
-        """One fused D-cycle superstep (structure-aware schedule).
-
-        Blocked ring access: windows are phase-aligned (t0 ≡ 0 mod D and
-        ring_len ≡ 0 mod D), so the window's D input slots are one contiguous
-        block -- read and cleared once, consumed at static indices.
-        """
-        t0 = state.t
-        fut, ring = ring_buffer.open_window(state.ring, t0, D, W)
-        neuron_state = state.neuron
-        over = state.overflow
-        if fused_window is not None:
-            neuron_state, spikes_blk, fut = fused_window(
-                neuron_state, fut, t0)
-        elif cfg.superstep_unroll:
-            cols = []
-            for s in range(D):  # unrolled: s is static, slot math vanishes
-                neuron_state, spikes = _update(
-                    neuron_state, fut[..., s], t0 + s)
-                fut = _deliver_intra(fut, spikes.astype(jnp.float32), s)
-                over = over + _overflow(spikes, deliver_inter_now=False)
-                cols.append(spikes)
-            spikes_blk = jnp.stack(cols)
-        else:
-            # Scan over the live window: slot access touches only the small
-            # [.., W] buffer (wrap-free by construction), never the ring.
-            def body(carry, s):
-                neuron_state, fut, over = carry
-                neuron_state, spikes = _update(
-                    neuron_state, fut[..., s], t0 + s)
-                fut = _deliver_intra(fut, spikes.astype(jnp.float32), s)
-                over = over + _overflow(spikes, deliver_inter_now=False)
-                return (neuron_state, fut, over), spikes
-
-            (neuron_state, fut, over), spikes_blk = jax.lax.scan(
-                body, (neuron_state, fut, over),
-                jnp.arange(D, dtype=jnp.int32))
-        ring = ring_buffer.merge_window_tail(ring, fut[..., D:], t0 + D)
-
-        # The lumped 'global communication', single pass: the whole [D, A, N]
-        # block through deliver_inter_block. Every inter-area delay is >= D,
-        # so slot (t0+s+d) is strictly in the future of the window -- causal
-        # (paper §2.1) and bit-identical to D per-cycle deliveries.
-        if net.k_inter > 0:
-            block_flat = spikes_blk.reshape(D, -1).astype(jnp.float32)
-            ring = delivery_lib.deliver_inter_block(
-                ring, block_flat, net, t0, backend=backend, s_max=s_max_all)
-            if backend == "event":
-                counts = spikes_blk.reshape(D, -1).sum(
-                    axis=-1, dtype=jnp.int32)
-                over = over + jnp.maximum(counts - s_max_all, 0).sum()
-        new_state = SimState(
-            neuron=neuron_state,
-            ring=ring,
-            t=t0 + D,
-            spike_count=state.spike_count + spikes_blk.astype(jnp.int32).sum(0),
-            overflow=over,
-        )
-        return new_state, spikes_blk
-
+    @jax.jit
     def window(state: SimState) -> tuple[SimState, jax.Array]:
-        t0 = state.t
-        if cfg.schedule == CONVENTIONAL:
-            # Global exchange (and hence inter delivery) every cycle.
-            def body(st, _):
-                return _cycle(st, deliver_inter_now=True)
-
-            state, spikes = jax.lax.scan(body, state, None, length=D)
-            return state, spikes
-
-        if cfg.use_superstep:
-            return window_superstep(state)
-
-        # Legacy structure-aware window (the semantic reference for the
-        # superstep): per-cycle scan + a fori_loop of D inter deliveries.
-        def body(st, _):
-            return _cycle(st, deliver_inter_now=False)
-
-        state, spikes = jax.lax.scan(body, state, None, length=D)
-
-        def deliver_s(s, carry):
-            ring, over = carry
-            sp = spikes[s]
-            ring = _deliver_inter(ring, sp.astype(jnp.float32), t0 + s)
-            if backend == "event" and net.k_inter > 0:
-                over = over + jnp.maximum(
-                    sp.sum(dtype=jnp.int32) - s_max_all, 0)
-            return ring, over
-
-        ring, over = jax.lax.fori_loop(
-            0, D, deliver_s, (state.ring, state.overflow))
-        return dataclasses.replace(state, ring=ring, overflow=over), spikes
-
-    window_jit = jax.jit(window)
+        return window_body(state, net, gids)
 
     def init() -> SimState:
         if cfg.neuron_model == "lif":
@@ -475,11 +365,12 @@ def make_engine(
     @functools.partial(jax.jit, static_argnums=1)
     def run(state: SimState, n_windows: int) -> tuple[SimState, jax.Array]:
         def body(st, _):
-            st, spikes = window(st)
+            st, spikes = window_body(st, net, gids)
             return st, spikes.sum(dtype=jnp.int32)
 
         return jax.lax.scan(body, state, None, length=n_windows)
 
     return Engine(
-        init=init, window=window_jit, run=run, config=cfg, delay_ratio=D
+        init=init, window=window, run=run, config=cfg, delay_ratio=D,
+        wire_bytes=exchange.wire_bytes(net),
     )

@@ -1,0 +1,708 @@
+"""Pluggable spike-exchange layer: how spikes travel between engine shards.
+
+The shared window core (:mod:`repro.core.schedule`) is parameterized by an
+``Exchange`` object with two hooks:
+
+* ``cycle(ring, spikes, t, net, gids, inter_now=...)`` -- the per-cycle
+  short-range (intra-area) pathway; under the conventional schedule the same
+  hook also runs the per-cycle long-range exchange (``inter_now=True``).
+* ``window_end(ring, block, t0, net, gids, blocked=...)`` -- the
+  structure-aware schedule's lumped window-end long-range pathway.
+
+Both return ``(ring', overflow_delta)``; overflow is the count of spikes a
+fixed-size packet dropped (0 on dense pathways).
+
+Three implementations:
+
+* :class:`LocalExchange` -- single-host identity: no collectives, delivery
+  goes straight through :mod:`repro.core.delivery`. ``make_engine`` is a thin
+  assembly over the shared core with this exchange.
+* :class:`DenseMeshExchange` -- the mesh collectives of the original
+  distributed engine: bit-packed spike vectors (``comm.gather_*``) for the
+  dense backends, compacted id packets over ``all_gather`` for the event
+  backend. Every device receives every fired id, whether or not any of its
+  neurons has a synapse from the sender.
+* :class:`RoutedExchange` -- the connectivity-routed global pathway: at
+  build time the area->area adjacency (:func:`repro.core.connectivity
+  .area_adjacency`) is folded to the device-group graph, and the window-end
+  exchange ships fixed-size id packets only along group->group edges that
+  exist, via ``ppermute`` rotation rounds over the group graph instead of a
+  mesh-wide ``all_gather`` (cf. Du et al., "A Low-latency Communication
+  Design for Brain Simulations"). Rounds whose offset crosses no edge are
+  skipped entirely; within a round the permutation contains only existing
+  edges, and each packet is compacted *per destination group* under a
+  per-edge ``s_max`` bound -- spills feed the same ``SimState.overflow``
+  accounting as every other packet bound.
+
+All exchanges are bit-identical: delivery weights live on the exact 1/256
+grid, so neither packet order nor scatter order can change a ULP, and the
+routed edge filter is exactly the set of edges with at least one synapse.
+
+Wire-byte accounting: every exchange reports ``wire_bytes(net)`` -- static
+mesh-total bytes received per window, split by pathway -- feeding
+``launch/simulate.py --profile``, ``benchmarks/bench_delivery.py`` and the
+:mod:`repro.core.cost_model` communication term. :func:`wire_report`
+computes the dense-vs-routed comparison for a hypothetical mesh shape
+without constructing devices.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import comm
+from repro.core import delivery as delivery_lib
+from repro.core.connectivity import Network
+from repro.core.schedule import CONVENTIONAL, STRUCTURE_AWARE
+from repro.kernels import ops as kops
+
+__all__ = [
+    "EXCHANGES",
+    "Exchange",
+    "LocalExchange",
+    "DenseMeshExchange",
+    "RoutedExchange",
+    "Routing",
+    "build_routing",
+    "wire_report",
+]
+
+EXCHANGES = ("local", "dense", "routed")
+
+_I32_BYTES = 4
+
+
+# ---------------------------------------------------------------------------
+# Group routing tables (the connectivity-derived structure of RoutedExchange)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RouteRound:
+    """One ppermute rotation round of the routed global pathway."""
+
+    offset: int                           # destination group = (g + offset) % G
+    pairs: tuple[tuple[int, int], ...]    # existing edges at this offset
+    s_max: int                            # per-edge packet bound (ids/cycle)
+
+
+@dataclasses.dataclass(frozen=True)
+class Routing:
+    """Per-destination-group routing tables over the area adjacency.
+
+    ``proj[a, h]`` -- does source area ``a`` project into any area of device
+    group ``h`` (groups own ``A / n_groups`` consecutive areas, row-major
+    over the mesh's area axes, matching the engines' placement).
+    ``group_adj[g, h]`` -- the folded group graph. ``rounds`` holds only the
+    rotation offsets that cross at least one edge; a dense graph needs all
+    ``G`` offsets, a sparse one skips most.
+    """
+
+    n_groups: int
+    proj: np.ndarray        # [A, G] bool
+    group_adj: np.ndarray   # [G, G] bool
+    rounds: tuple[RouteRound, ...]
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.group_adj.sum())
+
+    @property
+    def n_wire_rounds(self) -> int:
+        """Rounds that actually move bytes (offset 0 is group-local)."""
+        return sum(1 for r in self.rounds if r.offset != 0)
+
+
+def build_routing(
+    adj: np.ndarray,
+    n_groups: int,
+    *,
+    exp_area_spikes: float,
+    headroom: float,
+    floor: int,
+) -> Routing:
+    """Fold the [A, A] area adjacency onto ``n_groups`` device groups.
+
+    ``exp_area_spikes`` is the expected spikes per area per cycle; the
+    per-edge packet bound scales with the number of source areas actually
+    projecting along the edge (``headroom x expectation + slack``, the same
+    sizing rule as :func:`repro.core.delivery.event_bounds`), so sparse
+    edges get small packets and absent edges get none.
+    """
+    adj = np.asarray(adj, dtype=bool)
+    a = adj.shape[0]
+    if a % n_groups != 0:
+        raise ValueError(f"n_areas={a} not divisible by n_groups={n_groups}")
+    a_loc = a // n_groups
+    proj = adj.reshape(a, n_groups, a_loc).any(axis=2)          # [A, G]
+    group_adj = proj.reshape(n_groups, a_loc, n_groups).any(axis=1)
+    # Source areas contributing to each edge, for the per-edge bound.
+    n_src = proj.reshape(n_groups, a_loc, n_groups).sum(axis=1)  # [G, G]
+    slack = 4 * max(floor, 1)
+    rounds = []
+    for k in range(n_groups):
+        pairs = tuple(
+            (g, (g + k) % n_groups)
+            for g in range(n_groups)
+            if group_adj[g, (g + k) % n_groups]
+        )
+        if not pairs:
+            continue
+        s_max = max(
+            int(headroom * exp_area_spikes * n_src[g, h]) + slack
+            for g, h in pairs
+        )
+        rounds.append(RouteRound(offset=k, pairs=pairs, s_max=s_max))
+    return Routing(
+        n_groups=n_groups, proj=proj, group_adj=group_adj,
+        rounds=tuple(rounds),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Exchange implementations
+# ---------------------------------------------------------------------------
+
+
+class Exchange:
+    """Interface + shared bookkeeping; see the module docstring."""
+
+    name = "abstract"
+
+    def cycle(self, ring, spikes, t, net, gids, *, inter_now: bool):
+        raise NotImplementedError
+
+    def window_end(self, ring, block, t0, net, gids, *, blocked: bool):
+        raise NotImplementedError
+
+    def wire_bytes(self, net: Network) -> dict:
+        raise NotImplementedError
+
+
+class LocalExchange(Exchange):
+    """Single-host identity exchange: delivery without any wire.
+
+    Reproduces the original ``make_engine`` semantics exactly, including the
+    event backend's per-area / whole-network packet bounds and their
+    overflow accounting.
+    """
+
+    name = "local"
+
+    def __init__(self, net: Network, cfg):
+        self.backend = cfg.backend
+        self.s_max_area, self.s_max_all = delivery_lib.event_bounds(
+            net, headroom=cfg.s_max_headroom, floor=cfg.s_max_floor)
+
+    def _overflow(self, spikes, net, inter_now: bool):
+        """Spikes dropped by the event path's static packet bounds."""
+        if self.backend != "event":
+            return jnp.int32(0)
+        per_area = spikes.sum(axis=-1, dtype=jnp.int32)   # [A]
+        over = jnp.int32(0)
+        if net.k_intra > 0:
+            over = jnp.maximum(per_area - self.s_max_area, 0).sum()
+        if inter_now and net.k_inter > 0:
+            over = over + jnp.maximum(per_area.sum() - self.s_max_all, 0)
+        return over
+
+    def cycle(self, ring, spikes, t, net, gids, *, inter_now: bool):
+        del gids
+        sf = spikes.astype(jnp.float32)
+        ring = delivery_lib.deliver_intra(
+            ring, sf, net, t, backend=self.backend, s_max=self.s_max_area)
+        if inter_now:
+            ring = delivery_lib.deliver_inter(
+                ring, sf.reshape(-1), net, t,
+                backend=self.backend, s_max=self.s_max_all)
+        return ring, self._overflow(spikes, net, inter_now)
+
+    def window_end(self, ring, block, t0, net, gids, *, blocked: bool):
+        del gids
+        if net.k_inter == 0:
+            return ring, jnp.int32(0)
+        d_win = block.shape[0]
+        flat = block.reshape(d_win, -1).astype(jnp.float32)
+        if blocked:
+            ring = delivery_lib.deliver_inter_block(
+                ring, flat, net, t0, backend=self.backend,
+                s_max=self.s_max_all)
+            over = jnp.int32(0)
+            if self.backend == "event":
+                counts = block.reshape(d_win, -1).sum(
+                    axis=-1, dtype=jnp.int32)
+                over = jnp.maximum(counts - self.s_max_all, 0).sum()
+            return ring, over
+
+        def deliver_s(s, carry):
+            ring, over = carry
+            ring = delivery_lib.deliver_inter(
+                ring, flat[s], net, t0 + s,
+                backend=self.backend, s_max=self.s_max_all)
+            if self.backend == "event":
+                over = over + jnp.maximum(
+                    block[s].sum(dtype=jnp.int32) - self.s_max_all, 0)
+            return ring, over
+
+        ring, over = jax.lax.fori_loop(
+            0, d_win, deliver_s, (ring, jnp.int32(0)))
+        return ring, over
+
+    def wire_bytes(self, net: Network) -> dict:
+        return dict(exchange=self.name, local_bytes=0, global_bytes=0,
+                    total_bytes=0)
+
+
+class DenseMeshExchange(Exchange):
+    """The mesh-wide collectives (the pre-routing distributed design).
+
+    Structure-aware placement: the per-cycle local pathway completes each
+    area over the intra-area subgroup (``model`` axis); the window-end global
+    pathway all-gathers the lumped ``[D, ...]`` block (bit-packed vectors for
+    the dense backends, compacted id packets for the event backend) over the
+    *whole* mesh -- every device receives every fired id. Conventional
+    placement: one mesh-wide exchange per cycle feeds both pathways.
+    """
+
+    name = "dense"
+
+    def __init__(self, net: Network, cfg, mesh):
+        self.backend = cfg.backend
+        self.schedule = cfg.schedule
+        self.mesh = mesh
+        self.area_axes = tuple(mesh.axis_names[:-1])
+        self.subgroup = mesh.axis_names[-1]
+        self.all_axes = tuple(mesh.axis_names)
+        self.n_dev = mesh.size
+        self.gsz = mesh.shape[self.subgroup]
+        self.n_groups = self.n_dev // self.gsz
+        self.headroom = cfg.s_max_headroom
+        self.floor = cfg.s_max_floor
+        # Static event-packet bounds: per-device shares of the single-host
+        # bounds, floored so tiny shards keep headroom. _mesh_bounds is the
+        # single source of truth, shared with the static wire accounting so
+        # the byte counts always price the bounds the window bodies ship.
+        if self.backend == "event":
+            self.s_max_loc, self.s_max_dev = _mesh_bounds(
+                net, n_groups=self.n_groups, gsz=self.gsz,
+                headroom=cfg.s_max_headroom, floor=cfg.s_max_floor)
+        else:
+            self.s_max_loc = self.s_max_dev = 0
+
+    # -- shard-index helpers (valid only inside shard_map) ------------------
+
+    def _axis_offset(self, axes: Sequence[str], block: int):
+        """This device's row offset for a dim sharded over ``axes``."""
+        idx = jnp.int32(0)
+        for ax in axes:
+            idx = idx * self.mesh.shape[ax] + jax.lax.axis_index(ax)
+        return idx * block
+
+    def _group_index(self):
+        """Flattened (row-major) index of this device's area group."""
+        g = jnp.int32(0)
+        for ax in self.area_axes:
+            g = g * self.mesh.shape[ax] + jax.lax.axis_index(ax)
+        return g
+
+    def _global_to_local(self, a_loc: int, n_loc: int, net: Network):
+        """Global target id -> local ring row (-1 if another device owns it)."""
+        n_pad = net.n_pad
+        aoff = self._axis_offset(self.area_axes, a_loc)
+        noff = self._axis_offset((self.subgroup,), n_loc)
+
+        def to_local(g):
+            al = g // n_pad - aoff
+            il = g % n_pad - noff
+            keep = (al >= 0) & (al < a_loc) & (il >= 0) & (il < n_loc)
+            return jnp.where(keep, al * n_loc + il, -1)
+
+        return to_local
+
+    def _inter_tables(self, net: Network):
+        n_rows = net.n_areas * net.n_pad
+        k_out = net.tgt_inter.shape[-1]
+        return (net.tgt_inter.reshape(n_rows, k_out),
+                net.wout_inter.reshape(n_rows, k_out),
+                net.dout_inter.reshape(n_rows, k_out))
+
+    # -- hooks --------------------------------------------------------------
+
+    def cycle(self, ring, spikes, t, net, gids, *, inter_now: bool):
+        if self.schedule == CONVENTIONAL:
+            return self._cycle_conventional(ring, spikes, t, net, gids)
+        assert not inter_now, "structure-aware lumps the global pathway"
+        n_loc = spikes.shape[-1]
+        s8 = spikes.astype(jnp.int8)
+        over = jnp.int32(0)
+        if self.backend == "event" and net.k_intra > 0:
+            # Local pathway, sparse wire: compact fired neurons into
+            # per-area id packets *before* the subgroup exchange.
+            noff = jax.lax.axis_index(self.subgroup) * n_loc
+            ids = noff + jnp.arange(n_loc, dtype=jnp.int32)
+            packets, counts = jax.vmap(
+                lambda f: delivery_lib.compact_fired(
+                    f, ids, s_max=self.s_max_loc, invalid=net.n_pad)
+            )(spikes)
+            over = jax.lax.psum(
+                jnp.maximum(counts - self.s_max_loc, 0).sum(), self.all_axes)
+            wire = jax.lax.all_gather(
+                packets, self.subgroup, axis=1, tiled=True)  # [A_loc, gsz*s]
+
+            # Scatter straight into this device's neuron window of each
+            # area: within-area target -> local row, -1 if not ours.
+            def to_local(i):
+                il = i - noff
+                keep = (il >= 0) & (il < n_loc)
+                return jnp.where(keep, il, -1)
+
+            ring = jax.vmap(
+                lambda r, idl, tg, w, d: kops.event_deliver_ids(
+                    r, idl, tg, w, d, t, tgt_map=to_local)
+            )(ring, wire, net.tgt_intra, net.wout_intra, net.dout_intra)
+        elif self.backend != "event":
+            # Local pathway, dense wire: complete this device's areas over
+            # the subgroup, then deliver via the shared dispatch.
+            area_spikes = comm.gather_area(s8, subgroup_axis=self.subgroup)
+            ring = delivery_lib.deliver_intra(
+                ring, area_spikes.astype(jnp.float32), net, t,
+                backend=self.backend)
+        return ring, over
+
+    def _cycle_conventional(self, ring, spikes, t, net, gids):
+        """One mesh-wide exchange feeds both pathways (round-robin layout)."""
+        A, n_pad = net.n_areas, net.n_pad
+        n_loc = spikes.shape[-1]
+        r_len = ring.shape[-1]
+        s8 = spikes.astype(jnp.int8)
+        over = jnp.int32(0)
+        if self.backend == "event":
+            packet, count = delivery_lib.compact_fired(
+                spikes, gids, s_max=self.s_max_dev, invalid=A * n_pad)
+            over = jax.lax.psum(
+                jnp.maximum(count - self.s_max_dev, 0), self.all_axes)
+            wire = jax.lax.all_gather(
+                packet, self.all_axes, axis=0, tiled=True)  # [n_dev*s]
+            noff = self._axis_offset(self.all_axes, n_loc)
+
+            # Both scatters go straight into this device's neuron window
+            # (rows [noff, noff + n_loc) of every area) -- no full
+            # [A, n_pad, R] buffer.
+            def win_local(i):
+                il = i - noff
+                keep = (il >= 0) & (il < n_loc)
+                return jnp.where(keep, il, -1)
+
+            if net.k_intra > 0:
+                # Short-range: per-area within-area ids from the list.
+                areas = jnp.arange(A, dtype=jnp.int32)
+                ids_a = jnp.where(
+                    wire[None, :] // n_pad == areas[:, None],
+                    wire[None, :] % n_pad, n_pad)       # [A, S]
+                ring = jax.vmap(
+                    lambda r, idl, tg, w, d: kops.event_deliver_ids(
+                        r, idl, tg, w, d, t, tgt_map=win_local)
+                )(ring, ids_a, net.tgt_intra, net.wout_intra, net.dout_intra)
+            # Long-range: global target id -> (area row, local window).
+            if net.k_inter > 0:
+                tgt_f, w_f, d_f = self._inter_tables(net)
+
+                def glob_local(g):
+                    il = g % n_pad - noff
+                    keep = (il >= 0) & (il < n_loc)
+                    return jnp.where(keep, (g // n_pad) * n_loc + il, -1)
+
+                ring = kops.event_deliver_ids(
+                    ring.reshape(A * n_loc, r_len), wire, tgt_f, w_f, d_f,
+                    t, tgt_map=glob_local).reshape(A, n_loc, r_len)
+        else:
+            # One global all_gather per cycle: every device needs the full
+            # vector because its neurons' sources are scattered everywhere.
+            full = comm.gather_full(s8, self.all_axes)
+            full_f = full.astype(jnp.float32)  # [A, n_pad]
+            ring = delivery_lib.deliver_intra(
+                ring, full_f, net, t, backend=self.backend)
+            ring = delivery_lib.deliver_inter(
+                ring, full_f.reshape(-1), net, t, backend=self.backend)
+        return ring, over
+
+    def window_end(self, ring, block, t0, net, gids, *, blocked: bool):
+        if net.k_inter == 0:
+            return ring, jnp.int32(0)
+        a_loc, n_loc, r_len = ring.shape
+        A, n_pad = net.n_areas, net.n_pad
+        d_win = block.shape[0]
+        if self.backend == "event":
+            # Sparse wire: one (id, step) packet for the whole window.
+            packets, counts = delivery_lib.compact_fired_block(
+                block, gids, s_max=self.s_max_dev, invalid=A * n_pad)
+            over = jax.lax.psum(
+                jnp.maximum(counts - self.s_max_dev, 0).sum(), self.all_axes)
+            wire = jax.lax.all_gather(
+                packets, self.all_axes, axis=1, tiled=True)  # [D, n_dev*s]
+            tgt_f, w_f, d_f = self._inter_tables(net)
+            to_local = self._global_to_local(a_loc, n_loc, net)
+            ring_flat = ring.reshape(a_loc * n_loc, r_len)
+            if blocked:
+                # Single-pass blocked receive: all D packets in one scatter.
+                ring_flat = kops.event_deliver_block(
+                    ring_flat, wire, tgt_f, w_f, d_f, t0, tgt_map=to_local)
+            else:
+                def deliver_s(s, rf):
+                    return kops.event_deliver_ids(
+                        rf, wire[s], tgt_f, w_f, d_f, t0 + s,
+                        tgt_map=to_local)
+
+                ring_flat = jax.lax.fori_loop(0, d_win, deliver_s, ring_flat)
+            return ring_flat.reshape(a_loc, n_loc, r_len), over
+
+        gblock = comm.gather_global(
+            block.astype(jnp.int8), area_axes=self.area_axes,
+            subgroup_axis=self.subgroup)          # [D, A, n_pad] int8
+        gflat = gblock.astype(jnp.float32).reshape(d_win, A * n_pad)
+        if blocked:
+            ring = delivery_lib.deliver_inter_block(
+                ring, gflat, net, t0, backend=self.backend)
+            return ring, jnp.int32(0)
+
+        def deliver_s(s, ring):
+            return delivery_lib.deliver_inter(
+                ring, gflat[s], net, t0 + s, backend=self.backend)
+
+        return jax.lax.fori_loop(0, d_win, deliver_s, ring), jnp.int32(0)
+
+    # -- static wire accounting ---------------------------------------------
+
+    def wire_bytes(self, net: Network) -> dict:
+        return dense_wire_bytes(
+            net, backend=self.backend, schedule=self.schedule,
+            n_groups=self.n_groups, gsz=self.gsz,
+            headroom=self.headroom, floor=self.floor)
+
+
+class RoutedExchange(DenseMeshExchange):
+    """Connectivity-routed global pathway (see the module docstring).
+
+    The local pathway is inherited from :class:`DenseMeshExchange` -- the
+    intra-area subgroup exchange already mirrors network structure. The
+    window-end global pathway replaces the mesh-wide ``all_gather`` with
+    ppermute rotation rounds over the group graph: each group's window
+    packet is masked and re-compacted *per destination group* (only ids
+    whose source area projects along the edge, bound ``RouteRound.s_max``),
+    shipped only along edges that exist, and scattered through the
+    replicated outgoing tables on arrival. Requires
+    ``build_network(outgoing=True)`` for the inter tables, under every
+    delivery backend (the routed wire format is id packets).
+    """
+
+    name = "routed"
+
+    def __init__(self, net: Network, cfg, mesh, adjacency: np.ndarray):
+        super().__init__(net, cfg, mesh)
+        if cfg.schedule != STRUCTURE_AWARE:
+            raise ValueError(
+                "RoutedExchange routes the structure-aware window's lumped "
+                "global pathway; the conventional schedule has none")
+        if net.k_inter > 0 and net.tgt_inter is None:
+            raise ValueError(
+                "RoutedExchange ships id packets and scatters through the "
+                "outgoing tables: build_network(outgoing=True) required")
+        # The routed global pathway ships device packets regardless of the
+        # delivery backend, so the bound must exist for the dense ones too
+        # (the parent already set it for 'event').
+        if self.backend != "event":
+            _, self.s_max_dev = _mesh_bounds(
+                net, n_groups=self.n_groups, gsz=self.gsz,
+                headroom=cfg.s_max_headroom, floor=cfg.s_max_floor)
+        exp_area = delivery_lib.expected_area_spikes(net)
+        self.routing = build_routing(
+            adjacency, self.n_groups, exp_area_spikes=exp_area,
+            headroom=cfg.s_max_headroom, floor=cfg.s_max_floor)
+        # Baked constants: area -> destination-group projection (row A
+        # absorbs the packet fill id) and the group graph for the
+        # receive-validity mask.
+        self._proj_const = np.concatenate(
+            [self.routing.proj, np.zeros((1, self.n_groups), bool)], axis=0)
+
+    def window_end(self, ring, block, t0, net, gids, *, blocked: bool):
+        # The routed receive is always the single-pass blocked scatter; a
+        # window of per-cycle scatters would be bit-identical (grid-exact
+        # weights), so ``blocked`` has nothing to select.
+        del blocked
+        if net.k_inter == 0 or not self.routing.rounds:
+            return ring, jnp.int32(0)
+        a_loc, n_loc, r_len = ring.shape
+        A, n_pad = net.n_areas, net.n_pad
+        G = self.routing.n_groups
+        invalid = A * n_pad
+
+        # 1. Assemble the *group* packet on the fast tier: compact this
+        # device's fired ids, complete over the intra-area subgroup.
+        packets, counts = delivery_lib.compact_fired_block(
+            block, gids, s_max=self.s_max_dev, invalid=invalid)
+        over = jax.lax.psum(
+            jnp.maximum(counts - self.s_max_dev, 0).sum(), self.all_axes)
+        gwire = jax.lax.all_gather(
+            packets, self.subgroup, axis=1, tiled=True)      # [D, gsz*s_dev]
+
+        my_g = self._group_index()
+        lane0 = jax.lax.axis_index(self.subgroup) == 0
+        src_area = jnp.where(gwire < invalid, gwire // n_pad, A)
+        proj = jnp.asarray(self._proj_const)                 # [A+1, G]
+        gadj = jnp.asarray(self.routing.group_adj)           # [G, G]
+
+        # 2. One rotation round per *existing* offset of the group graph;
+        # every received packet keeps its [D, s] row=cycle layout, so the
+        # rounds concatenate along the id axis into ONE blocked scatter.
+        received = []
+        for rnd in self.routing.rounds:
+            dst_g = jnp.mod(my_g + rnd.offset, G)
+            keep = proj[src_area, dst_g]                     # [D, L]
+            pkt, cnt = kops.compact_ids_block(
+                keep, gwire, size=rnd.s_max, fill_id=invalid)
+            # Per-edge spill: every subgroup lane computes the same count,
+            # so only lane 0 contributes to the psum.
+            spill = jnp.maximum(cnt - rnd.s_max, 0).sum()
+            over = over + jax.lax.psum(
+                jnp.where(lane0, spill, 0), self.all_axes)
+            if rnd.offset:
+                axis = (self.area_axes if len(self.area_axes) > 1
+                        else self.area_axes[0])
+                pkt = jax.lax.ppermute(pkt, axis, rnd.pairs)
+                # Groups with no inbound edge at this offset received zeros
+                # from ppermute (id 0 is a real neuron): mask them invalid.
+                ok = gadj[jnp.mod(my_g - rnd.offset, G), my_g]
+                pkt = jnp.where(ok, pkt, invalid)
+            received.append(pkt)
+
+        tgt_f, w_f, d_f = self._inter_tables(net)
+        to_local = self._global_to_local(a_loc, n_loc, net)
+        ring_flat = kops.event_deliver_block(
+            ring.reshape(a_loc * n_loc, r_len),
+            jnp.concatenate(received, axis=1),
+            tgt_f, w_f, d_f, t0, tgt_map=to_local)
+        return ring_flat.reshape(a_loc, n_loc, r_len), over
+
+    def wire_bytes(self, net: Network) -> dict:
+        return routed_wire_bytes(
+            net, self.routing, backend=self.backend, gsz=self.gsz,
+            headroom=self.headroom, floor=self.floor)
+
+
+# ---------------------------------------------------------------------------
+# Static wire accounting (mesh-total bytes received per window)
+# ---------------------------------------------------------------------------
+
+
+def _mesh_bounds(net: Network, *, n_groups, gsz, headroom, floor):
+    s_max_area, s_max_all = delivery_lib.event_bounds(
+        net, headroom=headroom, floor=floor)
+    s_max_loc = max(floor, -(-s_max_area // gsz))
+    s_max_dev = max(floor, -(-s_max_all // (n_groups * gsz)))
+    return s_max_loc, s_max_dev
+
+
+def dense_wire_bytes(
+    net: Network, *, backend: str, schedule: str,
+    n_groups: int, gsz: int, headroom: float = 8.0, floor: int = 16,
+) -> dict:
+    """Mesh-total received bytes per window of :class:`DenseMeshExchange`."""
+    n_dev = n_groups * gsz
+    d_win = net.delay_ratio
+    A, n_pad = net.n_areas, net.n_pad
+    s_max_loc, s_max_dev = _mesh_bounds(
+        net, n_groups=n_groups, gsz=gsz, headroom=headroom, floor=floor)
+    if schedule == CONVENTIONAL:
+        n_loc = n_pad // n_dev
+        if backend == "event":
+            glob = n_dev * d_win * (n_dev - 1) * s_max_dev * _I32_BYTES
+        else:
+            glob = n_dev * d_win * A * (n_dev - 1) * -(-n_loc // 8)
+        return dict(exchange="dense", schedule=schedule, backend=backend,
+                    local_bytes=0, global_bytes=glob, total_bytes=glob)
+    a_loc, n_loc = A // n_groups, n_pad // gsz
+    per = -(-n_loc // 8)  # packed bytes per local spike-vector shard
+    if net.k_intra == 0:
+        local = 0
+    elif backend == "event":
+        local = n_dev * d_win * a_loc * (gsz - 1) * s_max_loc * _I32_BYTES
+    else:
+        local = n_dev * d_win * a_loc * (gsz - 1) * per
+    if net.k_inter == 0:
+        glob = 0
+    elif backend == "event":
+        glob = n_dev * d_win * (n_dev - 1) * s_max_dev * _I32_BYTES
+    else:
+        # gather_global: subgroup stage, then the area-axes stages.
+        glob = n_dev * d_win * a_loc * per * (
+            (gsz - 1) + (n_groups - 1) * gsz)
+    return dict(exchange="dense", schedule=schedule, backend=backend,
+                local_bytes=local, global_bytes=glob,
+                total_bytes=local + glob)
+
+
+def routed_wire_bytes(
+    net: Network, routing: Routing, *, backend: str,
+    gsz: int, headroom: float = 8.0, floor: int = 16,
+) -> dict:
+    """Mesh-total received bytes per window of :class:`RoutedExchange`.
+
+    The local pathway is the dense structure-aware one; the global pathway is
+    the subgroup assembly plus one ``[D, s_max]`` id packet per existing edge
+    per subgroup lane -- offsets with no edge ship nothing at all.
+    """
+    n_groups = routing.n_groups
+    n_dev = n_groups * gsz
+    d_win = net.delay_ratio
+    base = dense_wire_bytes(
+        net, backend=backend, schedule=STRUCTURE_AWARE,
+        n_groups=n_groups, gsz=gsz, headroom=headroom, floor=floor)
+    _, s_max_dev = _mesh_bounds(
+        net, n_groups=n_groups, gsz=gsz, headroom=headroom, floor=floor)
+    if net.k_inter == 0:
+        glob = 0
+    else:
+        assembly = n_dev * (gsz - 1) * d_win * s_max_dev * _I32_BYTES
+        edges = sum(
+            len(r.pairs) * gsz * d_win * r.s_max * _I32_BYTES
+            for r in routing.rounds if r.offset != 0
+        )
+        glob = assembly + edges
+    return dict(exchange="routed", schedule=STRUCTURE_AWARE, backend=backend,
+                local_bytes=base["local_bytes"], global_bytes=glob,
+                total_bytes=base["local_bytes"] + glob,
+                rounds=routing.n_wire_rounds,
+                dense_rounds=max(n_groups - 1, 0),
+                edges=routing.n_edges)
+
+
+def wire_report(
+    net: Network,
+    adjacency: np.ndarray,
+    *,
+    backend: str,
+    n_groups: int,
+    gsz: int,
+    headroom: float = 8.0,
+    floor: int = 16,
+) -> dict:
+    """Dense-vs-routed wire volume for a hypothetical ``n_groups x gsz``
+    mesh -- pure static accounting, no devices required. Feeds
+    ``benchmarks/bench_delivery.py`` and ``simulate.py --profile``."""
+    exp_area = delivery_lib.expected_area_spikes(net)
+    routing = build_routing(
+        adjacency, n_groups, exp_area_spikes=exp_area,
+        headroom=headroom, floor=floor)
+    return dict(
+        dense=dense_wire_bytes(
+            net, backend=backend, schedule=STRUCTURE_AWARE,
+            n_groups=n_groups, gsz=gsz, headroom=headroom, floor=floor),
+        routed=routed_wire_bytes(
+            net, routing, backend=backend, gsz=gsz,
+            headroom=headroom, floor=floor),
+    )

@@ -1,0 +1,217 @@
+"""The shared window/cycle core: one deliver -> update -> collocate body.
+
+Before this module the single-host engine (``engine.py``) and the distributed
+engine (``dist_engine.py``) each carried their own copy of the window
+machinery -- per-cycle scan, fused D-cycle superstep, legacy window + lumped
+exchange -- ~400 lines of drift-prone duplication. Both engines now assemble
+the *same* window body from here, parameterized by an
+:class:`repro.core.exchange.Exchange`:
+
+* what happens *inside* a cycle (ring read, neuron update, spike counting)
+  and *around* a window (blocked ring open/merge, superstep scan vs unroll,
+  the legacy per-cycle reference) lives here, once;
+* *how spikes travel* -- single-host identity, dense mesh collectives, or
+  connectivity-routed packets -- lives in the exchange object.
+
+The schedules (paper Fig. 3):
+
+* ``conventional``: the long-range pathway is exercised every cycle
+  (``inter_now=True`` in the cycle hook);
+* ``structure_aware``: long-range spikes accumulate for the whole window and
+  travel once, in the window-end hook. Causal because every inter-area delay
+  is >= D steps; bit-identical because delivery weights live on the exact
+  1/256 grid.
+
+Every variant produces bit-identical spike trains; the equivalence suites
+(tests/test_system.py, tests/test_distributed.py, tests/test_exchange.py)
+pin that across schedules, backends, exchanges and meshes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import neuron as neuron_lib
+from repro.core import ring_buffer
+
+__all__ = [
+    "CONVENTIONAL",
+    "STRUCTURE_AWARE",
+    "SimState",
+    "make_update_fn",
+    "make_window_fn",
+]
+
+CONVENTIONAL = "conventional"
+STRUCTURE_AWARE = "structure_aware"
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SimState:
+    neuron: Any               # LIFState or IafState pytree
+    ring: jax.Array           # [A, n_pad, R]
+    t: jax.Array              # scalar int32, absolute cycle index
+    spike_count: jax.Array    # [A, n_pad] int32 cumulative spikes
+    # Scalar int32: spikes dropped because a fixed-size packet (event
+    # backend, or a routed-exchange edge) exceeded its static s_max bound
+    # (0 on the dense pathways; any nonzero value means the run is no longer
+    # exact and s_max_headroom/floor must be raised).
+    overflow: Any = None
+
+
+def make_update_fn(
+    cfg,                       # EngineConfig (duck-typed to avoid a cycle)
+    spec,                      # MultiAreaSpec
+    dt_ms: float,
+    lif_params,
+    fused_lif: Callable | None,
+) -> Callable:
+    """The neuron-update closure shared by both engines.
+
+    ``update(neuron_state, i_in, t, net_view, gids) -> (state', spikes)``
+    where ``net_view`` may be the full network (single host) or a shard_map
+    view -- the drive uses the view's ``rate_hz``/``alive`` and the *global*
+    ids in ``gids``, so any sharding sees bit-identical noise. The drive rate
+    is ``rate_hz * (ext_rate_hz / 2.5)`` -- one expression everywhere (the
+    engines previously used two algebraically-equal-but-ULP-different forms;
+    the shared core makes the cross-engine bit-equality structural instead
+    of coincidental).
+    """
+    drive_scale = spec.ext_rate_hz / 2.5
+
+    def update(neuron_state, i_in, t, net, gids):
+        if cfg.neuron_model == "lif":
+            drive = neuron_lib.poisson_drive(
+                cfg.seed, t, gids, net.rate_hz * drive_scale, dt_ms,
+                spec.w_ext,
+            )
+            if fused_lif is not None:
+                return fused_lif(neuron_state, i_in + drive, net.alive)
+            return neuron_lib.lif_update(
+                neuron_state, i_in + drive, net.alive, lif_params)
+        return neuron_lib.ignore_and_fire_update(
+            neuron_state, i_in, net.alive, net.rate_hz, dt_ms)
+
+    return update
+
+
+def make_window_fn(
+    cfg,
+    exchange,
+    update_fn: Callable,
+    *,
+    fused_superstep: Callable | None = None,
+) -> Callable:
+    """Build the ``window(state, net, gids) -> (state', block)`` body.
+
+    ``net``/``gids`` may be full arrays (single-host) or shard_map views
+    (distributed) -- all communication is delegated to ``exchange``:
+
+    * ``exchange.cycle(ring, spikes, t, net, gids, inter_now=...)`` runs the
+      per-cycle short-range pathway (and, under the conventional schedule,
+      the per-cycle long-range exchange too);
+    * ``exchange.window_end(ring, block, t0, net, gids, blocked=...)`` runs
+      the structure-aware schedule's lumped window-end exchange.
+
+    During a superstep, ``ring`` handed to the cycle hook is the *live
+    window buffer* and ``t`` the within-window slot index -- deposits are
+    wrap-free by construction (``Network.live_window``), so the same
+    delivery code serves both modes.
+
+    ``fused_superstep`` (single-host only) replaces the whole in-window loop
+    with the fused Pallas superstep kernel; the lumped exchange still goes
+    through the exchange hook.
+    """
+
+    def window(state: SimState, net, gids):
+        D = net.delay_ratio
+        t0 = state.t
+
+        def cycle_state(st: SimState, inter_now: bool):
+            """One deliver -> update -> collocate cycle on full SimState."""
+            i_in, ring = ring_buffer.read_and_clear(st.ring, st.t)
+            nstate, spikes = update_fn(st.neuron, i_in, st.t, net, gids)
+            ring, over = exchange.cycle(
+                ring, spikes, st.t, net, gids, inter_now=inter_now)
+            return SimState(
+                neuron=nstate,
+                ring=ring,
+                t=st.t + 1,
+                spike_count=st.spike_count + spikes.astype(jnp.int32),
+                overflow=st.overflow + over,
+            ), spikes
+
+        if cfg.schedule == CONVENTIONAL:
+            # Global exchange (and hence long-range delivery) every cycle.
+            def body(st, _):
+                return cycle_state(st, inter_now=True)
+
+            return jax.lax.scan(body, state, None, length=D)
+
+        if cfg.use_superstep:
+            # One fused D-cycle superstep: the window's D input slots are one
+            # contiguous ring block (phase alignment: t0 ≡ 0 mod D and
+            # ring_len ≡ 0 mod D), read and cleared once; cycles consume
+            # window-static columns of the live buffer ``fut``.
+            W = net.live_window
+            fut, ring = ring_buffer.open_window(state.ring, t0, D, W)
+            neuron, over = state.neuron, state.overflow
+            if fused_superstep is not None:
+                neuron, block, fut = fused_superstep(neuron, fut, t0)
+            elif cfg.superstep_unroll:
+                cols = []
+                for s in range(D):  # unrolled: s static, slot math vanishes
+                    neuron, spikes = update_fn(
+                        neuron, fut[..., s], t0 + s, net, gids)
+                    fut, d_over = exchange.cycle(
+                        fut, spikes, s, net, gids, inter_now=False)
+                    over = over + d_over
+                    cols.append(spikes)
+                block = jnp.stack(cols)
+            else:
+                # Scan over the live window: slot access touches only the
+                # small [.., W] buffer (wrap-free), never the ring.
+                def body(carry, s):
+                    neuron, fut, over = carry
+                    neuron, spikes = update_fn(
+                        neuron, fut[..., s], t0 + s, net, gids)
+                    fut, d_over = exchange.cycle(
+                        fut, spikes, s, net, gids, inter_now=False)
+                    return (neuron, fut, over + d_over), spikes
+
+                (neuron, fut, over), block = jax.lax.scan(
+                    body, (neuron, fut, over),
+                    jnp.arange(D, dtype=jnp.int32))
+            ring = ring_buffer.merge_window_tail(ring, fut[..., D:], t0 + D)
+
+            # The lumped 'global communication': the whole [D, ...] block in
+            # one pass. Every inter-area delay is >= D, so slot (t0+s+d) is
+            # strictly in the future of the window -- causal (paper §2.1)
+            # and bit-identical to D per-cycle deliveries.
+            ring, d_over = exchange.window_end(
+                ring, block, t0, net, gids, blocked=True)
+            return SimState(
+                neuron=neuron,
+                ring=ring,
+                t=t0 + D,
+                spike_count=state.spike_count + block.astype(jnp.int32).sum(0),
+                overflow=over + d_over,
+            ), block
+
+        # Legacy structure-aware window (the semantic reference for the
+        # superstep): per-cycle scan + a window-end replay of D deliveries.
+        def body(st, _):
+            return cycle_state(st, inter_now=False)
+
+        state, block = jax.lax.scan(body, state, None, length=D)
+        ring, d_over = exchange.window_end(
+            state.ring, block, t0, net, gids, blocked=False)
+        return dataclasses.replace(
+            state, ring=ring, overflow=state.overflow + d_over), block
+
+    return window

@@ -226,8 +226,22 @@ def dryrun_lm_cell(arch_id: str, shape_name: str, multi_pod: bool,
     return row
 
 
-def dryrun_snn_cell(schedule: str, multi_pod: bool, scale: float = 1.0) -> dict:
-    """Lower the distributed SNN engine window at production MAM scale."""
+def dryrun_snn_cell(
+    schedule: str,
+    multi_pod: bool,
+    scale: float = 1.0,
+    backend: str = "",
+    exchange: str = "",
+) -> dict:
+    """Lower the distributed SNN engine window at production MAM scale.
+
+    ``backend`` selects the delivery backend (``event`` lowers the sparse
+    id-packet paths -- the outgoing tables come from
+    ``network_sds(outgoing=True)``, closing the dry-run gap); ``exchange``
+    selects the global pathway (``routed`` lowers the ppermute rounds; with
+    no spec-level adjacency the MAM graph is all-to-all, so routing skips
+    nothing but the per-edge packets still lower).
+    """
     from repro.core.areas import mam_spec
     from repro.core.connectivity import network_sds
     from repro.core.dist_engine import (
@@ -235,8 +249,9 @@ def dryrun_snn_cell(schedule: str, multi_pod: bool, scale: float = 1.0) -> dict:
     from repro.core.engine import EngineConfig
     from repro.core import neuron as neuron_lib
 
+    label = "_".join(x for x in (schedule, backend, exchange) if x)
     row: dict[str, Any] = {
-        "arch": SNN_ARCH, "shape": f"mam_x{scale:g}_{schedule}",
+        "arch": SNN_ARCH, "shape": f"mam_x{scale:g}_{label}",
         "mesh": "2x16x16" if multi_pod else "16x16", "mode": schedule,
     }
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -244,8 +259,10 @@ def dryrun_snn_cell(schedule: str, multi_pod: bool, scale: float = 1.0) -> dict:
     spec = mam_spec(scale=scale)
     # pad so both the 16-way subgroup and (for conventional) all 512 divide
     mult = 512 if schedule == "conventional" else 16
-    net_sds = network_sds(spec, size_multiple=mult)
-    cfg = EngineConfig(neuron_model="lif", schedule=schedule)
+    needs_outgoing = backend == "event" or exchange == "routed"
+    net_sds = network_sds(spec, size_multiple=mult, outgoing=needs_outgoing)
+    cfg = EngineConfig(neuron_model="lif", schedule=schedule,
+                       delivery_backend=backend, exchange=exchange)
     eng = make_dist_engine(net_sds, spec, mesh, cfg)
     A, n_pad = net_sds.alive.shape
     R = net_sds.ring_len
@@ -296,6 +313,7 @@ def dryrun_snn_cell(schedule: str, multi_pod: bool, scale: float = 1.0) -> dict:
     row["n_neurons"] = spec.n_total
     row["n_synapses_per_neuron"] = spec.k_total
     row["delay_ratio_D"] = spec.delay_ratio
+    row["wire_bytes_window"] = eng.wire_bytes
     return row
 
 
@@ -309,6 +327,13 @@ def main() -> None:
                     help="use the paper-technique trainer (multi-pod only)")
     ap.add_argument("--snn-schedule", default="structure_aware")
     ap.add_argument("--snn-scale", type=float, default=1.0)
+    ap.add_argument("--snn-backend", default="",
+                    help="delivery backend for the SNN cells "
+                         "('' = config default, 'event' lowers the sparse "
+                         "id-packet paths via outgoing-table SDS)")
+    ap.add_argument("--snn-exchange", default="",
+                    help="global pathway for the SNN cells "
+                         "('' = dense, 'routed' lowers the ppermute rounds)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -322,8 +347,13 @@ def main() -> None:
             if arch == SNN_ARCH:
                 for sched in args.snn_schedule.split(","):
                     try:
-                        rows.append(dryrun_snn_cell(sched, multi_pod,
-                                                    args.snn_scale))
+                        rows.append(dryrun_snn_cell(
+                            sched, multi_pod, args.snn_scale,
+                            backend=args.snn_backend,
+                            # routed applies to the structure-aware lumped
+                            # pathway only; conventional stays dense.
+                            exchange=(args.snn_exchange
+                                      if sched == "structure_aware" else "")))
                     except Exception as e:
                         rows.append({
                             "arch": arch, "shape": sched,

@@ -1,13 +1,16 @@
 """Production SNN simulation launcher (the paper's state-propagation driver).
 
     PYTHONPATH=src python -m repro.launch.simulate --model mam --scale 0.002 \
-        --t-ms 500 --schedule structure_aware --delivery event
+        --t-ms 500 --schedule structure_aware --backend event
 
 Runs on whatever devices exist: a single device uses the reference engine; a
 multi-device mesh (e.g. under XLA_FLAGS=--xla_force_host_platform_device_count=8
-or on real TPU pods) uses the distributed two-tier engine. Reports per-window
-wall time, spike statistics, and -- with ``--compare`` -- verifies the
-conventional and structure-aware schedules produce identical spikes.
+or on real TPU pods) uses the distributed two-tier engine, with the global
+pathway selected by ``--exchange`` (``dense`` mesh-wide collectives vs the
+connectivity-``routed`` packet rounds of ``repro.core.exchange``). Reports
+per-window wall time, spike statistics, wire bytes per window, and -- with
+``--compare`` -- verifies the conventional and structure-aware schedules
+produce identical spikes.
 """
 
 from __future__ import annotations
@@ -20,8 +23,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.areas import mam_benchmark_spec, mam_spec
-from repro.core.connectivity import build_network
+from repro.core.connectivity import area_adjacency, build_network
 from repro.core.engine import EngineConfig, make_engine
+from repro.core import exchange as exchange_lib
 
 
 def _time_loop(fn, *args, repeats: int = 3):
@@ -132,6 +136,54 @@ def profile_phases(net, spec, cfg: EngineConfig, cycles: int = 200) -> None:
     print(f"{'full window / D':30s} {win / D * 1e6:10.2f} {D / win:12.1f}")
 
 
+def print_wire_volume(net, spec, cfg: EngineConfig, n_groups: int, gsz: int):
+    """Dense-vs-routed wire bytes per window (static accounting).
+
+    Pure shape/adjacency arithmetic (repro.core.exchange.wire_report) for an
+    ``n_groups x gsz`` structure-aware mesh -- printable on a single host,
+    no devices required; the distributed engines report the same numbers on
+    ``Engine.wire_bytes``.
+    """
+    if (net.k_inter == 0 or n_groups < 2
+            or net.n_areas % n_groups != 0 or net.n_pad % gsz != 0):
+        # A single group has no inter-group traffic to route, and shapes
+        # that don't shard would make the modelled bytes meaningless.
+        print(f"\n-- wire volume: n/a (A={net.n_areas}, n_pad={net.n_pad} "
+              f"on {n_groups} groups x {gsz})")
+        return
+    rep = exchange_lib.wire_report(
+        net, area_adjacency(net, spec), backend=cfg.backend,
+        n_groups=n_groups, gsz=gsz,
+        headroom=cfg.s_max_headroom, floor=cfg.s_max_floor)
+    dense, routed = rep["dense"], rep["routed"]
+    print(f"\n-- wire volume (bytes/window, mesh-total, modelled for "
+          f"{n_groups} groups x {gsz} subgroup, backend={cfg.backend}) --")
+    print(f"{'exchange':10s} {'local':>12s} {'global':>12s} {'total':>12s}"
+          f" {'rounds':>8s}")
+    print(f"{'dense':10s} {dense['local_bytes']:12,d} "
+          f"{dense['global_bytes']:12,d} {dense['total_bytes']:12,d} "
+          f"{max(n_groups - 1, 0):8d}")
+    print(f"{'routed':10s} {routed['local_bytes']:12,d} "
+          f"{routed['global_bytes']:12,d} {routed['total_bytes']:12,d} "
+          f"{routed['rounds']:8d}")
+
+
+def _pick_mesh(n_dev: int, n_areas: int, n_pad: int):
+    """A (data, model) mesh shape for the structure-aware placement.
+
+    Prefers the largest area-parallel tier (groups) whose shard constraints
+    hold: areas divide the groups, the padded area size divides the
+    subgroup. Returns None if nothing fits.
+    """
+    for gsz in range(1, n_dev + 1):
+        if n_dev % gsz:
+            continue
+        groups = n_dev // gsz
+        if n_areas % groups == 0 and n_pad % gsz == 0:
+            return groups, gsz
+    return None
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--model", default="mam_benchmark",
@@ -146,19 +198,26 @@ def main() -> None:
                     choices=["conventional", "structure_aware"])
     ap.add_argument("--neuron", default=None,
                     choices=[None, "lif", "ignore_and_fire"])
-    ap.add_argument("--delivery", default="dense", choices=["dense", "event"],
-                    help="legacy knob; prefer --backend")
+    ap.add_argument("--delivery", default=None, choices=["dense", "event"],
+                    help="DEPRECATED: use --backend")
     ap.add_argument("--backend", default="",
                     choices=["", "onehot", "scatter", "pallas", "event"],
                     help="delivery backend (repro.core.delivery); "
-                         "empty derives from --delivery")
+                         "default scatter")
+    ap.add_argument("--exchange", default="dense",
+                    choices=["dense", "routed"],
+                    help="distributed global pathway (repro.core.exchange): "
+                         "mesh-wide collectives vs connectivity-routed "
+                         "packet rounds (structure-aware schedule only; "
+                         "ignored on a single device)")
     ap.add_argument("--seed", type=int, default=12,
                     help="paper seeds: 12, 654, 91856")
     ap.add_argument("--compare", action="store_true",
                     help="run both schedules, assert identical spikes")
     ap.add_argument("--profile", action="store_true",
                     help="report per-phase timings (ring read/clear, update, "
-                         "intra/inter deliver) before the run")
+                         "intra/inter deliver) and the dense-vs-routed wire "
+                         "volume before the run")
     args = ap.parse_args()
 
     if args.model == "mam":
@@ -169,24 +228,62 @@ def main() -> None:
             n_areas=args.areas, n_per_area=args.n_per_area,
             k_intra=args.k // 2, k_inter=args.k // 2)
         neuron = args.neuron or "ignore_and_fire"
-    needs_outgoing = args.backend == "event" or args.delivery == "event"
+    if args.delivery is not None:
+        print("--delivery is deprecated; use --backend "
+              "(mapping dense->scatter, event->event)")
+    backend = args.backend or (
+        "event" if args.delivery == "event" else "scatter")
+    needs_outgoing = backend == "event" or args.exchange == "routed"
+    n_dev = jax.device_count()
     print(f"{args.model}: {spec.n_total:,} neurons / {spec.n_areas} areas, "
           f"K={spec.k_total}, D={spec.delay_ratio}, neuron={neuron}, "
-          f"backend={args.backend or args.delivery}, seed={args.seed}")
+          f"backend={backend}, exchange={args.exchange}, seed={args.seed}, "
+          f"devices={n_dev}")
 
     net = build_network(spec, seed=args.seed, outgoing=needs_outgoing)
+    mesh = None
+    runs_conventional = args.compare or args.schedule == "conventional"
+    if n_dev > 1:
+        shape = _pick_mesh(n_dev, net.n_areas, net.n_pad)
+        if shape is None:
+            raise SystemExit(
+                f"no (data, model) mesh over {n_dev} devices fits "
+                f"A={net.n_areas}, n_pad={net.n_pad}")
+        if runs_conventional and net.n_pad % n_dev != 0:
+            # The round-robin placement slices every area over all devices.
+            raise SystemExit(
+                f"the conventional schedule needs n_pad={net.n_pad} "
+                f"divisible by {n_dev} devices (pick --n-per-area "
+                "accordingly, or run --schedule structure_aware)")
+        mesh = jax.make_mesh(shape, ("data", "model"))
+        print(f"mesh: {shape[0]} area groups x {shape[1]} subgroup devices")
+
+    base_cfg = EngineConfig(
+        neuron_model=neuron, schedule=args.schedule,
+        delivery_backend=backend, seed=42)
     if args.profile:
-        profile_phases(net, spec, EngineConfig(
-            neuron_model=neuron, schedule=args.schedule,
-            delivery=args.delivery, delivery_backend=args.backend,
-            deposit_onehot=False, seed=42))
+        profile_phases(net, spec, base_cfg)
+        n_groups, gsz = (
+            (mesh.shape["data"], mesh.shape["model"]) if mesh is not None
+            else _pick_mesh(8, net.n_areas, net.n_pad) or (1, 8))
+        print_wire_volume(net, spec, base_cfg, n_groups, gsz)
+
     schedules = ([args.schedule] if not args.compare
                  else ["conventional", "structure_aware"])
     spikes = {}
     for sched in schedules:
-        eng = make_engine(net, spec, EngineConfig(
-            neuron_model=neuron, schedule=sched, delivery=args.delivery,
-            delivery_backend=args.backend, deposit_onehot=False, seed=42))
+        # The routed exchange routes the structure-aware window's lumped
+        # global pathway; the conventional schedule always runs dense.
+        exchange = args.exchange if sched == "structure_aware" else "dense"
+        cfg = EngineConfig(
+            neuron_model=neuron, schedule=sched, delivery_backend=backend,
+            exchange=exchange if mesh is not None else "", seed=42)
+        if mesh is not None:
+            from repro.core.dist_engine import make_dist_engine
+
+            eng = make_dist_engine(net, spec, mesh, cfg)
+        else:
+            eng = make_engine(net, spec, cfg)
         st = eng.init()
         n_windows = spec.steps_for(args.t_ms) // spec.delay_ratio
         st, _ = eng.window(st)  # compile
@@ -199,9 +296,13 @@ def main() -> None:
         rate = float(st.spike_count.sum()) / (spec.n_total * t_s)
         rtf = wall / ((n_windows - 1) * spec.delay_ratio * spec.dt_ms / 1000)
         overflow = int(st.overflow)
-        print(f"  {sched:16s}: {wall:6.2f} s wall, RTF {rtf:8.1f}, "
+        wire = eng.wire_bytes or {}
+        wire_s = (f", {wire['total_bytes']:,} wire B/window"
+                  if wire.get("total_bytes") else "")
+        print(f"  {sched:16s} ({exchange if mesh is not None else 'local'}):"
+              f" {wall:6.2f} s wall, RTF {rtf:8.1f}, "
               f"mean rate {rate:5.2f} Hz, "
-              f"{int(st.spike_count.sum()):,} spikes"
+              f"{int(st.spike_count.sum()):,} spikes{wire_s}"
               + (f", OVERFLOW {overflow} (raise s_max!)" if overflow else ""))
         spikes[sched] = np.asarray(st.spike_count)
 

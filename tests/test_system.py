@@ -46,14 +46,35 @@ def test_schedule_equivalence_bit_exact(small_spec, small_net, neuron_model):
 def test_deposit_variants_equivalent(small_spec, small_net):
     """One-hot-einsum and scatter-add delivery are interchangeable."""
     a = make_engine(small_net, small_spec,
-                    EngineConfig(schedule="structure_aware", deposit_onehot=True))
+                    EngineConfig(schedule="structure_aware",
+                                 delivery_backend="onehot"))
     b = make_engine(small_net, small_spec,
-                    EngineConfig(schedule="structure_aware", deposit_onehot=False))
+                    EngineConfig(schedule="structure_aware",
+                                 delivery_backend="scatter"))
     sa, sb = a.init(), b.init()
     for _ in range(10):
         sa, blk_a = a.window(sa)
         sb, blk_b = b.window(sb)
         assert np.array_equal(np.asarray(blk_a), np.asarray(blk_b))
+
+
+def test_legacy_delivery_knobs_deprecated_but_resolved():
+    """The pre-dispatch knobs warn and still resolve through the single
+    resolution point (EngineConfig.backend), so old configs keep meaning
+    the same thing while they migrate."""
+    with pytest.warns(DeprecationWarning):
+        assert EngineConfig(deposit_onehot=True).backend == "onehot"
+    with pytest.warns(DeprecationWarning):
+        assert EngineConfig(deposit_onehot=False).backend == "scatter"
+    with pytest.warns(DeprecationWarning):
+        assert EngineConfig(delivery="event").backend == "event"
+    with pytest.warns(DeprecationWarning):
+        assert EngineConfig(delivery="dense").backend == "onehot"
+    # delivery_backend wins over the legacy knobs; defaults stay silent.
+    with pytest.warns(DeprecationWarning):
+        assert EngineConfig(delivery="event",
+                            delivery_backend="pallas").backend == "pallas"
+    assert EngineConfig().backend == "onehot"
 
 
 def test_lif_ground_state_rate(small_spec, small_net):
@@ -366,10 +387,10 @@ def test_event_delivery_equals_dense_engine():
     net = build_network(spec, seed=91856, outgoing=True)
     dense = make_engine(net, spec, EngineConfig(
         neuron_model="ignore_and_fire", schedule="structure_aware",
-        delivery="dense"))
+        delivery_backend="onehot"))
     event = make_engine(net, spec, EngineConfig(
         neuron_model="ignore_and_fire", schedule="structure_aware",
-        delivery="event"))
+        delivery_backend="event"))
     sd, se = dense.init(), event.init()
     for w in range(25):
         sd, bd = dense.window(sd)
