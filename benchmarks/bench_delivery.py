@@ -228,6 +228,155 @@ def bench_wire_volume(name, spec, net, results: list):
     return out
 
 
+def bench_table_bytes(name, spec, net, results, *, n_groups=None, gsz=2):
+    """Per-device inter receive-table bytes, replicated vs sharded.
+
+    The tentpole's memory claim, measured on *instantiated* widths: the
+    replicated outgoing tables put every inter synapse on every device;
+    ``connectivity.shard_inter_tables`` re-cuts them into per-group inbound
+    slices, dividing the per-device bytes (and the receive scatter's
+    synapse touches -- priced with ``cost_model.receive_time_s``) by ~the
+    group count. Recorded per exchange: the id volume a device receives
+    differs between the dense all_gather and the routed ppermute rounds,
+    the table it scatters through is the same.
+    """
+    from repro.core import cost_model, delivery
+    from repro.core import exchange as exchange_lib
+    from repro.core.connectivity import area_adjacency
+
+    A = spec.n_areas
+    if n_groups is None:
+        n_groups = A if A <= 8 else 8
+    if spec.k_inter == 0 or net.tgt_inter is None:
+        return
+    routing = exchange_lib.build_routing(
+        area_adjacency(net, spec), n_groups,
+        exp_area_spikes=delivery.expected_area_spikes(net),
+        headroom=8.0, floor=4)
+    rep = exchange_lib.priced_inter_table_report(
+        net, n_groups=n_groups, gsz=gsz, headroom=8.0, floor=4,
+        routing=routing)
+    tb = rep["table_bytes"]
+    print(f"\n-- {name} / inter receive tables (bytes/device, "
+          f"{n_groups} groups x {gsz} subgroup) --")
+    print(f"{'layout':11s} {'bytes/dev':>14s} {'K':>6s} "
+          f"{'recv syn-touches/win (dense | routed)':>40s}")
+    for layout, key in (("replicated", "replicated"), ("sharded", "sharded")):
+        touches = {
+            exch: rep["receive"][exch][f"syn_touches_{key}"]
+            for exch in rep["receive"]
+        }
+        print(f"{layout:11s} {tb[key]:14,d} "
+              f"{rep['k_out_replicated' if key == 'replicated' else 'k_in_sharded']:6d} "
+              f"{touches.get('dense', 0):19,d} | {touches.get('routed', 0):,d}")
+    print(f"reduction: {tb['reduction']:.1f}x over {rep['n_shards']} shards")
+    for exch, recv in rep["receive"].items():
+        results.append(dict(
+            config=name, phase="table", backend="event", exchange=exch,
+            table_bytes_per_device_replicated=tb["replicated"],
+            table_bytes_per_device_sharded=tb["sharded"],
+            reduction=round(tb["reduction"], 3),
+            k_out_replicated=rep["k_out_replicated"],
+            k_in_sharded=rep["k_in_sharded"],
+            n_shards=rep["n_shards"], n_groups=n_groups, gsz=gsz,
+            ids_per_window=recv["ids_per_window"],
+            syn_touches_replicated=recv["syn_touches_replicated"],
+            syn_touches_sharded=recv["syn_touches_sharded"],
+            receive_s_replicated=cost_model.receive_time_s(
+                recv["syn_touches_replicated"], cost_model.SUPERMUC),
+            receive_s_sharded=cost_model.receive_time_s(
+                recv["syn_touches_sharded"], cost_model.SUPERMUC),
+        ))
+    return rep
+
+
+def bench_table_bytes_production(results):
+    """Production-scale (MAM x1, 16x16 mesh) table bytes from the dry-run's
+    deterministic ShapeDtypeStruct bounds -- no allocation.
+
+    This is the number that makes multi-host runs possible at all: the
+    replicated inter tables cost ~150 GiB/device at production scale (the
+    ROADMAP's quantified scaling wall); the sharded inbound slices divide
+    that by ~the 16-way group count. Asserted, so the benchmark fails if a
+    table-layout change ever loses the reduction.
+    """
+    from repro.core import exchange as exchange_lib
+    from repro.core.areas import mam_spec
+    from repro.core.connectivity import network_sds
+
+    spec = mam_spec(scale=1.0)
+    n_groups, gsz = 16, 16
+    sds_rep = network_sds(spec, size_multiple=16, outgoing=True)
+    rep = exchange_lib.priced_inter_table_report(
+        sds_rep, n_groups=n_groups, gsz=gsz)
+    tb = rep["table_bytes"]
+    print(f"\n-- mam_x1 production / inter receive tables "
+          f"({n_groups} groups x {gsz} subgroup, SDS bounds) --")
+    print(f"replicated {tb['replicated'] / 2**30:8.1f} GiB/dev "
+          f"(K={rep['k_out_replicated']})")
+    print(f"sharded    {tb['sharded'] / 2**30:8.1f} GiB/dev "
+          f"(K={rep['k_in_sharded']}, {rep['n_shards']} shards) "
+          f"-> {tb['reduction']:.1f}x")
+    # ~the group count; the sharded width bound carries extra per-shard
+    # slack (+6 sigma + 16 on a 16x smaller mean), so allow 0.6x of it.
+    assert tb["reduction"] >= 0.6 * n_groups, (
+        f"sharded inter tables must cut per-device bytes by ~the group "
+        f"count ({n_groups}); got {tb['reduction']:.1f}x")
+    results.append(dict(
+        config="mam_x1_16x16", phase="table", backend="event",
+        exchange="dense",
+        table_bytes_per_device_replicated=tb["replicated"],
+        table_bytes_per_device_sharded=tb["sharded"],
+        reduction=round(tb["reduction"], 3),
+        k_out_replicated=rep["k_out_replicated"],
+        k_in_sharded=rep["k_in_sharded"],
+        n_shards=rep["n_shards"], n_groups=n_groups, gsz=gsz,
+        sds_bounds=True,
+    ))
+
+
+# Static (deterministic) per-row byte fields the smoke run guards against
+# regressions: any increase vs the recorded BENCH_delivery.json baseline
+# fails CI -- wire bytes and table bytes are pure shape arithmetic, so an
+# increase is a real regression, never noise.
+_STATIC_GUARDED = {
+    "wire": ("local_bytes", "global_bytes", "total_bytes"),
+    "table": ("table_bytes_per_device_sharded",
+              "table_bytes_per_device_replicated"),
+}
+
+
+def _check_static_regression(results, baseline_path):
+    """Fail if a static wire/table byte counter grew vs the recorded file."""
+    if not os.path.exists(baseline_path):
+        print(f"(no baseline at {baseline_path}; regression check skipped)")
+        return
+    with open(baseline_path) as f:
+        base_rows = json.load(f).get("results", [])
+    key = lambda r: (r["config"], r["phase"], r["backend"], r.get("exchange"))
+    base = {key(r): r for r in base_rows if r["phase"] in _STATIC_GUARDED}
+    checked, failures = 0, []
+    for r in results:
+        if r["phase"] not in _STATIC_GUARDED:
+            continue
+        b = base.get(key(r))
+        if b is None:
+            continue
+        for field in _STATIC_GUARDED[r["phase"]]:
+            if field not in r or field not in b:
+                continue
+            checked += 1
+            if r[field] > b[field]:
+                failures.append(
+                    f"{key(r)} {field}: {r[field]:,} > baseline {b[field]:,}")
+    if failures:
+        raise SystemExit(
+            "static byte regression vs BENCH_delivery.json:\n  "
+            + "\n  ".join(failures))
+    print(f"static wire/table bytes: {checked} fields checked against "
+          f"baseline, no regression")
+
+
 def _representative_spikes(spec, net):
     """A real spike raster cycle from a warmed-up reference run."""
     import numpy as np
@@ -301,6 +450,8 @@ def main(argv=None) -> None:
             bench_deliver_phase(name, spec, net, spikes, args.cycles, results)
             bench_engine(name, spec, net, args.windows, results)
         bench_wire_volume(name, spec, net, results)
+        bench_table_bytes(name, spec, net, results)
+    bench_table_bytes_production(results)
 
     payload = dict(
         benchmark="delivery_backends",
@@ -311,6 +462,7 @@ def main(argv=None) -> None:
         results=results,
     )
     if args.smoke:
+        _check_static_regression(results, os.path.abspath(args.out))
         print("\n--smoke: results not written (CI smoke run)")
     else:
         out = os.path.abspath(args.out)

@@ -7,7 +7,7 @@ from repro.core.areas import (
     mam_spec,
     ring_area_adjacency,
 )
-from repro.core.connectivity import Network, build_network
+from repro.core.connectivity import Network, build_network, shard_inter_tables
 from repro.core.delivery import BACKENDS as DELIVERY_BACKENDS
 from repro.core.exchange import EXCHANGES
 from repro.core.engine import Engine, EngineConfig, SimState, make_engine
@@ -33,6 +33,7 @@ __all__ = [
     "ring_area_adjacency",
     "Network",
     "build_network",
+    "shard_inter_tables",
     "DELIVERY_BACKENDS",
     "EXCHANGES",
     "Engine",

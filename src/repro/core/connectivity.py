@@ -29,7 +29,13 @@ import numpy as np
 
 from repro.core.areas import MultiAreaSpec
 
-__all__ = ["Network", "build_network", "network_sds", "area_adjacency"]
+__all__ = [
+    "Network",
+    "build_network",
+    "network_sds",
+    "area_adjacency",
+    "shard_inter_tables",
+]
 
 
 @jax.tree_util.register_dataclass
@@ -64,6 +70,20 @@ class Network:
     wout_inter: jax.Array | None = None
     dout_inter: jax.Array | None = None
 
+    # *Sharded* inbound inter-area tables (the distributed event/routed
+    # receive path, see :func:`shard_inter_tables`): the replicated
+    # ``tgt_inter`` table re-cut into per-target-shard slices. Row layout
+    # ``[S, A * n_pad, K_in]``: shard ``s`` of the leading axis holds, for
+    # every *source* row (global id order -- so rows are naturally grouped
+    # by source device group), only the outgoing synapses whose target
+    # lives in shard ``s``. Targets stay global ids (the receive side's
+    # ``tgt_map`` remaps them exactly as for the replicated table), padded
+    # with -1 / weight 0. ``K_in`` ~= K_out / S, so each device holds
+    # ~1/S of the replicated table bytes.
+    tgt_inter_in: jax.Array | None = None   # [S, A*n_pad, K_in] int32
+    wout_inter_in: jax.Array | None = None  # [S, A*n_pad, K_in] f32
+    dout_inter_in: jax.Array | None = None  # [S, A*n_pad, K_in] int32
+
     # static metadata (ints are fine as static fields of the dataclass pytree)
     n_pad: int = dataclasses.field(metadata=dict(static=True), default=0)
     n_areas: int = dataclasses.field(metadata=dict(static=True), default=0)
@@ -80,6 +100,13 @@ class Network:
     r_span_intra: int = dataclasses.field(metadata=dict(static=True), default=0)
     steps_lo_inter: int = dataclasses.field(metadata=dict(static=True), default=1)
     r_span_inter: int = dataclasses.field(metadata=dict(static=True), default=0)
+    # How the ``*_inter_in`` tables slice their targets (see
+    # :func:`shard_inter_tables`): '' (no sharded tables), 'group' (shard =
+    # device area group, the structure-aware placement) or 'window' (shard =
+    # within-area neuron window, the conventional round-robin placement).
+    # Static so engine assembly can validate the tables match the mesh.
+    inter_shard_mode: str = dataclasses.field(
+        metadata=dict(static=True), default="")
 
     @property
     def k_intra(self) -> int:
@@ -133,8 +160,31 @@ def _outgoing_k_bound(k: int) -> int:
     return int(k + math.ceil(6.0 * math.sqrt(k)) + 8)
 
 
+def _inbound_k_bound(k: int, n_shards: int) -> int:
+    """Deterministic upper estimate of one shard's inbound row width.
+
+    A source's outgoing inter-area synapses spread ~uniformly over the
+    target shards, so the per-(source row, shard) count concentrates around
+    ``k / n_shards`` with Poisson fluctuations -- but the max is now taken
+    over ``n_shards`` x more cells than :func:`_outgoing_k_bound` covers,
+    so the slack is a little wider (+6 sigma + 16). The dry-run lowers with
+    this bound; instantiated widths are data-dependent and smaller.
+    """
+    import math
+
+    if k <= 0 or n_shards <= 0:
+        return 0
+    k_s = -(-k // n_shards)  # ceil
+    return int(k_s + math.ceil(6.0 * math.sqrt(k_s)) + 16)
+
+
 def network_sds(
-    spec: MultiAreaSpec, *, size_multiple: int = 1, outgoing: bool = False
+    spec: MultiAreaSpec,
+    *,
+    size_multiple: int = 1,
+    outgoing: bool = False,
+    inter_shards: int = 0,
+    inter_shard_mode: str = "group",
 ) -> Network:
     """ShapeDtypeStruct stand-in for :func:`build_network` (no allocation).
 
@@ -147,6 +197,12 @@ def network_sds(
     ``launch/dryrun.py`` can lower those paths at production scale. The
     outgoing row width is the deterministic bound of
     :func:`_outgoing_k_bound` (the instantiated width is data-dependent).
+
+    ``inter_shards > 0`` mirrors :func:`shard_inter_tables` instead: the
+    stand-in carries the ``[S, A * n_pad, K_in]`` *inbound* inter tables
+    (width bound :func:`_inbound_k_bound`) and no replicated inter tables,
+    so the dry-run lowers -- and its memory analysis prices -- the sharded
+    receive path at production scale.
     """
     import jax
 
@@ -162,7 +218,15 @@ def network_sds(
             wout_intra=s((A, n_pad, k_oi), jnp.float32),
             dout_intra=s((A, n_pad, k_oi), jnp.int32),
         )
-        if K_e > 0:
+        if K_e > 0 and inter_shards > 0:
+            k_ie = _inbound_k_bound(K_e, inter_shards)
+            out.update(
+                tgt_inter_in=s((inter_shards, A * n_pad, k_ie), jnp.int32),
+                wout_inter_in=s((inter_shards, A * n_pad, k_ie), jnp.float32),
+                dout_inter_in=s((inter_shards, A * n_pad, k_ie), jnp.int32),
+                inter_shard_mode=inter_shard_mode,
+            )
+        elif K_e > 0:
             k_oe = _outgoing_k_bound(K_e)
             out.update(
                 tgt_inter=s((A, n_pad, k_oe), jnp.int32),
@@ -219,11 +283,15 @@ def _invert_adjacency(
     d: np.ndarray,        # [N_tgt, K]
     n_src: int,
     tgt_base: int = 0,
+    tgt_ids: np.ndarray | None = None,   # [N_tgt] explicit target ids
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Incoming [N_tgt, K] tables -> outgoing padded [n_src, K_out_max].
 
     Rows are padded with target id ``-1`` / weight 0 (event_deliver masks
-    weight-0 entries into the absorbing row).
+    weight-0 entries into the absorbing row). Target ids default to
+    ``arange(N_tgt) + tgt_base``; ``tgt_ids`` overrides them for
+    non-contiguous target selections (the per-shard inbound slices of
+    :func:`shard_inter_tables`).
     """
     n_tgt, k = src.shape
     flat_src = src.reshape(-1)
@@ -234,7 +302,9 @@ def _invert_adjacency(
     tgt = np.full((n_src, k_out), -1, dtype=np.int32)
     wout = np.zeros((n_src, k_out), dtype=np.float32)
     dout = np.ones((n_src, k_out), dtype=np.int32)
-    tgt_ids = (np.repeat(np.arange(n_tgt, dtype=np.int64), k) + tgt_base)[order]
+    if tgt_ids is None:
+        tgt_ids = np.arange(n_tgt, dtype=np.int64) + tgt_base
+    tgt_ids = np.repeat(np.asarray(tgt_ids, dtype=np.int64), k)[order]
     w_flat = w.reshape(-1)[order]
     d_flat = d.reshape(-1)[order]
     # position within each source's run
@@ -385,6 +455,113 @@ def build_network(
         steps_lo_inter=lo_e,
         r_span_inter=span_e,
         **out,
+    )
+
+
+def _inbound_target_rows(
+    mode: str, shard: int, n_shards: int, n_areas: int, n_pad: int
+) -> np.ndarray:
+    """Global row ids of the targets shard ``shard`` owns.
+
+    ``'group'`` -- the structure-aware placement: shards own ``A / S``
+    consecutive areas (row-major over the mesh's area axes, matching
+    ``dist_engine`` placement and ``exchange._group_index``).
+    ``'window'`` -- the conventional round-robin placement: shards own a
+    ``n_pad / S`` neuron window of *every* area (matching
+    ``exchange._axis_offset`` over all mesh axes).
+    """
+    if mode == "group":
+        a_loc = n_areas // n_shards
+        return np.arange(shard * a_loc * n_pad, (shard + 1) * a_loc * n_pad,
+                         dtype=np.int64)
+    if mode == "window":
+        n_loc = n_pad // n_shards
+        win = np.arange(shard * n_loc, (shard + 1) * n_loc, dtype=np.int64)
+        return (np.arange(n_areas, dtype=np.int64)[:, None] * n_pad
+                + win[None, :]).reshape(-1)
+    raise ValueError(f"unknown inter_shard_mode {mode!r}")
+
+
+def shard_inter_tables(
+    net: Network, n_shards: int, *, mode: str = "group"
+) -> Network:
+    """Re-cut the replicated outgoing inter tables into per-shard inbound
+    slices (the tentpole of the sharded receive path).
+
+    The replicated ``tgt_inter/wout_inter/dout_inter`` tables make every
+    device hold (and scan) *all* ``A * n_pad x K_out`` inter-area synapses
+    -- the NEST every-rank-scans-all-spikes pattern the paper identifies as
+    the scaling wall (~171 GiB/device at production MAM scale, see
+    EXPERIMENTS.md). This builds the inbound-edge representation instead:
+    ``tgt_inter_in[s]`` holds, for every source row, only the synapses
+    whose target lives in shard ``s`` -- a ``[S, A * n_pad, K_in]`` stack
+    whose leading axis the distributed engine shards over the device
+    groups, so each device stores and scatters only the ~1/S of edges it
+    actually owns. Because groups own consecutive areas, the row range
+    ``[g * rows_loc, (g+1) * rows_loc)`` of a shard's table *is* the
+    (source group ``g`` -> this shard) edge table -- arriving id packets
+    index it directly, no extra indirection.
+
+    Targets stay *global* ids (remapped by the receive side's ``tgt_map``
+    exactly like the replicated path), weights stay on the 1/256 grid, and
+    each synapse appears in exactly one shard -- so delivery is
+    bit-identical to the replicated table by construction.
+
+    Returns a new :class:`Network` carrying the sharded tables with any
+    replicated inter tables dropped (``tgt_intra`` untouched -- the local
+    pathway is already group-sharded by placement). Built entirely from the
+    *incoming* ``src_inter/w_inter/delay_inter`` tensors, so the replicated
+    outgoing tables never need to exist: a production engine can go
+    straight from ``build_network()`` to the ~1/S inbound slices without
+    materialising the ~150 GiB replicated layout this refactor removes.
+    Works on ShapeDtypeStruct stand-ins too (dry-run lowering), where the
+    width is the deterministic bound of :func:`_inbound_k_bound`.
+    """
+    if net.k_inter == 0:
+        return dataclasses.replace(net, inter_shard_mode=mode)
+    A, n_pad = net.n_areas, net.n_pad
+    if mode == "group" and A % n_shards != 0:
+        raise ValueError(f"n_areas={A} not divisible by {n_shards} shards")
+    if mode == "window" and n_pad % n_shards != 0:
+        raise ValueError(f"n_pad={n_pad} not divisible by {n_shards} shards")
+    n_rows = A * n_pad
+    drop = dict(tgt_inter=None, wout_inter=None, dout_inter=None)
+
+    if not hasattr(net.src_inter, "__array__"):  # ShapeDtypeStruct stand-in
+        k_in = _inbound_k_bound(net.k_inter, n_shards)
+        s = jax.ShapeDtypeStruct
+        return dataclasses.replace(
+            net,
+            tgt_inter_in=s((n_shards, n_rows, k_in), jnp.int32),
+            wout_inter_in=s((n_shards, n_rows, k_in), jnp.float32),
+            dout_inter_in=s((n_shards, n_rows, k_in), jnp.int32),
+            inter_shard_mode=mode,
+            **drop,
+        )
+
+    K_e = net.k_inter
+    src = np.asarray(net.src_inter).reshape(n_rows, K_e)
+    w = np.asarray(net.w_inter).reshape(n_rows, K_e)
+    d = np.asarray(net.delay_inter).reshape(n_rows, K_e)
+    ts, ws, ds = [], [], []
+    for shard in range(n_shards):
+        rows = _inbound_target_rows(mode, shard, n_shards, A, n_pad)
+        t_, w_, d_ = _invert_adjacency(
+            src[rows], w[rows], d[rows], n_rows, tgt_ids=rows)
+        ts.append(t_), ws.append(w_), ds.append(d_)
+    k_in = max(t.shape[1] for t in ts)
+
+    def padk(x, fill):
+        return np.pad(x, ((0, 0), (0, k_in - x.shape[1])),
+                      constant_values=fill)
+
+    return dataclasses.replace(
+        net,
+        tgt_inter_in=jnp.asarray(np.stack([padk(t, -1) for t in ts])),
+        wout_inter_in=jnp.asarray(np.stack([padk(w_, 0.0) for w_ in ws])),
+        dout_inter_in=jnp.asarray(np.stack([padk(d_, 1) for d_ in ds])),
+        inter_shard_mode=mode,
+        **drop,
     )
 
 

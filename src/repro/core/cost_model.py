@@ -36,6 +36,7 @@ __all__ = [
     "JURECA",
     "WorkloadModel",
     "PhaseBreakdown",
+    "receive_time_s",
     "simulate_rtf",
 ]
 
@@ -199,6 +200,23 @@ def _phase_means(
     # Collocation runs on the master thread only (paper §2.4.3).
     t_collocate = wl.spikes_per_proc_cycle() * hw.c_collocate_ns * 1e-9
     return t_update, t_deliver, t_collocate
+
+
+def receive_time_s(syn_touches: float, hw: MachineModel) -> float:
+    """Receive-side scatter seconds for ``syn_touches`` synapse-table
+    touches (per device, per window).
+
+    The event receive path's work is ids_scattered x receive-table width --
+    the counter :func:`repro.core.exchange.inter_table_report` reports for
+    the replicated vs sharded table layouts (the sharded layout divides the
+    width by ~the shard count, the NEST every-rank-scans-everything fix of
+    arXiv:2109.11358). Each touch is one sequential table read + ring
+    accumulate, priced at the cache-model's sequential per-synapse cost and
+    parallelised over the ``T_M`` threads -- the same constants the deliver
+    phase of :func:`simulate_rtf` uses, so before/after receive times are
+    comparable with the phase breakdowns.
+    """
+    return syn_touches * hw.c_syn_seq_ns * 1e-9 / hw.t_m
 
 
 def simulate_rtf(

@@ -40,10 +40,13 @@ neither scatter order nor slot-reduction order can change a ULP.
 :func:`compact_fired` implements the wire format of the distributed event
 path: fired neurons are compacted into fixed-size id packets *before* the
 exchange (NEST's spike-id wire format, the one the paper contrasts with
-dense vectors). The receive side scatters the ids through replicated
-outgoing tables straight into each device's ring shard
-(``ops.event_deliver_ids`` with a global->local ``tgt_map``). ``s_max`` caps
-the packet; the engines surface the spill in ``SimState.overflow``.
+dense vectors). The receive side scatters the ids through each device's
+inter receive tables straight into its ring shard
+(``ops.event_deliver_ids`` with a global->local ``tgt_map``); since the
+sharded-table refactor those are the per-shard *inbound* slices of
+``connectivity.shard_inter_tables`` -- each device scatters only the edges
+it owns. ``s_max`` caps the packet; the engines surface the spill in
+``SimState.overflow``.
 """
 
 from __future__ import annotations

@@ -22,7 +22,10 @@ included); this module only validates the placement, selects the exchange
   backends exchange bit-packed spike vectors (``comm.gather_*``); the
   ``event`` backend compacts fired neurons into fixed-size *id packets*
   before each exchange (NEST's sparse wire format) and the receive side
-  scatters the ids through replicated outgoing tables. Either way the
+  scatters the ids through this device's *sharded inbound* inter tables
+  (``connectivity.shard_inter_tables`` -- only the ~1/S of edges the
+  device owns; ``EngineConfig.shard_inter_tables=False`` keeps the legacy
+  replicated tables as the equivalence reference). Either way the
   global pathway is a mesh-wide ``all_gather``: every device receives every
   fired id, even from areas that project nothing into its shard.
 
@@ -90,20 +93,29 @@ def network_pspecs(mesh: Mesh, schedule: str, like: Network | None = None) -> Ne
 
     ``like`` supplies the static metadata fields (pytree structure must match
     exactly when used as shard_map in_specs). When ``like`` carries outgoing
-    (event-path) tables they are kept device-resident in full: intra tables
-    replicated over the subgroup (each device scans its areas' complete fired
-    lists), inter tables replicated everywhere (each device scans the global
-    packet) -- the NEST pattern where every rank receives all spikes and
-    delivers to its local targets.
+    (event-path) tables: intra tables are replicated over the subgroup (each
+    device scans its areas' complete fired lists); the *inbound* inter
+    tables (``connectivity.shard_inter_tables``, the default assembly) are
+    sharded over their leading shard axis -- the device-group grid under
+    structure-aware placement, the full device grid under conventional --
+    so each device holds only the ~1/S of inter edges it owns. Legacy
+    replicated inter tables (``shard_inter_tables=False``, the equivalence
+    reference) keep the NEST every-rank-holds-everything layout.
     """
     if schedule == STRUCTURE_AWARE:
         area = P(_area_axes(mesh), _subgroup_axis(mesh))
         syn = P(_area_axes(mesh), _subgroup_axis(mesh), None)
         out_intra = P(_area_axes(mesh), None, None)
+        # [G, n_rows, K_in]: one group slice per area-group shard,
+        # replicated over the subgroup (every lane scatters its own
+        # neuron window of the group's targets).
+        inter_in = P(_area_axes(mesh), None, None)
     else:  # conventional round-robin analogue: slice every area everywhere
         area = P(None, tuple(mesh.axis_names))
         syn = P(None, tuple(mesh.axis_names), None)
         out_intra = P(None, None, None)
+        # [n_dev, n_rows, K_in]: one neuron-window slice per device.
+        inter_in = P(tuple(mesh.axis_names), None, None)
     arrays = dict(
         alive=area, rate_hz=area,
         src_intra=syn, w_intra=syn, delay_intra=syn,
@@ -112,9 +124,12 @@ def network_pspecs(mesh: Mesh, schedule: str, like: Network | None = None) -> Ne
     if like is None or like.tgt_intra is not None:
         arrays.update(tgt_intra=out_intra, wout_intra=out_intra,
                       dout_intra=out_intra)
-    if like is None or like.tgt_inter is not None:
+    if like is not None and like.tgt_inter is not None:
         rep = P(None, None, None)
         arrays.update(tgt_inter=rep, wout_inter=rep, dout_inter=rep)
+    if like is None or like.tgt_inter_in is not None:
+        arrays.update(tgt_inter_in=inter_in, wout_inter_in=inter_in,
+                      dout_inter_in=inter_in)
     if like is not None:
         return dataclasses.replace(like, **arrays)
     return Network(
@@ -200,6 +215,31 @@ def make_dist_engine(
     _validate(net, mesh, cfg.schedule)
     if backend == "event" and net.tgt_intra is None:
         raise ValueError("event delivery needs build_network(outgoing=True)")
+    # The event/routed receive path scatters arriving id packets through
+    # inter receive tables. By default (cfg.shard_inter_tables) those are
+    # the *sharded inbound* slices: the replicated [A*n_pad, K_out] tables
+    # are re-cut per target shard (connectivity.shard_inter_tables) and the
+    # replicated leaves dropped, so each device holds ~1/S of the edges.
+    # A network that already carries inbound tables (network_sds
+    # inter_shards, the dry-run path) is validated against the mesh.
+    if (backend == "event" or cfg.exchange == "routed") and net.k_inter > 0:
+        if cfg.schedule == STRUCTURE_AWARE:
+            n_shards = math.prod(mesh.shape[a] for a in _area_axes(mesh))
+            mode = "group"
+        else:
+            n_shards, mode = mesh.size, "window"
+        if net.tgt_inter_in is not None:
+            if (net.tgt_inter_in.shape[0] != n_shards
+                    or net.inter_shard_mode != mode):
+                raise ValueError(
+                    f"sharded inter tables ({net.tgt_inter_in.shape[0]} "
+                    f"{net.inter_shard_mode!r} shards) do not match the "
+                    f"mesh ({n_shards} {mode!r} shards)")
+        elif cfg.shard_inter_tables:
+            # Built from the incoming tensors -- no replicated outgoing
+            # inter tables needed (build_network(outgoing=True) is only
+            # required for the event backend's intra tables above).
+            net = connectivity_lib.shard_inter_tables(net, n_shards, mode=mode)
     if cfg.superstep_kernel:
         raise ValueError(
             "superstep_kernel is single-host only; the distributed engine "

@@ -25,7 +25,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import warnings
 from typing import Callable, NamedTuple
 
 import jax
@@ -58,9 +57,8 @@ class EngineConfig:
         default_factory=neuron_lib.LIFParams
     )
     # The per-cycle deliver hot path: 'onehot' | 'scatter' | 'pallas' |
-    # 'event' (see repro.core.delivery). The empty string resolves the legacy
-    # knobs below (or 'onehot' when none are set); the `backend` property is
-    # the single resolution point.
+    # 'event' (see repro.core.delivery). '' defaults to 'onehot'; the
+    # `backend` property is the single dispatch point.
     delivery_backend: str = ""
     # How spikes travel between distributed shards (repro.core.exchange):
     # 'dense' (mesh-wide collectives) | 'routed' (connectivity-routed packet
@@ -68,12 +66,13 @@ class EngineConfig:
     # '' resolves to 'local' for the single-host engine and 'dense' for the
     # distributed one.
     exchange: str = ""
-    # DEPRECATED: one-hot-einsum (True) vs scatter-add (False) deposit.
-    # Predates the unified dispatch; use delivery_backend='onehot'/'scatter'.
-    deposit_onehot: bool | None = None
-    # DEPRECATED: 'dense' (gather-matvec) vs 'event' (compact + scatter).
-    # Use delivery_backend='event' (or a dense backend) instead.
-    delivery: str | None = None
+    # Distributed event/routed receive tables: True (default) re-cuts the
+    # replicated outgoing inter tables into per-shard *inbound* slices
+    # (connectivity.shard_inter_tables) so each device stores and scatters
+    # only the inter edges it owns (~1/S of the bytes and receive work);
+    # False keeps the legacy replicated tables -- the bit-identity
+    # reference for the equivalence suite. Single-host engines ignore it.
+    shard_inter_tables: bool = True
     # Use the fused Pallas LIF kernel (kernels.ops.lif_update) for the update
     # phase. None = enable exactly when delivery_backend is 'pallas' (the
     # all-kernel cycle); the flag exists so the fused update can be tested
@@ -121,16 +120,6 @@ class EngineConfig:
             raise ValueError(f"unknown neuron model {self.neuron_model!r}")
         if self.schedule not in (CONVENTIONAL, STRUCTURE_AWARE):
             raise ValueError(f"unknown schedule {self.schedule!r}")
-        if self.delivery not in (None, "dense", "event"):
-            raise ValueError(f"unknown delivery {self.delivery!r}")
-        if self.deposit_onehot is not None or self.delivery is not None:
-            warnings.warn(
-                "EngineConfig.deposit_onehot/delivery are deprecated; use "
-                "delivery_backend='onehot'|'scatter'|'pallas'|'event' (the "
-                "`backend` property is the single resolution point)",
-                DeprecationWarning,
-                stacklevel=3,
-            )
         if self.delivery_backend not in ("",) + delivery_lib.BACKENDS:
             raise ValueError(
                 f"unknown delivery_backend {self.delivery_backend!r} "
@@ -165,14 +154,8 @@ class EngineConfig:
 
     @property
     def backend(self) -> str:
-        """The resolved delivery backend (deprecated knobs folded in)."""
-        if self.delivery_backend:
-            return self.delivery_backend
-        if self.delivery == "event":
-            return "event"
-        if self.deposit_onehot is False:
-            return "scatter"
-        return "onehot"
+        """The resolved delivery backend ('' defaults to 'onehot')."""
+        return self.delivery_backend or "onehot"
 
     @property
     def fused(self) -> bool:

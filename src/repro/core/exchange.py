@@ -21,7 +21,11 @@ Three implementations:
   distributed engine: bit-packed spike vectors (``comm.gather_*``) for the
   dense backends, compacted id packets over ``all_gather`` for the event
   backend. Every device receives every fired id, whether or not any of its
-  neurons has a synapse from the sender.
+  neurons has a synapse from the sender -- but since the sharded-table
+  refactor each device *scatters* an arriving id only through the inbound
+  edges it owns (``connectivity.shard_inter_tables``; see
+  ``_inter_tables`` and :func:`inter_table_report`), not the full
+  replicated outgoing table.
 * :class:`RoutedExchange` -- the connectivity-routed global pathway: at
   build time the area->area adjacency (:func:`repro.core.connectivity
   .area_adjacency`) is folded to the device-group graph, and the window-end
@@ -69,12 +73,17 @@ __all__ = [
     "RoutedExchange",
     "Routing",
     "build_routing",
+    "inter_table_report",
+    "priced_inter_table_report",
     "wire_report",
 ]
 
 EXCHANGES = ("local", "dense", "routed")
 
 _I32_BYTES = 4
+# Receive-table bytes per synapse entry: tgt int32 + w f32 + delay int32
+# (matches Network.bytes_per_synapse).
+_SYN_BYTES = 12
 
 
 # ---------------------------------------------------------------------------
@@ -125,6 +134,7 @@ def build_routing(
     exp_area_spikes: float,
     headroom: float,
     floor: int,
+    intra_tier: int | None = None,
 ) -> Routing:
     """Fold the [A, A] area adjacency onto ``n_groups`` device groups.
 
@@ -133,6 +143,17 @@ def build_routing(
     projecting along the edge (``headroom x expectation + slack``, the same
     sizing rule as :func:`repro.core.delivery.event_bounds`), so sparse
     edges get small packets and absent edges get none.
+
+    ``intra_tier`` is the number of consecutive groups sharing the fast
+    interconnect tier (groups per pod on the (pod, data) group grid; group
+    index is row-major, so one pod's groups are contiguous). When set, the
+    rotation rounds are *hierarchically ordered*: the group-local offset 0
+    first, then every offset whose existing edges all stay inside a tier,
+    then the pod-crossing ones -- so on a multi-pod mesh most rounds
+    complete on the fast tier before the first slow-tier crossing, instead
+    of interleaving the two. Ordering only (each round ships the same
+    packets either way; delivery is scatter-order-exact on the 1/256
+    grid), so trajectories are bit-identical to the flat ring order.
     """
     adj = np.asarray(adj, dtype=bool)
     a = adj.shape[0]
@@ -158,6 +179,14 @@ def build_routing(
             for g, h in pairs
         )
         rounds.append(RouteRound(offset=k, pairs=pairs, s_max=s_max))
+    if intra_tier is not None and 0 < intra_tier < n_groups:
+        def tier(rnd: RouteRound) -> int:
+            if rnd.offset == 0:
+                return 0   # group-local, no wire at all
+            if all(g // intra_tier == h // intra_tier for g, h in rnd.pairs):
+                return 1   # every edge stays on the fast tier
+            return 2       # at least one pod-crossing edge
+        rounds.sort(key=lambda r: (tier(r), r.offset))
     return Routing(
         n_groups=n_groups, proj=proj, group_adj=group_adj,
         rounds=tuple(rounds),
@@ -325,6 +354,19 @@ class DenseMeshExchange(Exchange):
         return to_local
 
     def _inter_tables(self, net: Network):
+        """This device's inter receive tables ``(tgt, w, d) [n_rows, K]``.
+
+        With sharded inbound tables (``connectivity.shard_inter_tables``,
+        the default distributed assembly) the shard_map view's leading
+        shard axis is local size 1 -- ``[0]`` selects this device's own
+        inbound slice, so the receive scatter touches only the ~1/S of
+        edges this device owns. The legacy replicated reshape is kept for
+        ``EngineConfig.shard_inter_tables=False`` (the equivalence suite's
+        bit-identity reference).
+        """
+        if net.tgt_inter_in is not None:
+            return (net.tgt_inter_in[0], net.wout_inter_in[0],
+                    net.dout_inter_in[0])
         n_rows = net.n_areas * net.n_pad
         k_out = net.tgt_inter.shape[-1]
         return (net.tgt_inter.reshape(n_rows, k_out),
@@ -494,8 +536,9 @@ class RoutedExchange(DenseMeshExchange):
     ppermute rotation rounds over the group graph: each group's window
     packet is masked and re-compacted *per destination group* (only ids
     whose source area projects along the edge, bound ``RouteRound.s_max``),
-    shipped only along edges that exist, and scattered through the
-    replicated outgoing tables on arrival. Requires
+    shipped only along edges that exist, and scattered through this
+    device's inter receive tables on arrival (the sharded inbound slice by
+    default, see ``_inter_tables``). Requires
     ``build_network(outgoing=True)`` for the inter tables, under every
     delivery backend (the routed wire format is id packets).
     """
@@ -508,7 +551,8 @@ class RoutedExchange(DenseMeshExchange):
             raise ValueError(
                 "RoutedExchange routes the structure-aware window's lumped "
                 "global pathway; the conventional schedule has none")
-        if net.k_inter > 0 and net.tgt_inter is None:
+        if (net.k_inter > 0 and net.tgt_inter is None
+                and net.tgt_inter_in is None):
             raise ValueError(
                 "RoutedExchange ships id packets and scatters through the "
                 "outgoing tables: build_network(outgoing=True) required")
@@ -520,9 +564,17 @@ class RoutedExchange(DenseMeshExchange):
                 net, n_groups=self.n_groups, gsz=self.gsz,
                 headroom=cfg.s_max_headroom, floor=cfg.s_max_floor)
         exp_area = delivery_lib.expected_area_spikes(net)
+        # Hierarchical round order on a multi-pod mesh: the leading area
+        # axis is the pod tier, so groups-per-pod consecutive groups share
+        # the fast tier and their offsets are scheduled first.
+        intra_tier = (
+            self.n_groups // mesh.shape[self.area_axes[0]]
+            if len(self.area_axes) > 1 else None
+        )
         self.routing = build_routing(
             adjacency, self.n_groups, exp_area_spikes=exp_area,
-            headroom=cfg.s_max_headroom, floor=cfg.s_max_floor)
+            headroom=cfg.s_max_headroom, floor=cfg.s_max_floor,
+            intra_tier=intra_tier)
         # Baked constants: area -> destination-group projection (row A
         # absorbs the packet fill id) and the group graph for the
         # receive-validity mask.
@@ -679,6 +731,118 @@ def routed_wire_bytes(
                 rounds=routing.n_wire_rounds,
                 dense_rounds=max(n_groups - 1, 0),
                 edges=routing.n_edges)
+
+
+def inter_table_report(
+    net: Network,
+    *,
+    n_groups: int,
+    gsz: int,
+    schedule: str = STRUCTURE_AWARE,
+    headroom: float = 8.0,
+    floor: int = 16,
+    routing: Routing | None = None,
+) -> dict:
+    """Per-device inter receive-table bytes and receive-side scatter work,
+    replicated vs sharded -- the static accounting of the sharded-table
+    tentpole (pure shape arithmetic, no devices).
+
+    ``table_bytes.replicated`` prices the legacy layout (every device holds
+    the full ``[A * n_pad, K_out]`` outgoing tables, 12 B/synapse);
+    ``table_bytes.sharded`` prices the inbound slice one device keeps after
+    :func:`repro.core.connectivity.shard_inter_tables` (one shard of the
+    ``[S, A * n_pad, K_in]`` stack). Widths come from the network's own
+    tables when it carries them and fall back to the deterministic
+    ``network_sds`` bounds otherwise, so the report matches what the
+    dry-run lowers. ``receive`` counts synapse touches per device per
+    window of the event receive scatter (ids scattered x table width):
+    the id volume is unchanged by sharding -- the win is the ~S x narrower
+    table each id fans out over. Feeds ``launch/dryrun.py``,
+    ``benchmarks/bench_delivery.py`` and ``cost_model.receive_time_s``.
+    """
+    from repro.core import connectivity as connectivity_lib
+
+    n_dev = n_groups * gsz
+    d_win = net.delay_ratio
+    rows = net.n_areas * net.n_pad
+    n_shards = n_groups if schedule == STRUCTURE_AWARE else n_dev
+    k_e = net.k_inter
+    if net.tgt_inter is not None:
+        k_rep = net.tgt_inter.shape[-1]
+    else:
+        k_rep = connectivity_lib._outgoing_k_bound(k_e)
+    if net.tgt_inter_in is not None:
+        k_sh = net.tgt_inter_in.shape[-1]
+        n_shards = net.tgt_inter_in.shape[0]
+    else:
+        k_sh = connectivity_lib._inbound_k_bound(k_e, n_shards)
+    bytes_rep = rows * k_rep * _SYN_BYTES
+    bytes_sh = rows * k_sh * _SYN_BYTES
+    _, s_max_dev = _mesh_bounds(
+        net, n_groups=n_groups, gsz=gsz, headroom=headroom, floor=floor)
+    # Ids scattered per device per window by each global pathway.
+    ids = {"dense": d_win * n_dev * s_max_dev}
+    if routing is not None:
+        ids["routed"] = d_win * sum(r.s_max for r in routing.rounds)
+    receive = {
+        name: dict(
+            ids_per_window=n,
+            syn_touches_replicated=n * k_rep,
+            syn_touches_sharded=n * k_sh,
+        )
+        for name, n in ids.items()
+    }
+    return dict(
+        rows=rows,
+        n_shards=n_shards,
+        k_out_replicated=k_rep,
+        k_in_sharded=k_sh,
+        table_bytes=dict(
+            replicated=bytes_rep,
+            sharded=bytes_sh,
+            reduction=bytes_rep / bytes_sh if bytes_sh else float("inf"),
+        ),
+        receive=receive,
+    )
+
+
+def priced_inter_table_report(
+    net: Network,
+    *,
+    n_groups: int,
+    gsz: int,
+    schedule: str = STRUCTURE_AWARE,
+    headroom: float = 8.0,
+    floor: int = 16,
+    routing: Routing | None = None,
+) -> dict:
+    """:func:`inter_table_report` with *both* table layouts priced from one
+    network.
+
+    A network normally carries one layout (replicated before
+    ``shard_inter_tables`` / inbound after); the missing side would fall
+    back to the deterministic width bound, whose per-shard slack
+    misprices small configs. This instantiates the sharded slices from a
+    replicated-only network (or their SDS bound for stand-ins) and
+    re-attaches the replicated leaves, so every caller of the
+    replicated-vs-sharded comparison (``benchmarks/bench_delivery.py``,
+    ``launch/simulate.py --profile``, ``launch/dryrun.py``) prices the
+    same thing the same way.
+    """
+    if (net.k_inter > 0 and net.tgt_inter is not None
+            and net.tgt_inter_in is None):
+        from repro.core import connectivity as connectivity_lib
+
+        n_shards = n_groups if schedule == STRUCTURE_AWARE else n_groups * gsz
+        mode = "group" if schedule == STRUCTURE_AWARE else "window"
+        sharded = connectivity_lib.shard_inter_tables(
+            net, n_shards, mode=mode)
+        net = dataclasses.replace(
+            sharded, tgt_inter=net.tgt_inter, wout_inter=net.wout_inter,
+            dout_inter=net.dout_inter)
+    return inter_table_report(
+        net, n_groups=n_groups, gsz=gsz, schedule=schedule,
+        headroom=headroom, floor=floor, routing=routing)
 
 
 def wire_report(

@@ -232,6 +232,7 @@ def dryrun_snn_cell(
     scale: float = 1.0,
     backend: str = "",
     exchange: str = "",
+    shard_tables: bool = True,
 ) -> dict:
     """Lower the distributed SNN engine window at production MAM scale.
 
@@ -240,16 +241,25 @@ def dryrun_snn_cell(
     ``network_sds(outgoing=True)``, closing the dry-run gap); ``exchange``
     selects the global pathway (``routed`` lowers the ppermute rounds; with
     no spec-level adjacency the MAM graph is all-to-all, so routing skips
-    nothing but the per-edge packets still lower).
+    nothing but the per-edge packets still lower). ``shard_tables``
+    (default) lowers the sharded inbound inter receive tables
+    (``network_sds(inter_shards=...)`` -- per-device table bytes divided by
+    ~the shard count); False keeps the replicated-table baseline the
+    sharded layout is measured against. The per-device table bytes and
+    receive-side work land in ``row["inter_tables"]``.
     """
     from repro.core.areas import mam_spec
-    from repro.core.connectivity import network_sds
+    from repro.core.connectivity import area_adjacency, network_sds
     from repro.core.dist_engine import (
         make_dist_engine, network_pspecs, state_pspecs)
     from repro.core.engine import EngineConfig
+    from repro.core import delivery as delivery_lib
+    from repro.core import exchange as exchange_lib
     from repro.core import neuron as neuron_lib
 
     label = "_".join(x for x in (schedule, backend, exchange) if x)
+    if not shard_tables:
+        label += "_reptables"
     row: dict[str, Any] = {
         "arch": SNN_ARCH, "shape": f"mam_x{scale:g}_{label}",
         "mesh": "2x16x16" if multi_pod else "16x16", "mode": schedule,
@@ -260,10 +270,31 @@ def dryrun_snn_cell(
     # pad so both the 16-way subgroup and (for conventional) all 512 divide
     mult = 512 if schedule == "conventional" else 16
     needs_outgoing = backend == "event" or exchange == "routed"
-    net_sds = network_sds(spec, size_multiple=mult, outgoing=needs_outgoing)
+    gsz = mesh.shape["model"]
+    n_groups = n_devices // gsz
+    n_shards = n_groups if schedule == "structure_aware" else n_devices
+    shard_mode = "group" if schedule == "structure_aware" else "window"
+    net_sds = network_sds(
+        spec, size_multiple=mult, outgoing=needs_outgoing,
+        inter_shards=(n_shards if needs_outgoing and shard_tables else 0),
+        inter_shard_mode=shard_mode)
     cfg = EngineConfig(neuron_model="lif", schedule=schedule,
-                       delivery_backend=backend, exchange=exchange)
+                       delivery_backend=backend, exchange=exchange,
+                       shard_inter_tables=shard_tables)
     eng = make_dist_engine(net_sds, spec, mesh, cfg)
+    if needs_outgoing and spec.k_inter > 0:
+        # Static per-device receive-table accounting, replicated vs sharded
+        # (the tentpole's memory claim, independent of XLA's analysis).
+        routing = None
+        if exchange == "routed":
+            routing = exchange_lib.build_routing(
+                area_adjacency(net_sds, spec), n_groups,
+                exp_area_spikes=delivery_lib.expected_area_spikes(net_sds),
+                headroom=cfg.s_max_headroom, floor=cfg.s_max_floor)
+        row["inter_tables"] = exchange_lib.priced_inter_table_report(
+            net_sds, n_groups=n_groups, gsz=gsz, schedule=schedule,
+            headroom=cfg.s_max_headroom, floor=cfg.s_max_floor,
+            routing=routing)
     A, n_pad = net_sds.alive.shape
     R = net_sds.ring_len
 
@@ -334,6 +365,10 @@ def main() -> None:
     ap.add_argument("--snn-exchange", default="",
                     help="global pathway for the SNN cells "
                          "('' = dense, 'routed' lowers the ppermute rounds)")
+    ap.add_argument("--snn-replicated-tables", action="store_true",
+                    help="lower the legacy replicated inter receive tables "
+                         "instead of the sharded inbound slices (the "
+                         "before/after baseline of the sharded-table PR)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -353,7 +388,8 @@ def main() -> None:
                             # routed applies to the structure-aware lumped
                             # pathway only; conventional stays dense.
                             exchange=(args.snn_exchange
-                                      if sched == "structure_aware" else "")))
+                                      if sched == "structure_aware" else ""),
+                            shard_tables=not args.snn_replicated_tables))
                     except Exception as e:
                         rows.append({
                             "arch": arch, "shape": sched,
@@ -399,11 +435,17 @@ def _print_row(row: dict) -> None:
     mem = row["memory_analysis"]
     per_dev_gb = (mem["argument_bytes"] + mem["temp_bytes"]
                   + mem["output_bytes"]) / 2**30
+    tables = ""
+    if "inter_tables" in row:
+        tb = row["inter_tables"]["table_bytes"]
+        tables = (f" inter-tables rep={tb['replicated'] / 2**30:.1f}GiB "
+                  f"sharded={tb['sharded'] / 2**30:.1f}GiB "
+                  f"({tb['reduction']:.1f}x)")
     print(base + f"OK compute={r['compute_s']*1e3:9.3f}ms "
           f"memory={r['memory_s']*1e3:9.3f}ms "
           f"collective={r['collective_s']*1e3:9.3f}ms "
           f"dom={row['dominant'][:-2]:10s} mem/dev={per_dev_gb:7.2f}GiB "
-          f"compile={row.get('compile_s', 0):6.1f}s")
+          f"compile={row.get('compile_s', 0):6.1f}s" + tables)
 
 
 if __name__ == "__main__":

@@ -166,6 +166,15 @@ def print_wire_volume(net, spec, cfg: EngineConfig, n_groups: int, gsz: int):
     print(f"{'routed':10s} {routed['local_bytes']:12,d} "
           f"{routed['global_bytes']:12,d} {routed['total_bytes']:12,d} "
           f"{routed['rounds']:8d}")
+    if net.tgt_inter is not None or net.tgt_inter_in is not None:
+        tbl = exchange_lib.priced_inter_table_report(
+            net, n_groups=n_groups, gsz=gsz,
+            headroom=cfg.s_max_headroom, floor=cfg.s_max_floor)
+        tb = tbl["table_bytes"]
+        print(f"-- inter receive tables, per device: replicated "
+              f"{tb['replicated']:,} B (K={tbl['k_out_replicated']}) vs "
+              f"sharded {tb['sharded']:,} B (K={tbl['k_in_sharded']}, "
+              f"{tbl['n_shards']} shards, {tb['reduction']:.1f}x)")
 
 
 def _pick_mesh(n_dev: int, n_areas: int, n_pad: int):
@@ -198,8 +207,6 @@ def main() -> None:
                     choices=["conventional", "structure_aware"])
     ap.add_argument("--neuron", default=None,
                     choices=[None, "lif", "ignore_and_fire"])
-    ap.add_argument("--delivery", default=None, choices=["dense", "event"],
-                    help="DEPRECATED: use --backend")
     ap.add_argument("--backend", default="",
                     choices=["", "onehot", "scatter", "pallas", "event"],
                     help="delivery backend (repro.core.delivery); "
@@ -210,6 +217,12 @@ def main() -> None:
                          "mesh-wide collectives vs connectivity-routed "
                          "packet rounds (structure-aware schedule only; "
                          "ignored on a single device)")
+    ap.add_argument("--replicated-inter-tables", action="store_true",
+                    help="keep the legacy replicated inter receive tables "
+                         "on every device instead of the sharded inbound "
+                         "slices (the bit-identity baseline of the "
+                         "sharded-table refactor; distributed event/routed "
+                         "paths only)")
     ap.add_argument("--seed", type=int, default=12,
                     help="paper seeds: 12, 654, 91856")
     ap.add_argument("--compare", action="store_true",
@@ -228,11 +241,7 @@ def main() -> None:
             n_areas=args.areas, n_per_area=args.n_per_area,
             k_intra=args.k // 2, k_inter=args.k // 2)
         neuron = args.neuron or "ignore_and_fire"
-    if args.delivery is not None:
-        print("--delivery is deprecated; use --backend "
-              "(mapping dense->scatter, event->event)")
-    backend = args.backend or (
-        "event" if args.delivery == "event" else "scatter")
+    backend = args.backend or "scatter"
     needs_outgoing = backend == "event" or args.exchange == "routed"
     n_dev = jax.device_count()
     print(f"{args.model}: {spec.n_total:,} neurons / {spec.n_areas} areas, "
@@ -277,7 +286,8 @@ def main() -> None:
         exchange = args.exchange if sched == "structure_aware" else "dense"
         cfg = EngineConfig(
             neuron_model=neuron, schedule=sched, delivery_backend=backend,
-            exchange=exchange if mesh is not None else "", seed=42)
+            exchange=exchange if mesh is not None else "", seed=42,
+            shard_inter_tables=not args.replicated_inter_tables)
         if mesh is not None:
             from repro.core.dist_engine import make_dist_engine
 

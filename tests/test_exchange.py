@@ -141,6 +141,206 @@ def test_routed_exchange_multi_pod_and_overflow():
     """))
 
 
+def test_sharded_inter_tables_equivalence():
+    """Tentpole: the sharded inbound inter tables (the default distributed
+    receive path) are bit-identical to the legacy replicated tables AND the
+    single-host reference -- spike trains, rings and SimState.overflow --
+    for both DenseMeshExchange and RoutedExchange on an 8-fake-device mesh,
+    including the conventional schedule's window-sliced variant; and a
+    forced per-edge s_max overflow run reports the *same* nonzero spill
+    under either table layout (packets are cut send-side, so the layout
+    cannot change what drops)."""
+    print(_run("""
+        import numpy as np, jax
+        from repro.core.areas import mam_benchmark_spec, ring_area_adjacency
+        from repro.core.connectivity import build_network
+        from repro.core.engine import make_engine, EngineConfig
+        from repro.core.dist_engine import make_dist_engine
+
+        adj = ring_area_adjacency(8, width=2)
+        spec = mam_benchmark_spec(
+            n_areas=8, n_per_area=32, k_intra=4, k_inter=4, rate_hz=30.0,
+            area_adjacency=adj)
+        net = build_network(spec, seed=12, size_multiple=8, outgoing=True)
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        ref = make_engine(net, spec, EngineConfig(
+            neuron_model="ignore_and_fire", schedule="conventional"))
+        s0 = ref.init()
+        blocks = []
+        for _ in range(6):
+            s0, b = ref.window(s0)
+            blocks.append(np.asarray(b))
+        ring_ref = np.asarray(s0.ring)
+        assert sum(b.sum() for b in blocks) > 0
+        cells = [("structure_aware", "dense"), ("structure_aware", "routed"),
+                 ("conventional", "dense")]
+        for sched, exch in cells:
+            for shard_tables in (True, False):
+                eng = make_dist_engine(net, spec, mesh, EngineConfig(
+                    neuron_model="ignore_and_fire", schedule=sched,
+                    delivery_backend="event", exchange=exch,
+                    s_max_floor=32, shard_inter_tables=shard_tables))
+                st = eng.init()
+                for w in range(6):
+                    st, blk = eng.window(st)
+                    assert np.array_equal(
+                        np.asarray(blk).astype(bool), blocks[w]
+                    ), (sched, exch, shard_tables, w)
+                assert np.array_equal(np.asarray(st.ring), ring_ref), (
+                    sched, exch, shard_tables, "ring")
+                assert int(st.overflow) == 0, (sched, exch, shard_tables)
+
+        # Forced per-edge spill: identical (nonzero) overflow and identical
+        # surviving spike trains under both table layouts.
+        spec2 = mam_benchmark_spec(n_areas=8, n_per_area=32, k_intra=4,
+                                   k_inter=4, rate_hz=2000.0,
+                                   area_adjacency=adj)
+        net2 = build_network(spec2, seed=12, size_multiple=8, outgoing=True)
+        got = {}
+        for shard_tables in (True, False):
+            eng = make_dist_engine(net2, spec2, mesh, EngineConfig(
+                neuron_model="ignore_and_fire", schedule="structure_aware",
+                exchange="routed", delivery_backend="event",
+                s_max_headroom=0.0, s_max_floor=1,
+                shard_inter_tables=shard_tables))
+            st = eng.init()
+            for _ in range(5):
+                st, _ = eng.window(st)
+            got[shard_tables] = (int(st.overflow),
+                                 np.asarray(st.spike_count),
+                                 np.asarray(st.ring))
+        over_sh, spikes_sh, ring_sh = got[True]
+        over_rep, spikes_rep, ring_rep = got[False]
+        assert over_sh > 0, "forced spill must be visible"
+        assert over_sh == over_rep, (over_sh, over_rep)
+        assert np.array_equal(spikes_sh, spikes_rep)
+        assert np.array_equal(ring_sh, ring_rep)
+        print("OK")
+    """))
+
+
+def test_shard_inter_tables_partitions_the_replicated_table():
+    """Host-only: every replicated inter synapse lands in exactly one shard
+    (union over shards == the replicated table, per source row), each
+    shard's targets belong to it, and the network_sds width bound covers
+    the instantiated per-shard width for both slicing modes."""
+    from repro.core.areas import mam_benchmark_spec
+    from repro.core.connectivity import (
+        _inbound_k_bound, build_network, shard_inter_tables)
+
+    spec = mam_benchmark_spec(n_areas=8, n_per_area=32, k_intra=4, k_inter=6)
+    net = build_network(spec, seed=12, size_multiple=8, outgoing=True)
+    A, n_pad = net.alive.shape
+    n_rows = A * n_pad
+    tgt = np.asarray(net.tgt_inter).reshape(n_rows, -1)
+    w = np.asarray(net.wout_inter).reshape(n_rows, -1)
+    d = np.asarray(net.dout_inter).reshape(n_rows, -1)
+    for mode, S in (("group", 4), ("window", 4)):
+        sh = shard_inter_tables(net, S, mode=mode)
+        assert sh.tgt_inter is None and sh.inter_shard_mode == mode
+        t_in = np.asarray(sh.tgt_inter_in)
+        w_in = np.asarray(sh.wout_inter_in)
+        d_in = np.asarray(sh.dout_inter_in)
+        assert t_in.shape[:2] == (S, n_rows)
+        assert _inbound_k_bound(spec.k_inter, S) >= t_in.shape[2]
+        for s in range(S):
+            ts = t_in[s][t_in[s] >= 0]
+            owner = ((ts // n_pad) // (A // S) if mode == "group"
+                     else (ts % n_pad) // (n_pad // S))
+            assert (owner == s).all(), (mode, s)
+        for r in range(0, n_rows, 29):
+            rep = sorted(
+                (int(t), float(wv), int(dv))
+                for t, wv, dv in zip(tgt[r], w[r], d[r]) if t >= 0)
+            shd = sorted(
+                (int(t_in[s, r, j]), float(w_in[s, r, j]),
+                 int(d_in[s, r, j]))
+                for s in range(S) for j in range(t_in.shape[2])
+                if t_in[s, r, j] >= 0)
+            assert rep == shd, (mode, r)
+    with pytest.raises(ValueError, match="divisible"):
+        shard_inter_tables(net, 3, mode="group")
+    # Built from the *incoming* tensors: a network without the replicated
+    # outgoing tables yields the identical inbound slices -- production
+    # builds never need to materialise the replicated layout at all.
+    lean = shard_inter_tables(
+        build_network(spec, seed=12, size_multiple=8), 4)
+    full = shard_inter_tables(net, 4)
+    assert np.array_equal(np.asarray(lean.tgt_inter_in),
+                          np.asarray(full.tgt_inter_in))
+    assert np.array_equal(np.asarray(lean.wout_inter_in),
+                          np.asarray(full.wout_inter_in))
+    assert np.array_equal(np.asarray(lean.dout_inter_in),
+                          np.asarray(full.dout_inter_in))
+
+
+def test_sharded_tables_mesh_mismatch_rejected():
+    """A network whose prebuilt inbound tables do not match the mesh's
+    shard grid (wrong count or wrong slicing mode) must be rejected at
+    assembly, not silently misdelivered."""
+    import jax
+
+    from repro.core.areas import mam_benchmark_spec
+    from repro.core.connectivity import build_network, shard_inter_tables
+    from repro.core.dist_engine import make_dist_engine
+    from repro.core.engine import EngineConfig
+
+    spec = mam_benchmark_spec(n_areas=4, n_per_area=32, k_intra=4, k_inter=4)
+    net = build_network(spec, seed=12, size_multiple=8, outgoing=True)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = EngineConfig(neuron_model="ignore_and_fire",
+                       schedule="structure_aware", delivery_backend="event")
+    with pytest.raises(ValueError, match="do not match the"):
+        make_dist_engine(shard_inter_tables(net, 2), spec, mesh, cfg)
+    with pytest.raises(ValueError, match="do not match the"):
+        make_dist_engine(
+            shard_inter_tables(net, 1, mode="window"), spec, mesh, cfg)
+
+
+def test_build_routing_hierarchical_round_order():
+    """Satellite: with ``intra_tier`` set (groups per pod on the (pod, data)
+    group grid), rotation rounds are ordered group-local -> all-intra-pod ->
+    pod-crossing, so most rounds stay on the fast tier; without it the flat
+    offset order is preserved."""
+    from repro.core import exchange as exchange_lib
+
+    full = ~np.eye(8, dtype=bool)
+    # 8 groups in 2 pods of 4: offsets 1-3 can stay intra-pod only for some
+    # source groups, so with a full graph every nonzero offset crosses a pod
+    # boundary somewhere -- use a block-diagonal graph to create genuinely
+    # intra-pod offsets.
+    intra = np.zeros((8, 8), dtype=bool)
+    intra[:4, :4] = ~np.eye(4, dtype=bool)   # pod 0 areas talk to pod 0
+    intra[4:, 4:] = ~np.eye(4, dtype=bool)
+    intra[0, 4] = True                       # one slow-tier edge
+    rt = exchange_lib.build_routing(
+        intra, 8, exp_area_spikes=1.0, headroom=8.0, floor=2, intra_tier=4)
+
+    def tier(rnd):
+        if rnd.offset == 0:
+            return 0
+        return 1 if all(g // 4 == h // 4 for g, h in rnd.pairs) else 2
+
+    tiers = [tier(r) for r in rt.rounds]
+    assert tiers == sorted(tiers), [(r.offset, t) for r, t in
+                                    zip(rt.rounds, tiers)]
+    assert 1 in tiers and 2 in tiers, tiers
+    # Within a tier the offsets stay ascending (stable order).
+    for want in (1, 2):
+        offs = [r.offset for r, t in zip(rt.rounds, tiers) if t == want]
+        assert offs == sorted(offs)
+    # Flat order without the tier hint (the single-pod mesh).
+    rt_flat = exchange_lib.build_routing(
+        full, 8, exp_area_spikes=1.0, headroom=8.0, floor=2)
+    assert [r.offset for r in rt_flat.rounds] == sorted(
+        r.offset for r in rt_flat.rounds)
+    # The ordering must not change what ships: same offsets, same bounds.
+    rt_h = exchange_lib.build_routing(
+        full, 8, exp_area_spikes=1.0, headroom=8.0, floor=2, intra_tier=4)
+    assert ({(r.offset, r.pairs, r.s_max) for r in rt_h.rounds}
+            == {(r.offset, r.pairs, r.s_max) for r in rt_flat.rounds})
+
+
 def test_routed_single_group_mesh_runs_inprocess():
     """A 1x1 mesh degenerates routing to the group-local round (offset 0, no
     ppermute) -- the full packet/compaction/scatter path on one device,
@@ -174,7 +374,8 @@ def test_routed_single_group_mesh_runs_inprocess():
 
 def test_routed_validation():
     """Config- and build-time guards: routed needs the structure-aware
-    schedule and outgoing tables."""
+    schedule, and -- only when the sharded inbound tables are disabled --
+    the replicated outgoing tables."""
     import jax
 
     from repro.core.areas import mam_benchmark_spec
@@ -189,8 +390,14 @@ def test_routed_validation():
     spec = mam_benchmark_spec(n_areas=4, n_per_area=32, k_intra=4, k_inter=4)
     net = build_network(spec, seed=12, size_multiple=8)  # no outgoing tables
     mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # The legacy replicated receive path cannot exist without the outgoing
+    # build; the default sharded path builds its inbound slices straight
+    # from the incoming tensors, so outgoing=True is no longer required.
     with pytest.raises(ValueError, match="outgoing"):
-        make_dist_engine(net, spec, mesh, EngineConfig(exchange="routed"))
+        make_dist_engine(net, spec, mesh, EngineConfig(
+            exchange="routed", shard_inter_tables=False))
+    eng = make_dist_engine(net, spec, mesh, EngineConfig(exchange="routed"))
+    assert eng.wire_bytes["exchange"] == "routed"
     with pytest.raises(ValueError, match="mesh"):
         make_engine(net, spec, EngineConfig(exchange="dense"))
 
@@ -285,6 +492,20 @@ def test_network_sds_outgoing_mirrors_build():
         # The SDS width is a deterministic *bound* on the data-dependent one.
         assert leaf.shape[2] >= ref.shape[2], name
     assert network_sds(spec, outgoing=False).tgt_intra is None
+    # The sharded variant (the dry-run's default since the sharded-table
+    # PR): inbound [S, A*n_pad, K_in] stand-ins whose width bounds the
+    # instantiated per-shard width, replicated inter tables dropped.
+    from repro.core.connectivity import shard_inter_tables
+
+    sds_sh = network_sds(spec, size_multiple=8, outgoing=True,
+                         inter_shards=2)
+    real_sh = shard_inter_tables(real, 2, mode="group")
+    assert sds_sh.tgt_inter is None and sds_sh.inter_shard_mode == "group"
+    for name in ("tgt_inter_in", "wout_inter_in", "dout_inter_in"):
+        leaf, ref = getattr(sds_sh, name), getattr(real_sh, name)
+        assert leaf.dtype == ref.dtype, name
+        assert leaf.shape[:2] == ref.shape[:2], name
+        assert leaf.shape[2] >= ref.shape[2], name
     # The stand-in must lower the event window through shard_map like the
     # dry-run does (1x1 mesh here; dryrun.py forces the production meshes).
     from jax.sharding import NamedSharding
@@ -296,6 +517,7 @@ def test_network_sds_outgoing_mirrors_build():
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     cfg = EngineConfig(neuron_model="lif", schedule="structure_aware",
                        delivery_backend="event", exchange="routed")
+    sds = network_sds(spec, size_multiple=8, outgoing=True, inter_shards=1)
     eng = make_dist_engine(sds, spec, mesh, cfg)
     A, n_pad = sds.alive.shape
     s = jax.ShapeDtypeStruct

@@ -58,23 +58,16 @@ def test_deposit_variants_equivalent(small_spec, small_net):
         assert np.array_equal(np.asarray(blk_a), np.asarray(blk_b))
 
 
-def test_legacy_delivery_knobs_deprecated_but_resolved():
-    """The pre-dispatch knobs warn and still resolve through the single
-    resolution point (EngineConfig.backend), so old configs keep meaning
-    the same thing while they migrate."""
-    with pytest.warns(DeprecationWarning):
-        assert EngineConfig(deposit_onehot=True).backend == "onehot"
-    with pytest.warns(DeprecationWarning):
-        assert EngineConfig(deposit_onehot=False).backend == "scatter"
-    with pytest.warns(DeprecationWarning):
-        assert EngineConfig(delivery="event").backend == "event"
-    with pytest.warns(DeprecationWarning):
-        assert EngineConfig(delivery="dense").backend == "onehot"
-    # delivery_backend wins over the legacy knobs; defaults stay silent.
-    with pytest.warns(DeprecationWarning):
-        assert EngineConfig(delivery="event",
-                            delivery_backend="pallas").backend == "pallas"
+def test_legacy_delivery_knobs_removed():
+    """The deprecated pre-dispatch knobs (deposit_onehot / delivery,
+    deprecated in the exchange-layer PR, removed in the sharded-table PR)
+    are gone: delivery_backend is the single dispatch point."""
+    with pytest.raises(TypeError):
+        EngineConfig(deposit_onehot=True)
+    with pytest.raises(TypeError):
+        EngineConfig(delivery="event")
     assert EngineConfig().backend == "onehot"
+    assert EngineConfig(delivery_backend="event").backend == "event"
 
 
 def test_lif_ground_state_rate(small_spec, small_net):
