@@ -228,6 +228,123 @@ def bench_wire_volume(name, spec, net, results: list):
     return out
 
 
+def bench_adaptive_wire(name, spec, net, results, *, n_groups=None, gsz=2):
+    """Static vs adaptive two-phase wire bytes per window (dense + routed).
+
+    The adaptive tentpole's byte claim: phase 1 ships a tiny count
+    collective, phase 2 payloads sized by the expectation rung of the
+    bucket ladder instead of the static ``headroom x expectation`` bound
+    (``exchange.adaptive_wire_bytes``, the same model the engines' runtime
+    ``SimState.shipped_bytes`` constants mirror). Each row also prices the
+    two-phase exchange with ``cost_model.exchange_time_s`` (alpha + bytes/
+    beta per phase) so latency stays honest: the counts phase costs one
+    extra dispatch. On the sparse routed config the adaptive payload must
+    be measurably smaller than the static bound (asserted).
+    """
+    from repro.core import cost_model
+    from repro.core import exchange as exchange_lib
+    from repro.core.connectivity import area_adjacency
+
+    A = spec.n_areas
+    if n_groups is None:
+        n_groups = A if A <= 8 else 8
+    n_dev = n_groups * gsz
+    adj = area_adjacency(net, spec)
+    rep = exchange_lib.wire_report(
+        net, adj, backend="event", n_groups=n_groups, gsz=gsz,
+        headroom=8.0, floor=4)
+    print(f"\n-- {name} / adaptive two-phase wire (bytes/window, "
+          f"mesh-total, {n_groups} groups x {gsz} subgroup, event) --")
+    print(f"{'exchange':10s} {'static':>12s} {'counts':>10s} "
+          f"{'payload(exp)':>12s} {'worst':>12s} {'saved':>12s}")
+    for exch in ("dense", "routed"):
+        ad = rep[exch]["adaptive"]
+        static = rep[exch]["total_bytes"]
+        print(f"{exch:10s} {static:12,d} {ad['counts_bytes']:10,d} "
+              f"{ad['payload_bytes_expected']:12,d} "
+              f"{ad['payload_bytes_worst']:12,d} {ad['saved_bytes']:12,d}")
+        results.append(dict(
+            config=name, phase="adaptive", backend="event", exchange=exch,
+            static_bytes=static,
+            counts_bytes=ad["counts_bytes"],
+            payload_bytes_expected=ad["payload_bytes_expected"],
+            total_bytes_expected=ad["total_bytes_expected"],
+            payload_bytes_worst=ad["payload_bytes_worst"],
+            saved_bytes=ad["saved_bytes"],
+            buckets=ad["buckets"],
+            n_groups=n_groups, gsz=gsz, n_areas=A,
+            delay_ratio=net.delay_ratio,
+            static_time_s=cost_model.exchange_time_s(
+                0, static, n_dev, cost_model.SUPERMUC_MPI),
+            two_phase_time_s=cost_model.exchange_time_s(
+                ad["counts_bytes"], ad["payload_bytes_expected"], n_dev,
+                cost_model.SUPERMUC_MPI),
+        ))
+    if name.endswith("_sparse"):
+        ad = rep["routed"]["adaptive"]
+        assert (ad["total_bytes_expected"]
+                < rep["routed"]["total_bytes"]), (
+            "adaptive exchange must ship measurably fewer bytes than the "
+            "static bound on the sparse routed config")
+        assert ad["saved_bytes"] > 0, ad
+    return rep
+
+
+def bench_adaptive_wire_production(results):
+    """Production-scale (MAM x1, 16x16 mesh) adaptive wire bytes from the
+    dry-run's deterministic ShapeDtypeStruct bounds -- no allocation.
+
+    At production scale the static event packets carry the full 8x
+    headroom; the expectation-sized adaptive buckets drop most of it, and
+    the phase-1 count bytes are noise next to the payload. Asserted so a
+    ladder/accounting change can never silently lose the saving.
+    """
+    from repro.core import delivery
+    from repro.core import exchange as exchange_lib
+    from repro.core.areas import mam_spec
+    from repro.core.connectivity import area_adjacency, network_sds
+
+    spec = mam_spec(scale=1.0)
+    n_groups, gsz = 16, 16
+    sds = network_sds(spec, size_multiple=16, outgoing=True)
+    adj = area_adjacency(sds, spec)
+    routing = exchange_lib.build_routing(
+        adj, n_groups,
+        exp_area_spikes=delivery.expected_area_spikes(sds),
+        headroom=8.0, floor=16)
+    static = exchange_lib.dense_wire_bytes(
+        sds, backend="event", schedule="structure_aware",
+        n_groups=n_groups, gsz=gsz)
+    rows = {
+        "dense": exchange_lib.adaptive_wire_bytes(
+            sds, backend="event", n_groups=n_groups, gsz=gsz),
+        "routed": exchange_lib.adaptive_wire_bytes(
+            sds, backend="event", n_groups=n_groups, gsz=gsz,
+            routing=routing),
+    }
+    print(f"\n-- mam_x1 production / adaptive two-phase wire "
+          f"({n_groups} groups x {gsz} subgroup, SDS bounds) --")
+    for exch, ad in rows.items():
+        print(f"{exch:10s} static {ad['static_total_bytes'] / 2**20:8.1f} "
+              f"MiB/window -> adaptive {ad['total_bytes_expected'] / 2**20:8.1f} "
+              f"MiB/window (counts {ad['counts_bytes'] / 2**10:.1f} KiB, "
+              f"saved {ad['saved_bytes'] / 2**20:.1f} MiB)")
+        assert ad["total_bytes_expected"] < ad["static_total_bytes"], (
+            f"adaptive must beat the static bound at production scale "
+            f"({exch})")
+        results.append(dict(
+            config="mam_x1_16x16", phase="adaptive", backend="event",
+            exchange=exch,
+            static_bytes=ad["static_total_bytes"],
+            counts_bytes=ad["counts_bytes"],
+            payload_bytes_expected=ad["payload_bytes_expected"],
+            total_bytes_expected=ad["total_bytes_expected"],
+            payload_bytes_worst=ad["payload_bytes_worst"],
+            saved_bytes=ad["saved_bytes"],
+            n_groups=n_groups, gsz=gsz, sds_bounds=True,
+        ))
+
+
 def bench_table_bytes(name, spec, net, results, *, n_groups=None, gsz=2):
     """Per-device inter receive-table bytes, replicated vs sharded.
 
@@ -343,6 +460,12 @@ _STATIC_GUARDED = {
     "wire": ("local_bytes", "global_bytes", "total_bytes"),
     "table": ("table_bytes_per_device_sharded",
               "table_bytes_per_device_replicated"),
+    # Adaptive two-phase rows: count-collective overhead, expectation-
+    # window total, and the hard-cap worst case are all pure shape
+    # arithmetic -- any increase vs the recorded baseline is a regression
+    # of the adaptive path's byte model, never noise.
+    "adaptive": ("counts_bytes", "total_bytes_expected",
+                 "payload_bytes_worst"),
 }
 
 
@@ -450,8 +573,10 @@ def main(argv=None) -> None:
             bench_deliver_phase(name, spec, net, spikes, args.cycles, results)
             bench_engine(name, spec, net, args.windows, results)
         bench_wire_volume(name, spec, net, results)
+        bench_adaptive_wire(name, spec, net, results)
         bench_table_bytes(name, spec, net, results)
     bench_table_bytes_production(results)
+    bench_adaptive_wire_production(results)
 
     payload = dict(
         benchmark="delivery_backends",
@@ -486,6 +611,13 @@ def main(argv=None) -> None:
     rt = wire[("quickstart_sparse", "event", "routed")]["global_bytes"]
     print(f"quickstart_sparse routed vs dense global wire: "
           f"{rt:,} vs {dn:,} B/window ({dn / rt:.2f}x fewer)")
+    adapt = {(r["config"], r["exchange"]): r for r in results
+             if r["phase"] == "adaptive"}
+    a = adapt[("quickstart_sparse", "routed")]
+    print(f"quickstart_sparse routed adaptive vs static: "
+          f"{a['total_bytes_expected']:,} vs {a['static_bytes']:,} B/window "
+          f"({a['static_bytes'] / a['total_bytes_expected']:.2f}x fewer, "
+          f"incl. {a['counts_bytes']:,} B phase-1 counts)")
 
 
 if __name__ == "__main__":

@@ -41,6 +41,9 @@ __all__ = [
     "gather_area",
     "gather_global",
     "exchange_bytes",
+    "count_max",
+    "gather_counts",
+    "count_wire_bytes",
 ]
 
 
@@ -161,3 +164,55 @@ def exchange_bytes(
     for s in shape_local:
         n_elems *= s
     return n_elems * (n_gather_devices - 1) * dtype_bytes
+
+
+# ---------------------------------------------------------------------------
+# Phase-1 count collectives (the adaptive two-phase exchange's tiny wire)
+# ---------------------------------------------------------------------------
+
+
+def count_max(count: jax.Array, axes) -> jax.Array:
+    """Mesh-maximum of a (scalar or small) int32 spike count.
+
+    Phase 1 of the adaptive two-phase exchange (cf. Du et al., "A
+    Low-latency Communication Design for Brain Simulations": exchange sizes
+    first, then right-sized payloads): every device learns the *largest*
+    per-cycle packet need before any payload ships, so all devices select
+    the same bucket rung -- the SPMD branch-uniformity requirement of
+    ``ops.ladder_switch``. The collective is a pmax over ``axes``; its wire
+    cost (4 B per participant) is priced by :func:`count_wire_bytes`.
+    """
+    return jax.lax.pmax(count, axes)
+
+
+def gather_counts(
+    counts_local: jax.Array,   # [D, A_loc] int32 partial per-area counts
+    *,
+    area_axes: Sequence[str] = ("pod", "data"),
+    subgroup_axis: str = "model",
+) -> jax.Array:
+    """Assemble the global ``[D, A]`` per-area spike-count table.
+
+    The routed exchange's phase 1: each device's partial per-area counts are
+    completed over the intra-area subgroup (psum) and concatenated over the
+    area axes (innermost-first, so global area order matches
+    :func:`gather_global` and the group layout). From the full table every
+    device computes -- identically -- the *exact* per-edge packet need of
+    every rotation round, so per-round buckets are both overflow-free and
+    branch-uniform. At int32 this is ``D * A`` words: negligible next to
+    even one static id packet.
+    """
+    c = jax.lax.psum(counts_local, subgroup_axis)
+    for ax in reversed(tuple(area_axes)):
+        c = jax.lax.all_gather(c, ax, axis=1, tiled=True)
+    return c
+
+
+def count_wire_bytes(n_words: int, n_devices: int) -> int:
+    """Mesh-total bytes of one phase-1 count collective.
+
+    ``n_words`` int32 words received per device (1 for :func:`count_max`,
+    ``D * A`` for :func:`gather_counts`), modelled like the payload
+    accounting: every device receives the full result once.
+    """
+    return n_devices * n_words * 4

@@ -37,6 +37,7 @@ __all__ = [
     "WorkloadModel",
     "PhaseBreakdown",
     "receive_time_s",
+    "exchange_time_s",
     "simulate_rtf",
 ]
 
@@ -217,6 +218,32 @@ def receive_time_s(syn_touches: float, hw: MachineModel) -> float:
     comparable with the phase breakdowns.
     """
     return syn_touches * hw.c_syn_seq_ns * 1e-9 / hw.t_m
+
+
+def exchange_time_s(
+    counts_bytes: float,
+    payload_bytes: float,
+    m: int,
+    mpi: CollectiveModel = SUPERMUC_MPI,
+) -> float:
+    """Wall seconds of one adaptive two-phase exchange.
+
+    Two dependent collective calls: phase 1 moves the tiny count packet
+    (latency-dominated -- ``alpha(M)`` plus a few int32 words), phase 2 the
+    right-sized payload. The two phases cannot overlap (the payload size is
+    a function of the counts), so the times add: the adaptive exchange buys
+    its byte savings at the price of one extra ``alpha(M)`` dispatch per
+    window -- worth it exactly when ``saved_bytes / beta > alpha(M)``,
+    which at brain-scale static bounds (8x-expectation headroom) it is (cf.
+    Du et al. 2022: count-first exchanges amortize at scale). Byte inputs
+    come from ``exchange.adaptive_wire_bytes`` (modelled) or
+    ``SimState.shipped_bytes`` (measured); pass ``counts_bytes=0`` to price
+    the static single-phase exchange with the same constants.
+    """
+    t = mpi.call_time_s(m, payload_bytes)
+    if counts_bytes > 0:
+        t += mpi.call_time_s(m, counts_bytes)
+    return t
 
 
 def simulate_rtf(

@@ -62,6 +62,8 @@ __all__ = [
     "BACKENDS",
     "expected_area_spikes",
     "event_bounds",
+    "bucket_ladder",
+    "expected_bucket",
     "deliver_intra",
     "deliver_inter",
     "deliver_inter_block",
@@ -113,6 +115,49 @@ def event_bounds(
     s_max_area = int(headroom * exp_area) + max(floor, 1)
     s_max_all = int(headroom * exp_area * a) + 4 * max(floor, 1)
     return s_max_area, s_max_all
+
+
+def bucket_ladder(floor: int, cap: int) -> tuple[int, ...]:
+    """The adaptive exchange's pre-compiled packet-size ladder.
+
+    Powers-of-two rungs ``floor, 2*floor, 4*floor, ...`` topped by ``cap``
+    exactly -- ``cap`` is the *hard* population bound (every neuron in scope
+    fires once per cycle; refractoriness forbids more), so a packet sized by
+    the top rung can never drop a spike. The adaptive two-phase exchange
+    compiles one branch per rung (:func:`repro.kernels.ops.ladder_switch`)
+    and phase-1 counts choose the smallest rung that covers the window
+    (:func:`repro.kernels.ops.bucket_index`) -- quiet windows ship
+    ``floor``-sized packets, the worst case ships ``cap``, and
+    ``SimState.overflow`` is provably zero in between. Contrast
+    :func:`event_bounds`, the *static* sizing rule the adaptive mode
+    replaces: its headroom-scaled expectation can sit below a burst, which
+    is exactly the overflow failure mode (cf. NEST's dynamic spike-register
+    resizing, arXiv:2109.11358).
+    """
+    floor = max(int(floor), 1)
+    cap = max(int(cap), floor)
+    rungs = []
+    b = floor
+    while b < cap:
+        rungs.append(b)
+        b *= 2
+    rungs.append(cap)
+    return tuple(rungs)
+
+
+def expected_bucket(ladder: tuple[int, ...], expected_count: float) -> int:
+    """The rung a typical window lands on: smallest rung >= the expectation.
+
+    The *modelled* counterpart of the runtime bucket choice, used by the
+    static wire accounting (``exchange.adaptive_wire_bytes``) to price the
+    payload bytes of an expectation-sized window without running devices --
+    actual runs report measured bytes in ``SimState.shipped_bytes``.
+    """
+    need = int(-(-expected_count // 1)) if expected_count > 0 else 1
+    for b in ladder:
+        if b >= need:
+            return b
+    return ladder[-1]
 
 
 def _deposit(ring, vals, delays, t, *, onehot: bool):

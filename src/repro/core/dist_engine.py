@@ -150,7 +150,7 @@ def state_pspecs(mesh: Mesh, schedule: str, neuron_model: str) -> SimState:
     else:
         nstate = neuron_lib.IafState(countdown=area)
     return SimState(neuron=nstate, ring=ring, t=P(), spike_count=area,
-                    overflow=P())
+                    overflow=P(), shipped_bytes=P())
 
 
 def shard_network(net: Network, mesh: Mesh, schedule: str) -> Network:
@@ -300,6 +300,7 @@ def make_dist_engine(
             t=jnp.int32(0),
             spike_count=jnp.zeros((A, n_pad), jnp.int32),
             overflow=jnp.int32(0),
+            shipped_bytes=jnp.float32(0),
         )
         shardings = jax.tree.map(
             lambda s: NamedSharding(mesh, s), st_specs,

@@ -84,6 +84,18 @@ class EngineConfig:
     # overruns are counted in SimState.overflow.
     s_max_headroom: float = 8.0
     s_max_floor: int = 16
+    # Adaptive two-phase exchange (repro.core.exchange): phase 1 moves a
+    # tiny int32 count collective, phase 2 ships packets sized by the
+    # smallest power-of-two bucket (>= s_max_floor, pre-compiled ladder) that
+    # covers the counted need -- quiet windows ship floor-sized packets, and
+    # because the ladder tops out at the hard population cap, a packet can
+    # NEVER drop a spike: SimState.overflow is provably 0 and the static
+    # s_max_headroom bound becomes irrelevant. Applies wherever id packets
+    # exist (event-backend packets on every exchange, the routed global
+    # pathway under any backend; the dense bit-packed pathways have nothing
+    # to size and are unaffected). Trajectories are bit-identical to the
+    # static path whenever the static path itself reports overflow == 0.
+    adaptive_exchange: bool = False
     # Fuse the structure-aware window into one D-cycle superstep: blocked
     # ring read/clear (one [.., D] slice per window instead of D dynamic
     # slot updates), D unrolled cycles with window-static slot indices, and a
@@ -343,6 +355,7 @@ def make_engine(
             t=jnp.int32(0),
             spike_count=jnp.zeros((A, n_pad), jnp.int32),
             overflow=jnp.int32(0),
+            shipped_bytes=jnp.float32(0),
         )
 
     @functools.partial(jax.jit, static_argnums=1)

@@ -9,8 +9,12 @@ The shared window core (:mod:`repro.core.schedule`) is parameterized by an
 * ``window_end(ring, block, t0, net, gids, blocked=...)`` -- the
   structure-aware schedule's lumped window-end long-range pathway.
 
-Both return ``(ring', overflow_delta)``; overflow is the count of spikes a
-fixed-size packet dropped (0 on dense pathways).
+Both return ``(ring', overflow_delta, shipped_bytes_delta)``; overflow is
+the count of spikes a fixed-size packet dropped (0 on dense pathways, and
+*provably* 0 under the adaptive two-phase exchange below); shipped bytes is
+the mesh-total wire volume the hook actually moved (f32 scalar), accumulated
+into ``SimState.shipped_bytes`` so runs report measured -- not just
+worst-case -- bytes per window.
 
 Three implementations:
 
@@ -42,12 +46,36 @@ All exchanges are bit-identical: delivery weights live on the exact 1/256
 grid, so neither packet order nor scatter order can change a ULP, and the
 routed edge filter is exactly the set of edges with at least one synapse.
 
+**Adaptive two-phase exchange** (``EngineConfig.adaptive_exchange``): every
+fixed-size id packet above is statically sized from a rate expectation
+(``delivery.event_bounds`` / per-edge ``RouteRound.s_max``), so quiet
+windows waste wire bytes and loud windows silently drop spikes into
+``SimState.overflow`` -- the failure mode NEST's spike register resizes
+itself to avoid (Pronold et al. 2021). Adaptive mode replaces the static
+bound with two phases:
+
+1. **counts** -- a tiny int32 collective (``comm.count_max`` /
+   ``comm.gather_counts``) tells every device the window's true maximum
+   packet need *before* any payload ships;
+2. **payload** -- the packet is sized by the smallest rung of a
+   pre-compiled power-of-two bucket ladder (``delivery.bucket_ladder``,
+   dispatched via ``ops.ladder_switch`` so jit never retraces on
+   data-dependent shapes) that covers the counted need. The top rung is the
+   hard population cap (every neuron in scope fires once per cycle), so no
+   reachable count can exceed it: ``SimState.overflow`` is provably zero.
+
+Trajectories are bit-identical to the static path whenever the static path
+itself drops nothing (same compaction order, padding scatters +0.0).
+
 Wire-byte accounting: every exchange reports ``wire_bytes(net)`` -- static
 mesh-total bytes received per window, split by pathway -- feeding
 ``launch/simulate.py --profile``, ``benchmarks/bench_delivery.py`` and the
 :mod:`repro.core.cost_model` communication term. :func:`wire_report`
 computes the dense-vs-routed comparison for a hypothetical mesh shape
-without constructing devices.
+without constructing devices; each entry now carries **both** the static
+worst case and the adaptive two-phase model (phase-1 count bytes +
+expectation-sized payload, :func:`adaptive_wire_bytes`), and live runs
+accumulate the *measured* bytes in ``SimState.shipped_bytes``.
 """
 
 from __future__ import annotations
@@ -73,6 +101,7 @@ __all__ = [
     "RoutedExchange",
     "Routing",
     "build_routing",
+    "adaptive_wire_bytes",
     "inter_table_report",
     "priced_inter_table_report",
     "wire_report",
@@ -199,9 +228,18 @@ def build_routing(
 
 
 class Exchange:
-    """Interface + shared bookkeeping; see the module docstring."""
+    """Interface + shared bookkeeping; see the module docstring.
+
+    Both hooks return ``(ring', overflow_delta, shipped_bytes_delta)``:
+    overflow counts spikes a fixed-size packet dropped (always 0 under the
+    adaptive two-phase exchange), shipped bytes is the mesh-total wire
+    volume the hook moved this call (f32 scalar; 0 on the single-host
+    identity), accumulated by the shared window core into
+    ``SimState.shipped_bytes``.
+    """
 
     name = "abstract"
+    adaptive = False
 
     def cycle(self, ring, spikes, t, net, gids, *, inter_now: bool):
         raise NotImplementedError
@@ -225,12 +263,21 @@ class LocalExchange(Exchange):
 
     def __init__(self, net: Network, cfg):
         self.backend = cfg.backend
+        self.adaptive = cfg.adaptive_exchange
         self.s_max_area, self.s_max_all = delivery_lib.event_bounds(
             net, headroom=cfg.s_max_headroom, floor=cfg.s_max_floor)
+        # Adaptive bucket ladders: no wire on a single host, but the event
+        # path's packet bound still caps the scatter -- the ladder sizes it
+        # to the cycle's true count instead, with the hard population cap
+        # (every neuron fires) on top, so overflow is impossible.
+        a, n_pad = net.alive.shape
+        self.ladder_area = delivery_lib.bucket_ladder(cfg.s_max_floor, n_pad)
+        self.ladder_all = delivery_lib.bucket_ladder(
+            cfg.s_max_floor, a * n_pad)
 
     def _overflow(self, spikes, net, inter_now: bool):
         """Spikes dropped by the event path's static packet bounds."""
-        if self.backend != "event":
+        if self.backend != "event" or self.adaptive:
             return jnp.int32(0)
         per_area = spikes.sum(axis=-1, dtype=jnp.int32)   # [A]
         over = jnp.int32(0)
@@ -243,21 +290,47 @@ class LocalExchange(Exchange):
     def cycle(self, ring, spikes, t, net, gids, *, inter_now: bool):
         del gids
         sf = spikes.astype(jnp.float32)
+        if self.backend == "event" and self.adaptive:
+            per_area = spikes.sum(axis=-1, dtype=jnp.int32)
+            ring = kops.ladder_switch(
+                self.ladder_area, per_area.max(),
+                lambda b, r: delivery_lib.deliver_intra(
+                    r, sf, net, t, backend=self.backend, s_max=b),
+                ring)
+            if inter_now:
+                ring = kops.ladder_switch(
+                    self.ladder_all, per_area.sum(),
+                    lambda b, r: delivery_lib.deliver_inter(
+                        r, sf.reshape(-1), net, t,
+                        backend=self.backend, s_max=b),
+                    ring)
+            return ring, jnp.int32(0), jnp.float32(0)
         ring = delivery_lib.deliver_intra(
             ring, sf, net, t, backend=self.backend, s_max=self.s_max_area)
         if inter_now:
             ring = delivery_lib.deliver_inter(
                 ring, sf.reshape(-1), net, t,
                 backend=self.backend, s_max=self.s_max_all)
-        return ring, self._overflow(spikes, net, inter_now)
+        return ring, self._overflow(spikes, net, inter_now), jnp.float32(0)
 
     def window_end(self, ring, block, t0, net, gids, *, blocked: bool):
         del gids
+        zero = jnp.float32(0)
         if net.k_inter == 0:
-            return ring, jnp.int32(0)
+            return ring, jnp.int32(0), zero
         d_win = block.shape[0]
         flat = block.reshape(d_win, -1).astype(jnp.float32)
+        adaptive = self.backend == "event" and self.adaptive
         if blocked:
+            if adaptive:
+                counts = block.reshape(d_win, -1).sum(
+                    axis=-1, dtype=jnp.int32)
+                ring = kops.ladder_switch(
+                    self.ladder_all, counts.max(),
+                    lambda b, r: delivery_lib.deliver_inter_block(
+                        r, flat, net, t0, backend=self.backend, s_max=b),
+                    ring)
+                return ring, jnp.int32(0), zero
             ring = delivery_lib.deliver_inter_block(
                 ring, flat, net, t0, backend=self.backend,
                 s_max=self.s_max_all)
@@ -266,25 +339,33 @@ class LocalExchange(Exchange):
                 counts = block.reshape(d_win, -1).sum(
                     axis=-1, dtype=jnp.int32)
                 over = jnp.maximum(counts - self.s_max_all, 0).sum()
-            return ring, over
+            return ring, over, zero
 
-        def deliver_s(s, carry):
-            ring, over = carry
-            ring = delivery_lib.deliver_inter(
-                ring, flat[s], net, t0 + s,
-                backend=self.backend, s_max=self.s_max_all)
-            if self.backend == "event":
-                over = over + jnp.maximum(
-                    block[s].sum(dtype=jnp.int32) - self.s_max_all, 0)
-            return ring, over
+        def window_loop(s_max, ring):
+            def deliver_s(s, carry):
+                ring, over = carry
+                ring = delivery_lib.deliver_inter(
+                    ring, flat[s], net, t0 + s,
+                    backend=self.backend, s_max=s_max)
+                if self.backend == "event" and not adaptive:
+                    over = over + jnp.maximum(
+                        block[s].sum(dtype=jnp.int32) - s_max, 0)
+                return ring, over
 
-        ring, over = jax.lax.fori_loop(
-            0, d_win, deliver_s, (ring, jnp.int32(0)))
-        return ring, over
+            return jax.lax.fori_loop(
+                0, d_win, deliver_s, (ring, jnp.int32(0)))
+
+        if adaptive:
+            counts = block.reshape(d_win, -1).sum(axis=-1, dtype=jnp.int32)
+            ring, over = kops.ladder_switch(
+                self.ladder_all, counts.max(), window_loop, ring)
+        else:
+            ring, over = window_loop(self.s_max_all, ring)
+        return ring, over, zero
 
     def wire_bytes(self, net: Network) -> dict:
         return dict(exchange=self.name, local_bytes=0, global_bytes=0,
-                    total_bytes=0)
+                    total_bytes=0, adaptive=self.adaptive)
 
 
 class DenseMeshExchange(Exchange):
@@ -312,6 +393,7 @@ class DenseMeshExchange(Exchange):
         self.n_groups = self.n_dev // self.gsz
         self.headroom = cfg.s_max_headroom
         self.floor = cfg.s_max_floor
+        self.adaptive = cfg.adaptive_exchange
         # Static event-packet bounds: per-device shares of the single-host
         # bounds, floored so tiny shards keep headroom. _mesh_bounds is the
         # single source of truth, shared with the static wire accounting so
@@ -322,6 +404,37 @@ class DenseMeshExchange(Exchange):
                 headroom=cfg.s_max_headroom, floor=cfg.s_max_floor)
         else:
             self.s_max_loc = self.s_max_dev = 0
+        # Adaptive bucket ladders: capped by the hard population bound of
+        # each packet's scope (a neuron fires at most once per cycle), so
+        # the top rung can never drop a spike. The per-(area, lane) local
+        # packet holds at most this device's n_loc neurons of one area; the
+        # per-device window packet at most its whole shard.
+        A, n_pad = net.alive.shape
+        if self.schedule == CONVENTIONAL:
+            n_loc = n_pad // self.n_dev if n_pad % self.n_dev == 0 else n_pad
+            self.ladder_loc = None
+            self.ladder_dev = delivery_lib.bucket_ladder(
+                cfg.s_max_floor, A * n_loc)
+        else:
+            a_loc, n_loc = A // self.n_groups, n_pad // self.gsz
+            self.ladder_loc = delivery_lib.bucket_ladder(
+                cfg.s_max_floor, n_loc)
+            self.ladder_dev = delivery_lib.bucket_ladder(
+                cfg.s_max_floor, a_loc * n_loc)
+        # Static per-hook shipped-byte constants, derived from the same
+        # accounting the Engine reports (dense_wire_bytes), so measured
+        # bytes == modelled bytes wherever packets are statically sized.
+        wb = dense_wire_bytes(
+            net, backend=self.backend, schedule=self.schedule,
+            n_groups=self.n_groups, gsz=self.gsz,
+            headroom=self.headroom, floor=self.floor)
+        d_win = max(net.delay_ratio, 1)
+        if self.schedule == CONVENTIONAL:
+            self._cycle_wire = wb["global_bytes"] / d_win
+            self._window_wire = 0.0
+        else:
+            self._cycle_wire = wb["local_bytes"] / d_win
+            self._window_wire = float(wb["global_bytes"])
 
     # -- shard-index helpers (valid only inside shard_map) ------------------
 
@@ -380,21 +493,15 @@ class DenseMeshExchange(Exchange):
             return self._cycle_conventional(ring, spikes, t, net, gids)
         assert not inter_now, "structure-aware lumps the global pathway"
         n_loc = spikes.shape[-1]
+        a_loc = spikes.shape[0]
         s8 = spikes.astype(jnp.int8)
         over = jnp.int32(0)
+        shipped = jnp.float32(self._cycle_wire)
         if self.backend == "event" and net.k_intra > 0:
             # Local pathway, sparse wire: compact fired neurons into
             # per-area id packets *before* the subgroup exchange.
             noff = jax.lax.axis_index(self.subgroup) * n_loc
             ids = noff + jnp.arange(n_loc, dtype=jnp.int32)
-            packets, counts = jax.vmap(
-                lambda f: delivery_lib.compact_fired(
-                    f, ids, s_max=self.s_max_loc, invalid=net.n_pad)
-            )(spikes)
-            over = jax.lax.psum(
-                jnp.maximum(counts - self.s_max_loc, 0).sum(), self.all_axes)
-            wire = jax.lax.all_gather(
-                packets, self.subgroup, axis=1, tiled=True)  # [A_loc, gsz*s]
 
             # Scatter straight into this device's neuron window of each
             # area: within-area target -> local row, -1 if not ours.
@@ -403,10 +510,39 @@ class DenseMeshExchange(Exchange):
                 keep = (il >= 0) & (il < n_loc)
                 return jnp.where(keep, il, -1)
 
-            ring = jax.vmap(
-                lambda r, idl, tg, w, d: kops.event_deliver_ids(
-                    r, idl, tg, w, d, t, tgt_map=to_local)
-            )(ring, wire, net.tgt_intra, net.wout_intra, net.dout_intra)
+            def local_pathway(s_max, ring):
+                packets, counts = jax.vmap(
+                    lambda f: delivery_lib.compact_fired(
+                        f, ids, s_max=s_max, invalid=net.n_pad)
+                )(spikes)
+                wire = jax.lax.all_gather(
+                    packets, self.subgroup, axis=1, tiled=True)
+                ring = jax.vmap(
+                    lambda r, idl, tg, w, d: kops.event_deliver_ids(
+                        r, idl, tg, w, d, t, tgt_map=to_local)
+                )(ring, wire, net.tgt_intra, net.wout_intra, net.dout_intra)
+                return ring, counts
+
+            if self.adaptive:
+                # Phase 1: the mesh-max per-(area, lane) count selects one
+                # bucket for every device (branch uniformity); phase 2
+                # ships rung-sized packets. The top rung is n_loc (this
+                # lane's whole neuron window), so nothing can drop.
+                need = comm.count_max(
+                    spikes.sum(axis=-1, dtype=jnp.int32).max(),
+                    self.all_axes)
+                ring, _ = kops.ladder_switch(
+                    self.ladder_loc, need, local_pathway, ring)
+                rung = kops.ladder_rung(self.ladder_loc, need)
+                shipped = (
+                    jnp.float32(self.n_dev * a_loc * (self.gsz - 1)
+                                * _I32_BYTES) * rung.astype(jnp.float32)
+                    + comm.count_wire_bytes(1, self.n_dev))
+            else:
+                ring, counts = local_pathway(self.s_max_loc, ring)
+                over = jax.lax.psum(
+                    jnp.maximum(counts - self.s_max_loc, 0).sum(),
+                    self.all_axes)
         elif self.backend != "event":
             # Local pathway, dense wire: complete this device's areas over
             # the subgroup, then deliver via the shared dispatch.
@@ -414,7 +550,9 @@ class DenseMeshExchange(Exchange):
             ring = delivery_lib.deliver_intra(
                 ring, area_spikes.astype(jnp.float32), net, t,
                 backend=self.backend)
-        return ring, over
+        if net.k_intra == 0:
+            shipped = jnp.float32(0)
+        return ring, over, shipped
 
     def _cycle_conventional(self, ring, spikes, t, net, gids):
         """One mesh-wide exchange feeds both pathways (round-robin layout)."""
@@ -423,13 +561,8 @@ class DenseMeshExchange(Exchange):
         r_len = ring.shape[-1]
         s8 = spikes.astype(jnp.int8)
         over = jnp.int32(0)
+        shipped = jnp.float32(self._cycle_wire)
         if self.backend == "event":
-            packet, count = delivery_lib.compact_fired(
-                spikes, gids, s_max=self.s_max_dev, invalid=A * n_pad)
-            over = jax.lax.psum(
-                jnp.maximum(count - self.s_max_dev, 0), self.all_axes)
-            wire = jax.lax.all_gather(
-                packet, self.all_axes, axis=0, tiled=True)  # [n_dev*s]
             noff = self._axis_offset(self.all_axes, n_loc)
 
             # Both scatters go straight into this device's neuron window
@@ -440,28 +573,53 @@ class DenseMeshExchange(Exchange):
                 keep = (il >= 0) & (il < n_loc)
                 return jnp.where(keep, il, -1)
 
-            if net.k_intra > 0:
-                # Short-range: per-area within-area ids from the list.
-                areas = jnp.arange(A, dtype=jnp.int32)
-                ids_a = jnp.where(
-                    wire[None, :] // n_pad == areas[:, None],
-                    wire[None, :] % n_pad, n_pad)       # [A, S]
-                ring = jax.vmap(
-                    lambda r, idl, tg, w, d: kops.event_deliver_ids(
-                        r, idl, tg, w, d, t, tgt_map=win_local)
-                )(ring, ids_a, net.tgt_intra, net.wout_intra, net.dout_intra)
-            # Long-range: global target id -> (area row, local window).
-            if net.k_inter > 0:
-                tgt_f, w_f, d_f = self._inter_tables(net)
+            def exchange_cycle(s_max, ring):
+                packet, count = delivery_lib.compact_fired(
+                    spikes, gids, s_max=s_max, invalid=A * n_pad)
+                wire = jax.lax.all_gather(
+                    packet, self.all_axes, axis=0, tiled=True)  # [n_dev*s]
+                if net.k_intra > 0:
+                    # Short-range: per-area within-area ids from the list.
+                    areas = jnp.arange(A, dtype=jnp.int32)
+                    ids_a = jnp.where(
+                        wire[None, :] // n_pad == areas[:, None],
+                        wire[None, :] % n_pad, n_pad)       # [A, S]
+                    ring = jax.vmap(
+                        lambda r, idl, tg, w, d: kops.event_deliver_ids(
+                            r, idl, tg, w, d, t, tgt_map=win_local)
+                    )(ring, ids_a, net.tgt_intra, net.wout_intra,
+                      net.dout_intra)
+                # Long-range: global target id -> (area row, local window).
+                if net.k_inter > 0:
+                    tgt_f, w_f, d_f = self._inter_tables(net)
 
-                def glob_local(g):
-                    il = g % n_pad - noff
-                    keep = (il >= 0) & (il < n_loc)
-                    return jnp.where(keep, (g // n_pad) * n_loc + il, -1)
+                    def glob_local(g):
+                        il = g % n_pad - noff
+                        keep = (il >= 0) & (il < n_loc)
+                        return jnp.where(keep, (g // n_pad) * n_loc + il, -1)
 
-                ring = kops.event_deliver_ids(
-                    ring.reshape(A * n_loc, r_len), wire, tgt_f, w_f, d_f,
-                    t, tgt_map=glob_local).reshape(A, n_loc, r_len)
+                    ring = kops.event_deliver_ids(
+                        ring.reshape(A * n_loc, r_len), wire, tgt_f, w_f,
+                        d_f, t, tgt_map=glob_local).reshape(A, n_loc, r_len)
+                return ring, count
+
+            if self.adaptive:
+                # Phase 1: mesh-max fired count this cycle; phase 2: one
+                # rung-sized packet per device. Top rung = the device's
+                # whole shard (A * n_loc), so no count can exceed it.
+                need = comm.count_max(
+                    spikes.sum(dtype=jnp.int32), self.all_axes)
+                ring, _ = kops.ladder_switch(
+                    self.ladder_dev, need, exchange_cycle, ring)
+                rung = kops.ladder_rung(self.ladder_dev, need)
+                shipped = (
+                    jnp.float32(self.n_dev * (self.n_dev - 1) * _I32_BYTES)
+                    * rung.astype(jnp.float32)
+                    + comm.count_wire_bytes(1, self.n_dev))
+            else:
+                ring, count = exchange_cycle(self.s_max_dev, ring)
+                over = jax.lax.psum(
+                    jnp.maximum(count - self.s_max_dev, 0), self.all_axes)
         else:
             # One global all_gather per cycle: every device needs the full
             # vector because its neurons' sources are scattered everywhere.
@@ -471,37 +629,61 @@ class DenseMeshExchange(Exchange):
                 ring, full_f, net, t, backend=self.backend)
             ring = delivery_lib.deliver_inter(
                 ring, full_f.reshape(-1), net, t, backend=self.backend)
-        return ring, over
+        return ring, over, shipped
 
     def window_end(self, ring, block, t0, net, gids, *, blocked: bool):
         if net.k_inter == 0:
-            return ring, jnp.int32(0)
+            return ring, jnp.int32(0), jnp.float32(0)
         a_loc, n_loc, r_len = ring.shape
         A, n_pad = net.n_areas, net.n_pad
         d_win = block.shape[0]
+        shipped = jnp.float32(self._window_wire)
         if self.backend == "event":
-            # Sparse wire: one (id, step) packet for the whole window.
-            packets, counts = delivery_lib.compact_fired_block(
-                block, gids, s_max=self.s_max_dev, invalid=A * n_pad)
-            over = jax.lax.psum(
-                jnp.maximum(counts - self.s_max_dev, 0).sum(), self.all_axes)
-            wire = jax.lax.all_gather(
-                packets, self.all_axes, axis=1, tiled=True)  # [D, n_dev*s]
             tgt_f, w_f, d_f = self._inter_tables(net)
             to_local = self._global_to_local(a_loc, n_loc, net)
-            ring_flat = ring.reshape(a_loc * n_loc, r_len)
-            if blocked:
-                # Single-pass blocked receive: all D packets in one scatter.
-                ring_flat = kops.event_deliver_block(
-                    ring_flat, wire, tgt_f, w_f, d_f, t0, tgt_map=to_local)
-            else:
-                def deliver_s(s, rf):
-                    return kops.event_deliver_ids(
-                        rf, wire[s], tgt_f, w_f, d_f, t0 + s,
-                        tgt_map=to_local)
 
-                ring_flat = jax.lax.fori_loop(0, d_win, deliver_s, ring_flat)
-            return ring_flat.reshape(a_loc, n_loc, r_len), over
+            def exchange_window(s_max, ring):
+                # Sparse wire: one (id, step) packet for the whole window.
+                packets, counts = delivery_lib.compact_fired_block(
+                    block, gids, s_max=s_max, invalid=A * n_pad)
+                wire = jax.lax.all_gather(
+                    packets, self.all_axes, axis=1, tiled=True)
+                ring_flat = ring.reshape(a_loc * n_loc, r_len)
+                if blocked:
+                    # Single-pass blocked receive: all D packets at once.
+                    ring_flat = kops.event_deliver_block(
+                        ring_flat, wire, tgt_f, w_f, d_f, t0,
+                        tgt_map=to_local)
+                else:
+                    def deliver_s(s, rf):
+                        return kops.event_deliver_ids(
+                            rf, wire[s], tgt_f, w_f, d_f, t0 + s,
+                            tgt_map=to_local)
+
+                    ring_flat = jax.lax.fori_loop(
+                        0, d_win, deliver_s, ring_flat)
+                return ring_flat.reshape(a_loc, n_loc, r_len), counts
+
+            if self.adaptive:
+                # Phase 1: the window's mesh-max per-cycle fired count (one
+                # scalar pmax); phase 2: all D cycles ship rung-sized
+                # packets. Top rung = the whole device shard -> zero drop.
+                need = comm.count_max(
+                    block.reshape(d_win, -1).sum(
+                        axis=-1, dtype=jnp.int32).max(),
+                    self.all_axes)
+                ring, _ = kops.ladder_switch(
+                    self.ladder_dev, need, exchange_window, ring)
+                rung = kops.ladder_rung(self.ladder_dev, need)
+                shipped = (
+                    jnp.float32(self.n_dev * d_win * (self.n_dev - 1)
+                                * _I32_BYTES) * rung.astype(jnp.float32)
+                    + comm.count_wire_bytes(1, self.n_dev))
+                return ring, jnp.int32(0), shipped
+            ring, counts = exchange_window(self.s_max_dev, ring)
+            over = jax.lax.psum(
+                jnp.maximum(counts - self.s_max_dev, 0).sum(), self.all_axes)
+            return ring, over, shipped
 
         gblock = comm.gather_global(
             block.astype(jnp.int8), area_axes=self.area_axes,
@@ -510,21 +692,28 @@ class DenseMeshExchange(Exchange):
         if blocked:
             ring = delivery_lib.deliver_inter_block(
                 ring, gflat, net, t0, backend=self.backend)
-            return ring, jnp.int32(0)
+            return ring, jnp.int32(0), shipped
 
         def deliver_s(s, ring):
             return delivery_lib.deliver_inter(
                 ring, gflat[s], net, t0 + s, backend=self.backend)
 
-        return jax.lax.fori_loop(0, d_win, deliver_s, ring), jnp.int32(0)
+        ring = jax.lax.fori_loop(0, d_win, deliver_s, ring)
+        return ring, jnp.int32(0), shipped
 
     # -- static wire accounting ---------------------------------------------
 
     def wire_bytes(self, net: Network) -> dict:
-        return dense_wire_bytes(
+        rep = dense_wire_bytes(
             net, backend=self.backend, schedule=self.schedule,
             n_groups=self.n_groups, gsz=self.gsz,
             headroom=self.headroom, floor=self.floor)
+        rep["adaptive"] = adaptive_wire_bytes(
+            net, backend=self.backend, schedule=self.schedule,
+            n_groups=self.n_groups, gsz=self.gsz,
+            headroom=self.headroom, floor=self.floor)
+        rep["adaptive_on"] = self.adaptive
+        return rep
 
 
 class RoutedExchange(DenseMeshExchange):
@@ -580,6 +769,30 @@ class RoutedExchange(DenseMeshExchange):
         # receive-validity mask.
         self._proj_const = np.concatenate(
             [self.routing.proj, np.zeros((1, self.n_groups), bool)], axis=0)
+        # Adaptive per-round machinery: the edge-packet ladder tops out at
+        # the whole source group's population (areas/group x n_pad -- also
+        # exactly the assembled group packet's id capacity), and each
+        # round's static [G, areas/group] mask selects, from the phase-1
+        # per-area count table, the areas feeding that round's edges -- so
+        # every device derives the round's *exact* packet need.
+        A, n_pad = net.alive.shape
+        a_grp = A // self.n_groups
+        self.ladder_edge = delivery_lib.bucket_ladder(
+            cfg.s_max_floor, a_grp * n_pad)
+        proj_r = self.routing.proj.reshape(self.n_groups, a_grp,
+                                           self.n_groups)
+        self._round_masks = {
+            rnd.offset: np.stack([
+                proj_r[g, :, (g + rnd.offset) % self.n_groups]
+                for g in range(self.n_groups)
+            ]).astype(np.int32)                      # [G, areas/group]
+            for rnd in self.routing.rounds
+        }
+        # The routed global pathway's static shipped-byte constant replaces
+        # the dense parent's (same accounting routed_wire_bytes reports).
+        self._window_wire = float(routed_wire_bytes(
+            net, self.routing, backend=self.backend, gsz=self.gsz,
+            headroom=self.headroom, floor=self.floor)["global_bytes"])
 
     def window_end(self, ring, block, t0, net, gids, *, blocked: bool):
         # The routed receive is always the single-pass blocked scatter; a
@@ -587,7 +800,9 @@ class RoutedExchange(DenseMeshExchange):
         # weights), so ``blocked`` has nothing to select.
         del blocked
         if net.k_inter == 0 or not self.routing.rounds:
-            return ring, jnp.int32(0)
+            return ring, jnp.int32(0), jnp.float32(0)
+        if self.adaptive:
+            return self._window_end_adaptive(ring, block, t0, net, gids)
         a_loc, n_loc, r_len = ring.shape
         A, n_pad = net.n_areas, net.n_pad
         G = self.routing.n_groups
@@ -638,12 +853,112 @@ class RoutedExchange(DenseMeshExchange):
             ring.reshape(a_loc * n_loc, r_len),
             jnp.concatenate(received, axis=1),
             tgt_f, w_f, d_f, t0, tgt_map=to_local)
-        return ring_flat.reshape(a_loc, n_loc, r_len), over
+        return (ring_flat.reshape(a_loc, n_loc, r_len), over,
+                jnp.float32(self._window_wire))
+
+    def _window_end_adaptive(self, ring, block, t0, net, gids):
+        """The two-phase routed window: exact counts, then right-sized
+        packets.
+
+        Phase 1 ships the global ``[D, A]`` per-area spike-count table
+        (``comm.gather_counts``) plus one scalar pmax -- from the table
+        every device derives, identically, the *exact* packet need of the
+        group assembly and of every rotation round's edges, so all bucket
+        choices are branch-uniform and no packet can drop a spike (the
+        ladders top out at the group population). Phase 2 assembles the
+        group packet at the device bucket and re-compacts each round at its
+        own edge bucket; each round scatters immediately (per-round
+        ``event_deliver_block`` -- bit-identical to the static path's
+        concatenated single scatter, grid-exact weights).
+        """
+        a_loc, n_loc, r_len = ring.shape
+        A, n_pad = net.n_areas, net.n_pad
+        G = self.routing.n_groups
+        invalid = A * n_pad
+        d_win = block.shape[0]
+        gsz = self.gsz
+        cap_dev = self.ladder_dev[-1]
+
+        # -- phase 1: counts ------------------------------------------------
+        counts_local = block.sum(axis=-1, dtype=jnp.int32)   # [D, A_loc]
+        counts_all = comm.gather_counts(
+            counts_local, area_axes=self.area_axes,
+            subgroup_axis=self.subgroup)                     # [D, A]
+        dev_need = comm.count_max(
+            counts_local.sum(axis=-1).max(), self.all_axes)
+        shipped = jnp.float32(
+            comm.count_wire_bytes(d_win * A + 1, self.n_dev))
+
+        # -- phase 2a: assemble the group packet at the device bucket -------
+        def assemble(b):
+            packets, _ = delivery_lib.compact_fired_block(
+                block, gids, s_max=b, invalid=invalid)       # [D, b]
+            gw = jax.lax.all_gather(
+                packets, self.subgroup, axis=1, tiled=True)  # [D, gsz*b]
+            # Pad each lane's slot out to the ladder cap so every bucket
+            # branch returns the same [D, gsz*cap] shape (extra slots carry
+            # the fill id, absorbed by the receive scatter).
+            gw = gw.reshape(d_win, gsz, b)
+            gw = jnp.pad(gw, ((0, 0), (0, 0), (0, cap_dev - b)),
+                         constant_values=invalid)
+            return gw.reshape(d_win, gsz * cap_dev)
+
+        gwire = kops.ladder_switch(self.ladder_dev, dev_need, assemble)
+        rung_dev = kops.ladder_rung(self.ladder_dev, dev_need)
+        shipped = shipped + (
+            jnp.float32(self.n_dev * (gsz - 1) * d_win * _I32_BYTES)
+            * rung_dev.astype(jnp.float32))
+
+        my_g = self._group_index()
+        src_area = jnp.where(gwire < invalid, gwire // n_pad, A)
+        proj = jnp.asarray(self._proj_const)                 # [A+1, G]
+        gadj = jnp.asarray(self.routing.group_adj)           # [G, G]
+        tgt_f, w_f, d_f = self._inter_tables(net)
+        to_local = self._global_to_local(a_loc, n_loc, net)
+        cg = counts_all.reshape(d_win, G, A // G)
+
+        # -- phase 2b: one bucketed round per existing offset ---------------
+        for rnd in self.routing.rounds:
+            mask = jnp.asarray(self._round_masks[rnd.offset])  # [G, A/G]
+            # Exact per-edge need: spikes of the areas projecting along
+            # each edge at this offset, maxed over cycles and edges.
+            need_r = (cg * mask[None]).sum(axis=-1).max()
+            dst_g = jnp.mod(my_g + rnd.offset, G)
+            keep = proj[src_area, dst_g]                     # [D, L]
+
+            def round_fn(b, ring, rnd=rnd, keep=keep):
+                pkt, _ = kops.compact_ids_block(
+                    keep, gwire, size=b, fill_id=invalid)
+                if rnd.offset:
+                    axis = (self.area_axes if len(self.area_axes) > 1
+                            else self.area_axes[0])
+                    pkt = jax.lax.ppermute(pkt, axis, rnd.pairs)
+                    ok = gadj[jnp.mod(my_g - rnd.offset, G), my_g]
+                    pkt = jnp.where(ok, pkt, invalid)
+                rf = kops.event_deliver_block(
+                    ring.reshape(a_loc * n_loc, r_len), pkt,
+                    tgt_f, w_f, d_f, t0, tgt_map=to_local)
+                return rf.reshape(a_loc, n_loc, r_len)
+
+            ring = kops.ladder_switch(
+                self.ladder_edge, need_r, round_fn, ring)
+            if rnd.offset:
+                rung = kops.ladder_rung(self.ladder_edge, need_r)
+                shipped = shipped + (
+                    jnp.float32(len(rnd.pairs) * gsz * d_win * _I32_BYTES)
+                    * rung.astype(jnp.float32))
+        return ring, jnp.int32(0), shipped
 
     def wire_bytes(self, net: Network) -> dict:
-        return routed_wire_bytes(
+        rep = routed_wire_bytes(
             net, self.routing, backend=self.backend, gsz=self.gsz,
             headroom=self.headroom, floor=self.floor)
+        rep["adaptive"] = adaptive_wire_bytes(
+            net, backend=self.backend, schedule=STRUCTURE_AWARE,
+            n_groups=self.n_groups, gsz=self.gsz,
+            headroom=self.headroom, floor=self.floor, routing=self.routing)
+        rep["adaptive_on"] = self.adaptive
+        return rep
 
 
 # ---------------------------------------------------------------------------
@@ -731,6 +1046,132 @@ def routed_wire_bytes(
                 rounds=routing.n_wire_rounds,
                 dense_rounds=max(n_groups - 1, 0),
                 edges=routing.n_edges)
+
+
+def adaptive_wire_bytes(
+    net: Network,
+    *,
+    backend: str,
+    schedule: str = STRUCTURE_AWARE,
+    n_groups: int,
+    gsz: int,
+    headroom: float = 8.0,
+    floor: int = 16,
+    routing: Routing | None = None,
+) -> dict:
+    """The adaptive two-phase exchange's byte model (pure shape arithmetic).
+
+    Prices, per window: ``counts_bytes`` (the phase-1 count collectives),
+    ``payload_bytes_expected`` (phase-2 packets sized by the rung an
+    expectation-sized window lands on, :func:`repro.core.delivery
+    .expected_bucket` -- the *typical*-window bytes; live runs report the
+    actually-measured value in ``SimState.shipped_bytes``), and
+    ``payload_bytes_worst`` (every ladder at its hard-cap top rung -- the
+    bound that makes overflow impossible). ``saved_bytes`` is the
+    expectation-window saving vs the static-bound path; ``applies=False``
+    marks pathways with no id packets to size (the dense exchange's
+    bit-packed backends), where the numbers simply restate the static case.
+    Mirrors the runtime constants of the exchange hooks term for term, so
+    modelled and measured bytes agree whenever counts sit on the modelled
+    rung.
+    """
+    n_dev = n_groups * gsz
+    d_win = net.delay_ratio
+    A, n_pad = net.n_areas, net.n_pad
+    exp_area = delivery_lib.expected_area_spikes(net)
+    if routing is not None:
+        static = routed_wire_bytes(
+            net, routing, backend=backend, gsz=gsz,
+            headroom=headroom, floor=floor)
+    else:
+        static = dense_wire_bytes(
+            net, backend=backend, schedule=schedule, n_groups=n_groups,
+            gsz=gsz, headroom=headroom, floor=floor)
+    out = dict(
+        exchange=static["exchange"], backend=backend, applies=False,
+        static_total_bytes=static["total_bytes"], counts_bytes=0,
+        payload_bytes_expected=static["total_bytes"],
+        payload_bytes_worst=static["total_bytes"],
+        total_bytes_expected=static["total_bytes"],
+        saved_bytes=0, buckets={},
+    )
+    if routing is None and backend != "event":
+        return out  # bit-packed dense wire: nothing to size adaptively
+    out["applies"] = True
+    buckets: dict = {}
+    counts = 0
+    payload_exp = 0
+    payload_worst = 0
+    if schedule == CONVENTIONAL:
+        n_loc = n_pad // n_dev
+        ladder = delivery_lib.bucket_ladder(floor, A * n_loc)
+        b = delivery_lib.expected_bucket(ladder, exp_area * A / n_dev)
+        buckets["device"] = b
+        counts = d_win * comm.count_wire_bytes(1, n_dev)
+        payload_exp = n_dev * d_win * (n_dev - 1) * b * _I32_BYTES
+        payload_worst = n_dev * d_win * (n_dev - 1) * ladder[-1] * _I32_BYTES
+    else:
+        a_loc, n_loc = A // n_groups, n_pad // gsz
+        if net.k_intra > 0 and backend == "event":
+            ladder_loc = delivery_lib.bucket_ladder(floor, n_loc)
+            bl = delivery_lib.expected_bucket(ladder_loc, exp_area / gsz)
+            buckets["local"] = bl
+            counts += d_win * comm.count_wire_bytes(1, n_dev)
+            payload_exp += (n_dev * d_win * a_loc * (gsz - 1)
+                            * bl * _I32_BYTES)
+            payload_worst += (n_dev * d_win * a_loc * (gsz - 1)
+                              * ladder_loc[-1] * _I32_BYTES)
+        else:
+            # The dense local pathway stays bit-packed (not adaptively
+            # sized); restate its static bytes so totals remain comparable.
+            payload_exp += static["local_bytes"]
+            payload_worst += static["local_bytes"]
+        if net.k_inter > 0:
+            ladder_dev = delivery_lib.bucket_ladder(floor, a_loc * n_loc)
+            if routing is None:
+                bd = delivery_lib.expected_bucket(
+                    ladder_dev, exp_area * A / n_dev)
+                buckets["device"] = bd
+                counts += comm.count_wire_bytes(1, n_dev)
+                payload_exp += (n_dev * d_win * (n_dev - 1)
+                                * bd * _I32_BYTES)
+                payload_worst += (n_dev * d_win * (n_dev - 1)
+                                  * ladder_dev[-1] * _I32_BYTES)
+            else:
+                G = routing.n_groups
+                bd = delivery_lib.expected_bucket(
+                    ladder_dev, exp_area * A / n_dev)
+                buckets["assembly"] = bd
+                counts += comm.count_wire_bytes(d_win * A + 1, n_dev)
+                payload_exp += (n_dev * (gsz - 1) * d_win * bd * _I32_BYTES)
+                payload_worst += (n_dev * (gsz - 1) * d_win
+                                  * ladder_dev[-1] * _I32_BYTES)
+                ladder_edge = delivery_lib.bucket_ladder(
+                    floor, a_loc * n_pad)
+                proj_r = routing.proj.reshape(G, A // G, G)
+                round_buckets = {}
+                for rnd in routing.rounds:
+                    if rnd.offset == 0:
+                        continue
+                    n_src = max(int(proj_r[g, :, h].sum())
+                                for g, h in rnd.pairs)
+                    br = delivery_lib.expected_bucket(
+                        ladder_edge, exp_area * n_src)
+                    round_buckets[rnd.offset] = br
+                    payload_exp += (len(rnd.pairs) * gsz * d_win
+                                    * br * _I32_BYTES)
+                    payload_worst += (len(rnd.pairs) * gsz * d_win
+                                      * ladder_edge[-1] * _I32_BYTES)
+                buckets["rounds"] = round_buckets
+    out.update(
+        counts_bytes=counts,
+        payload_bytes_expected=payload_exp,
+        payload_bytes_worst=payload_worst,
+        total_bytes_expected=counts + payload_exp,
+        saved_bytes=static["total_bytes"] - (counts + payload_exp),
+        buckets=buckets,
+    )
+    return out
 
 
 def inter_table_report(
@@ -857,16 +1298,31 @@ def wire_report(
 ) -> dict:
     """Dense-vs-routed wire volume for a hypothetical ``n_groups x gsz``
     mesh -- pure static accounting, no devices required. Feeds
-    ``benchmarks/bench_delivery.py`` and ``simulate.py --profile``."""
+    ``benchmarks/bench_delivery.py`` and ``simulate.py --profile``.
+
+    Each entry carries *both* sizings: the top-level fields are the static
+    worst case (fixed ``s_max`` packets -- what a non-adaptive run always
+    ships), and ``["adaptive"]`` is the two-phase model
+    (:func:`adaptive_wire_bytes`: phase-1 count bytes + expectation-sized
+    payload + hard-cap worst case), so dry-run and benchmark rows stay
+    honest when ``EngineConfig.adaptive_exchange`` is on. Live runs report
+    the measured value in ``SimState.shipped_bytes``.
+    """
     exp_area = delivery_lib.expected_area_spikes(net)
     routing = build_routing(
         adjacency, n_groups, exp_area_spikes=exp_area,
         headroom=headroom, floor=floor)
-    return dict(
-        dense=dense_wire_bytes(
-            net, backend=backend, schedule=STRUCTURE_AWARE,
-            n_groups=n_groups, gsz=gsz, headroom=headroom, floor=floor),
-        routed=routed_wire_bytes(
-            net, routing, backend=backend, gsz=gsz,
-            headroom=headroom, floor=floor),
-    )
+    dense = dense_wire_bytes(
+        net, backend=backend, schedule=STRUCTURE_AWARE,
+        n_groups=n_groups, gsz=gsz, headroom=headroom, floor=floor)
+    dense["adaptive"] = adaptive_wire_bytes(
+        net, backend=backend, schedule=STRUCTURE_AWARE,
+        n_groups=n_groups, gsz=gsz, headroom=headroom, floor=floor)
+    routed = routed_wire_bytes(
+        net, routing, backend=backend, gsz=gsz,
+        headroom=headroom, floor=floor)
+    routed["adaptive"] = adaptive_wire_bytes(
+        net, backend=backend, schedule=STRUCTURE_AWARE,
+        n_groups=n_groups, gsz=gsz, headroom=headroom, floor=floor,
+        routing=routing)
+    return dict(dense=dense, routed=routed)

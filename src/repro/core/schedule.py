@@ -60,8 +60,19 @@ class SimState:
     # Scalar int32: spikes dropped because a fixed-size packet (event
     # backend, or a routed-exchange edge) exceeded its static s_max bound
     # (0 on the dense pathways; any nonzero value means the run is no longer
-    # exact and s_max_headroom/floor must be raised).
+    # exact and s_max_headroom/floor must be raised). Under the adaptive
+    # two-phase exchange (EngineConfig.adaptive_exchange) this is provably
+    # always 0: phase-1 counts size every packet and the bucket ladders top
+    # out at the hard population cap.
     overflow: Any = None
+    # Scalar f32: cumulative mesh-total wire bytes the exchanges actually
+    # shipped (counts + payloads). Static packets add their fixed byte
+    # constants; adaptive packets add the bytes of the bucket each window
+    # actually selected -- the *measured* counterpart of the static
+    # worst-case accounting in Engine.wire_bytes / exchange.wire_report
+    # (f32: byte totals overflow int32 long before they lose f32 precision
+    # that matters for reporting).
+    shipped_bytes: Any = None
 
 
 def make_update_fn(
@@ -136,7 +147,7 @@ def make_window_fn(
             """One deliver -> update -> collocate cycle on full SimState."""
             i_in, ring = ring_buffer.read_and_clear(st.ring, st.t)
             nstate, spikes = update_fn(st.neuron, i_in, st.t, net, gids)
-            ring, over = exchange.cycle(
+            ring, over, shipped = exchange.cycle(
                 ring, spikes, st.t, net, gids, inter_now=inter_now)
             return SimState(
                 neuron=nstate,
@@ -144,6 +155,7 @@ def make_window_fn(
                 t=st.t + 1,
                 spike_count=st.spike_count + spikes.astype(jnp.int32),
                 overflow=st.overflow + over,
+                shipped_bytes=st.shipped_bytes + shipped,
             ), spikes
 
         if cfg.schedule == CONVENTIONAL:
@@ -161,6 +173,7 @@ def make_window_fn(
             W = net.live_window
             fut, ring = ring_buffer.open_window(state.ring, t0, D, W)
             neuron, over = state.neuron, state.overflow
+            shipped = state.shipped_bytes
             if fused_superstep is not None:
                 neuron, block, fut = fused_superstep(neuron, fut, t0)
             elif cfg.superstep_unroll:
@@ -168,24 +181,26 @@ def make_window_fn(
                 for s in range(D):  # unrolled: s static, slot math vanishes
                     neuron, spikes = update_fn(
                         neuron, fut[..., s], t0 + s, net, gids)
-                    fut, d_over = exchange.cycle(
+                    fut, d_over, d_ship = exchange.cycle(
                         fut, spikes, s, net, gids, inter_now=False)
                     over = over + d_over
+                    shipped = shipped + d_ship
                     cols.append(spikes)
                 block = jnp.stack(cols)
             else:
                 # Scan over the live window: slot access touches only the
                 # small [.., W] buffer (wrap-free), never the ring.
                 def body(carry, s):
-                    neuron, fut, over = carry
+                    neuron, fut, over, shipped = carry
                     neuron, spikes = update_fn(
                         neuron, fut[..., s], t0 + s, net, gids)
-                    fut, d_over = exchange.cycle(
+                    fut, d_over, d_ship = exchange.cycle(
                         fut, spikes, s, net, gids, inter_now=False)
-                    return (neuron, fut, over + d_over), spikes
+                    return (neuron, fut, over + d_over,
+                            shipped + d_ship), spikes
 
-                (neuron, fut, over), block = jax.lax.scan(
-                    body, (neuron, fut, over),
+                (neuron, fut, over, shipped), block = jax.lax.scan(
+                    body, (neuron, fut, over, shipped),
                     jnp.arange(D, dtype=jnp.int32))
             ring = ring_buffer.merge_window_tail(ring, fut[..., D:], t0 + D)
 
@@ -193,7 +208,7 @@ def make_window_fn(
             # one pass. Every inter-area delay is >= D, so slot (t0+s+d) is
             # strictly in the future of the window -- causal (paper §2.1)
             # and bit-identical to D per-cycle deliveries.
-            ring, d_over = exchange.window_end(
+            ring, d_over, d_ship = exchange.window_end(
                 ring, block, t0, net, gids, blocked=True)
             return SimState(
                 neuron=neuron,
@@ -201,6 +216,7 @@ def make_window_fn(
                 t=t0 + D,
                 spike_count=state.spike_count + block.astype(jnp.int32).sum(0),
                 overflow=over + d_over,
+                shipped_bytes=shipped + d_ship,
             ), block
 
         # Legacy structure-aware window (the semantic reference for the
@@ -209,9 +225,10 @@ def make_window_fn(
             return cycle_state(st, inter_now=False)
 
         state, block = jax.lax.scan(body, state, None, length=D)
-        ring, d_over = exchange.window_end(
+        ring, d_over, d_ship = exchange.window_end(
             state.ring, block, t0, net, gids, blocked=False)
         return dataclasses.replace(
-            state, ring=ring, overflow=state.overflow + d_over), block
+            state, ring=ring, overflow=state.overflow + d_over,
+            shipped_bytes=state.shipped_bytes + d_ship), block
 
     return window

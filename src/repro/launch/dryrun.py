@@ -233,6 +233,7 @@ def dryrun_snn_cell(
     backend: str = "",
     exchange: str = "",
     shard_tables: bool = True,
+    adaptive: bool = False,
 ) -> dict:
     """Lower the distributed SNN engine window at production MAM scale.
 
@@ -246,7 +247,12 @@ def dryrun_snn_cell(
     (``network_sds(inter_shards=...)`` -- per-device table bytes divided by
     ~the shard count); False keeps the replicated-table baseline the
     sharded layout is measured against. The per-device table bytes and
-    receive-side work land in ``row["inter_tables"]``.
+    receive-side work land in ``row["inter_tables"]``. ``adaptive`` lowers
+    the two-phase bucket-ladder exchange (count collective + lax.switch
+    over pre-compiled payload sizes); ``row["wire_bytes_window"]`` then
+    carries both the static worst case and the adaptive byte model, so the
+    dry-run rows stay honest about what an adaptive run would actually
+    ship.
     """
     from repro.core.areas import mam_spec
     from repro.core.connectivity import area_adjacency, network_sds
@@ -260,6 +266,8 @@ def dryrun_snn_cell(
     label = "_".join(x for x in (schedule, backend, exchange) if x)
     if not shard_tables:
         label += "_reptables"
+    if adaptive:
+        label += "_adaptive"
     row: dict[str, Any] = {
         "arch": SNN_ARCH, "shape": f"mam_x{scale:g}_{label}",
         "mesh": "2x16x16" if multi_pod else "16x16", "mode": schedule,
@@ -280,7 +288,8 @@ def dryrun_snn_cell(
         inter_shard_mode=shard_mode)
     cfg = EngineConfig(neuron_model="lif", schedule=schedule,
                        delivery_backend=backend, exchange=exchange,
-                       shard_inter_tables=shard_tables)
+                       shard_inter_tables=shard_tables,
+                       adaptive_exchange=adaptive)
     eng = make_dist_engine(net_sds, spec, mesh, cfg)
     if needs_outgoing and spec.k_inter > 0:
         # Static per-device receive-table accounting, replicated vs sharded
@@ -317,11 +326,13 @@ def dryrun_snn_cell(
             "t": sds((), jnp.int32),
             "spike_count": sds((A, n_pad), jnp.int32),
             "overflow": sds((), jnp.int32),
+            "shipped_bytes": sds((), jnp.float32),
         },
         {
             "neuron": st_specs.neuron, "ring": st_specs.ring,
             "t": st_specs.t, "spike_count": st_specs.spike_count,
             "overflow": st_specs.overflow,
+            "shipped_bytes": st_specs.shipped_bytes,
         },
         is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)),
     )
@@ -369,6 +380,10 @@ def main() -> None:
                     help="lower the legacy replicated inter receive tables "
                          "instead of the sharded inbound slices (the "
                          "before/after baseline of the sharded-table PR)")
+    ap.add_argument("--snn-adaptive", action="store_true",
+                    help="lower the adaptive two-phase exchange (phase-1 "
+                         "count collective + bucket-ladder payloads via "
+                         "lax.switch) instead of static s_max packets")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -389,7 +404,8 @@ def main() -> None:
                             # pathway only; conventional stays dense.
                             exchange=(args.snn_exchange
                                       if sched == "structure_aware" else ""),
-                            shard_tables=not args.snn_replicated_tables))
+                            shard_tables=not args.snn_replicated_tables,
+                            adaptive=args.snn_adaptive))
                     except Exception as e:
                         rows.append({
                             "arch": arch, "shape": sched,

@@ -8,9 +8,13 @@ multi-device mesh (e.g. under XLA_FLAGS=--xla_force_host_platform_device_count=8
 or on real TPU pods) uses the distributed two-tier engine, with the global
 pathway selected by ``--exchange`` (``dense`` mesh-wide collectives vs the
 connectivity-``routed`` packet rounds of ``repro.core.exchange``). Reports
-per-window wall time, spike statistics, wire bytes per window, and -- with
+per-window wall time, spike statistics, wire bytes per window (static worst
+case AND the measured ``SimState.shipped_bytes``), and -- with
 ``--compare`` -- verifies the conventional and structure-aware schedules
-produce identical spikes.
+produce identical spikes. ``--adaptive`` switches every packet onto the
+adaptive two-phase exchange (counts first, then bucket-sized payloads;
+overflow is asserted zero); ``--compare-adaptive`` additionally verifies
+the adaptive and static paths are bit-identical.
 """
 
 from __future__ import annotations
@@ -166,6 +170,19 @@ def print_wire_volume(net, spec, cfg: EngineConfig, n_groups: int, gsz: int):
     print(f"{'routed':10s} {routed['local_bytes']:12,d} "
           f"{routed['global_bytes']:12,d} {routed['total_bytes']:12,d} "
           f"{routed['rounds']:8d}")
+    # The adaptive two-phase model next to the static worst case: phase-1
+    # count bytes + expectation-sized payload (live runs report measured
+    # bytes from SimState.shipped_bytes).
+    print(f"{'exchange':10s} {'counts':>12s} {'payload(exp)':>12s} "
+          f"{'worst':>12s} {'saved':>12s}  (adaptive two-phase)")
+    for name, entry in (("dense", dense), ("routed", routed)):
+        ad = entry["adaptive"]
+        if not ad["applies"]:
+            print(f"{name:10s} {'n/a (bit-packed wire)':>12s}")
+            continue
+        print(f"{name:10s} {ad['counts_bytes']:12,d} "
+              f"{ad['payload_bytes_expected']:12,d} "
+              f"{ad['payload_bytes_worst']:12,d} {ad['saved_bytes']:12,d}")
     if net.tgt_inter is not None or net.tgt_inter_in is not None:
         tbl = exchange_lib.priced_inter_table_report(
             net, n_groups=n_groups, gsz=gsz,
@@ -225,8 +242,17 @@ def main() -> None:
                          "paths only)")
     ap.add_argument("--seed", type=int, default=12,
                     help="paper seeds: 12, 654, 91856")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="adaptive two-phase exchange "
+                         "(EngineConfig.adaptive_exchange): counts first, "
+                         "then bucket-sized payloads; SimState.overflow is "
+                         "provably 0 and asserted after every run")
     ap.add_argument("--compare", action="store_true",
                     help="run both schedules, assert identical spikes")
+    ap.add_argument("--compare-adaptive", action="store_true",
+                    help="run every selected schedule with BOTH the static "
+                         "and the adaptive exchange, assert bit-identical "
+                         "spike counts and zero adaptive overflow")
     ap.add_argument("--profile", action="store_true",
                     help="report per-phase timings (ring read/clear, update, "
                          "intra/inter deliver) and the dense-vs-routed wire "
@@ -279,49 +305,76 @@ def main() -> None:
 
     schedules = ([args.schedule] if not args.compare
                  else ["conventional", "structure_aware"])
+    adaptives = ([False, True] if args.compare_adaptive
+                 else [args.adaptive])
     spikes = {}
     for sched in schedules:
-        # The routed exchange routes the structure-aware window's lumped
-        # global pathway; the conventional schedule always runs dense.
-        exchange = args.exchange if sched == "structure_aware" else "dense"
-        cfg = EngineConfig(
-            neuron_model=neuron, schedule=sched, delivery_backend=backend,
-            exchange=exchange if mesh is not None else "", seed=42,
-            shard_inter_tables=not args.replicated_inter_tables)
-        if mesh is not None:
-            from repro.core.dist_engine import make_dist_engine
+        for adaptive in adaptives:
+            # The routed exchange routes the structure-aware window's lumped
+            # global pathway; the conventional schedule always runs dense.
+            exchange = (args.exchange if sched == "structure_aware"
+                        else "dense")
+            cfg = EngineConfig(
+                neuron_model=neuron, schedule=sched,
+                delivery_backend=backend,
+                exchange=exchange if mesh is not None else "", seed=42,
+                shard_inter_tables=not args.replicated_inter_tables,
+                adaptive_exchange=adaptive)
+            if mesh is not None:
+                from repro.core.dist_engine import make_dist_engine
 
-            eng = make_dist_engine(net, spec, mesh, cfg)
-        else:
-            eng = make_engine(net, spec, cfg)
-        st = eng.init()
-        n_windows = spec.steps_for(args.t_ms) // spec.delay_ratio
-        st, _ = eng.window(st)  # compile
-        jax.block_until_ready(st.ring)
-        t0 = time.perf_counter()
-        st, per_win = eng.run(st, n_windows - 1)
-        jax.block_until_ready(st.ring)
-        wall = time.perf_counter() - t0
-        t_s = float(st.t) * spec.dt_ms / 1000.0
-        rate = float(st.spike_count.sum()) / (spec.n_total * t_s)
-        rtf = wall / ((n_windows - 1) * spec.delay_ratio * spec.dt_ms / 1000)
-        overflow = int(st.overflow)
-        wire = eng.wire_bytes or {}
-        wire_s = (f", {wire['total_bytes']:,} wire B/window"
-                  if wire.get("total_bytes") else "")
-        print(f"  {sched:16s} ({exchange if mesh is not None else 'local'}):"
-              f" {wall:6.2f} s wall, RTF {rtf:8.1f}, "
-              f"mean rate {rate:5.2f} Hz, "
-              f"{int(st.spike_count.sum()):,} spikes{wire_s}"
-              + (f", OVERFLOW {overflow} (raise s_max!)" if overflow else ""))
-        spikes[sched] = np.asarray(st.spike_count)
+                eng = make_dist_engine(net, spec, mesh, cfg)
+            else:
+                eng = make_engine(net, spec, cfg)
+            st = eng.init()
+            n_windows = spec.steps_for(args.t_ms) // spec.delay_ratio
+            st, _ = eng.window(st)  # compile
+            jax.block_until_ready(st.ring)
+            t0 = time.perf_counter()
+            st, per_win = eng.run(st, n_windows - 1)
+            jax.block_until_ready(st.ring)
+            wall = time.perf_counter() - t0
+            t_s = float(st.t) * spec.dt_ms / 1000.0
+            rate = float(st.spike_count.sum()) / (spec.n_total * t_s)
+            rtf = wall / (
+                (n_windows - 1) * spec.delay_ratio * spec.dt_ms / 1000)
+            overflow = int(st.overflow)
+            wire = eng.wire_bytes or {}
+            wire_s = (f", {wire['total_bytes']:,} wire B/window (static)"
+                      if wire.get("total_bytes") else "")
+            measured = float(st.shipped_bytes) / n_windows
+            meas_s = (f", {measured:,.0f} measured B/window"
+                      if measured else "")
+            mode = "adaptive" if adaptive else "static"
+            print(f"  {sched:16s} "
+                  f"({exchange if mesh is not None else 'local'}/{mode}):"
+                  f" {wall:6.2f} s wall, RTF {rtf:8.1f}, "
+                  f"mean rate {rate:5.2f} Hz, "
+                  f"{int(st.spike_count.sum()):,} spikes{wire_s}{meas_s}"
+                  + (f", OVERFLOW {overflow} (raise s_max!)"
+                     if overflow else ""))
+            if adaptive and overflow:
+                raise SystemExit(
+                    "adaptive exchange reported nonzero overflow -- the "
+                    "two-phase sizing is broken (this must be impossible)")
+            spikes[(sched, adaptive)] = np.asarray(st.spike_count)
 
     if args.compare:
-        same = np.array_equal(spikes["conventional"],
-                              spikes["structure_aware"])
-        print(f"\nschedules produce identical spike counts: {same}")
-        if not same:
-            raise SystemExit(1)
+        for adaptive in adaptives:
+            same = np.array_equal(spikes[("conventional", adaptive)],
+                                  spikes[("structure_aware", adaptive)])
+            mode = "adaptive" if adaptive else "static"
+            print(f"\nschedules produce identical spike counts ({mode}): "
+                  f"{same}")
+            if not same:
+                raise SystemExit(1)
+    if args.compare_adaptive:
+        for sched in schedules:
+            same = np.array_equal(spikes[(sched, False)],
+                                  spikes[(sched, True)])
+            print(f"adaptive == static spike counts ({sched}): {same}")
+            if not same:
+                raise SystemExit(1)
 
 
 if __name__ == "__main__":

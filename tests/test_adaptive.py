@@ -1,0 +1,377 @@
+"""Adaptive two-phase exchange tests: count-then-payload must be invisible.
+
+The tentpole invariants:
+
+* **bit-identity** -- with ``EngineConfig.adaptive_exchange=True`` every
+  exchange (local, dense, routed) reproduces the static path's spike trains
+  and rings bitwise whenever the static path drops nothing;
+* **overflow elimination** -- a workload that forces the static bounds to
+  drop spikes (``s_max_headroom=0, s_max_floor=1``) runs with
+  ``SimState.overflow == 0`` under adaptive mode, same seed and spike
+  trains, because phase-1 counts size every packet and the bucket ladders
+  top out at the hard population cap;
+* **bucket-edge exactness** -- a window whose spike count lands exactly on
+  a ladder rung selects that rung (no off-by-one), one past it selects the
+  next;
+* **byte savings** -- the measured ``SimState.shipped_bytes`` of an
+  adaptive routed run is strictly below the static run's, and the static
+  run's measured bytes equal the static accounting exactly.
+
+Multi-device cases run in subprocesses with 8 forced host devices (per the
+launch contract, the main pytest process must keep seeing one device).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str, n_devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=540,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+def test_bucket_ladder_and_index_edges():
+    """Host-only ladder semantics: power-of-two rungs topped by the cap
+    exactly, and the boundary rule -- a count landing ON a rung selects it,
+    one past it selects the next rung."""
+    import jax.numpy as jnp
+
+    from repro.core.delivery import bucket_ladder, expected_bucket
+    from repro.kernels.ops import bucket_index
+
+    ladder = bucket_ladder(4, 100)
+    assert ladder == (4, 8, 16, 32, 64, 100)
+    assert bucket_ladder(4, 64) == (4, 8, 16, 32, 64)   # cap on a rung
+    assert bucket_ladder(7, 7) == (7,)                   # degenerate
+    assert bucket_ladder(0, 5) == (1, 2, 4, 5)           # floor clamped to 1
+
+    arr = ladder
+    # Exactly on a rung -> that rung; one past -> the next.
+    for i, b in enumerate(arr):
+        assert int(bucket_index(arr, jnp.int32(b))) == i, b
+        if i + 1 < len(arr):
+            assert int(bucket_index(arr, jnp.int32(b + 1))) == i + 1, b
+    assert int(bucket_index(arr, jnp.int32(0))) == 0
+    # Clamped at the top (unreachable when the cap is the population bound).
+    assert int(bucket_index(arr, jnp.int32(10_000))) == len(arr) - 1
+
+    # The modelled counterpart used by the static accounting.
+    assert expected_bucket(ladder, 3.2) == 4
+    assert expected_bucket(ladder, 4.0) == 4
+    assert expected_bucket(ladder, 4.1) == 8
+    assert expected_bucket(ladder, 1e9) == 100
+
+
+def test_adaptive_local_engine_bitwise_and_bucket_edge():
+    """Single-host event engine under adaptive mode: bitwise-identical to
+    the onehot reference, zero overflow -- including with the floor pinned
+    so the busiest cycle's count lands *exactly on* a rung edge, and one
+    below it (the count then overflows the floor rung onto the next)."""
+    import jax
+
+    from repro.core.areas import mam_benchmark_spec
+    from repro.core.connectivity import build_network
+    from repro.core.engine import EngineConfig, make_engine
+
+    spec = mam_benchmark_spec(n_areas=4, n_per_area=32, k_intra=4, k_inter=4,
+                              rate_hz=1000.0)
+    net = build_network(spec, seed=12, size_multiple=8, outgoing=True)
+    ref = make_engine(net, spec, EngineConfig(
+        neuron_model="ignore_and_fire", schedule="structure_aware"))
+    s0 = ref.init()
+    blocks = []
+    for _ in range(4):
+        s0, b = ref.window(s0)
+        blocks.append(np.asarray(b))
+    ring_ref = np.asarray(s0.ring)
+    # The busiest cycle's whole-network count: the inter ladder's floor rung
+    # boundary case.
+    max_cycle = max(int(b.reshape(b.shape[0], -1).sum(1).max())
+                    for b in blocks)
+    assert max_cycle > 1, "workload must spike"
+
+    for floor in (max_cycle, max_cycle - 1, 1):
+        eng = make_engine(net, spec, EngineConfig(
+            neuron_model="ignore_and_fire", schedule="structure_aware",
+            delivery_backend="event", adaptive_exchange=True,
+            s_max_headroom=0.0, s_max_floor=floor))
+        st = eng.init()
+        for w in range(4):
+            st, blk = eng.window(st)
+            assert np.array_equal(
+                np.asarray(blk).astype(bool), blocks[w]), (floor, w)
+        assert np.array_equal(np.asarray(st.ring), ring_ref), floor
+        assert int(st.overflow) == 0, floor
+    del jax
+
+
+def test_adaptive_eliminates_forced_overflow_single_host():
+    """The overflow failure mode, single host: ``headroom=0, floor=1``
+    forces the static event bounds to drop spikes (nonzero overflow);
+    adaptive mode with the *same seed and config* reports zero overflow and
+    reproduces the unconstrained reference ring bitwise."""
+    from repro.core.areas import mam_benchmark_spec
+    from repro.core.connectivity import build_network
+    from repro.core.engine import EngineConfig, make_engine
+
+    spec = mam_benchmark_spec(n_areas=4, n_per_area=32, k_intra=4, k_inter=4,
+                              rate_hz=1000.0)
+    net = build_network(spec, seed=12, size_multiple=8, outgoing=True)
+    ref = make_engine(net, spec, EngineConfig(
+        neuron_model="ignore_and_fire", schedule="structure_aware"))
+    s_ref = ref.init()
+    for _ in range(4):
+        s_ref, _ = ref.window(s_ref)
+
+    got = {}
+    for adaptive in (False, True):
+        eng = make_engine(net, spec, EngineConfig(
+            neuron_model="ignore_and_fire", schedule="structure_aware",
+            delivery_backend="event", adaptive_exchange=adaptive,
+            s_max_headroom=0.0, s_max_floor=1))
+        st = eng.init()
+        for _ in range(4):
+            st, _ = eng.window(st)
+        got[adaptive] = st
+    assert int(got[False].overflow) > 0, "static floor=1 must drop spikes"
+    assert int(got[True].overflow) == 0, "adaptive must never drop"
+    # ignore-and-fire emission is input-independent: spike trains agree by
+    # construction; the *ring* proves no delivery was lost.
+    assert np.array_equal(np.asarray(got[True].ring), np.asarray(s_ref.ring))
+    assert not np.array_equal(np.asarray(got[False].ring),
+                              np.asarray(s_ref.ring)), (
+        "static forced-overflow run should have lost deliveries")
+
+
+def test_adaptive_distributed_equivalence_and_byte_savings():
+    """Tentpole, 8 fake devices: adaptive == static == single-host reference
+    bitwise (spike blocks AND rings) for {dense, routed} x {superstep,
+    legacy} x {event, scatter-routed}, with zero overflow in every adaptive
+    run; the static run's measured shipped bytes equal the static
+    accounting exactly, and the adaptive routed run ships strictly fewer
+    bytes than its static counterpart."""
+    print(_run("""
+        import numpy as np, jax
+        from repro.core.areas import mam_benchmark_spec, ring_area_adjacency
+        from repro.core.connectivity import build_network
+        from repro.core.engine import make_engine, EngineConfig
+        from repro.core.dist_engine import make_dist_engine
+
+        spec = mam_benchmark_spec(
+            n_areas=8, n_per_area=32, k_intra=4, k_inter=4, rate_hz=30.0,
+            area_adjacency=ring_area_adjacency(8, width=2))
+        net = build_network(spec, seed=12, size_multiple=8, outgoing=True)
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        ref = make_engine(net, spec, EngineConfig(
+            neuron_model="ignore_and_fire", schedule="conventional"))
+        s0 = ref.init()
+        blocks = []
+        for _ in range(6):
+            s0, b = ref.window(s0)
+            blocks.append(np.asarray(b))
+        ring_ref = np.asarray(s0.ring)
+        assert sum(b.sum() for b in blocks) > 0
+
+        shipped = {}
+        cells = [("dense", "event", None), ("routed", "event", None),
+                 ("routed", "event", False), ("routed", "scatter", None)]
+        for exch, backend, superstep in cells:
+            for adaptive in (False, True):
+                eng = make_dist_engine(net, spec, mesh, EngineConfig(
+                    neuron_model="ignore_and_fire",
+                    schedule="structure_aware", delivery_backend=backend,
+                    exchange=exch, s_max_floor=8, superstep=superstep,
+                    adaptive_exchange=adaptive))
+                st = eng.init()
+                for w in range(6):
+                    st, blk = eng.window(st)
+                    assert np.array_equal(
+                        np.asarray(blk).astype(bool), blocks[w]
+                    ), (exch, backend, superstep, adaptive, w)
+                assert np.array_equal(np.asarray(st.ring), ring_ref), (
+                    exch, backend, superstep, adaptive)
+                assert int(st.overflow) == 0, (exch, backend, adaptive)
+                shipped[(exch, backend, superstep, adaptive)] = float(
+                    st.shipped_bytes)
+                if not adaptive:
+                    # Static runs ship exactly what the static accounting
+                    # promises (6 windows of the Engine.wire_bytes total).
+                    want = 6 * eng.wire_bytes["total_bytes"]
+                    got = float(st.shipped_bytes)
+                    assert abs(got - want) <= 1e-6 * max(want, 1), (
+                        exch, backend, got, want)
+
+        # Conventional adaptive path (per-cycle two-phase exchange).
+        eng = make_dist_engine(net, spec, mesh, EngineConfig(
+            neuron_model="ignore_and_fire", schedule="conventional",
+            delivery_backend="event", s_max_floor=8,
+            adaptive_exchange=True))
+        st = eng.init()
+        for w in range(6):
+            st, blk = eng.window(st)
+            assert np.array_equal(np.asarray(blk).astype(bool), blocks[w]), w
+        assert np.array_equal(np.asarray(st.ring), ring_ref)
+        assert int(st.overflow) == 0
+
+        # Measured byte savings: adaptive routed < static routed.
+        st_static = shipped[("routed", "event", None, False)]
+        st_adapt = shipped[("routed", "event", None, True)]
+        assert st_adapt < st_static, (st_adapt, st_static)
+        print(f"OK routed shipped adaptive {st_adapt:,.0f} < "
+              f"static {st_static:,.0f}")
+    """))
+
+
+def test_adaptive_eliminates_forced_overflow_distributed():
+    """Satellite: the routed per-edge forced-overflow workload (rate 2000,
+    headroom 0, floor 1 -- the exact config the static suite uses to prove
+    spills are *visible*) runs overflow-free under adaptive mode with the
+    same seed and identical spike trains, bitwise equal to the single-host
+    reference."""
+    print(_run("""
+        import numpy as np, jax
+        from repro.core.areas import mam_benchmark_spec, ring_area_adjacency
+        from repro.core.connectivity import build_network
+        from repro.core.engine import make_engine, EngineConfig
+        from repro.core.dist_engine import make_dist_engine
+
+        adj = ring_area_adjacency(8, width=1)
+        spec = mam_benchmark_spec(n_areas=8, n_per_area=32, k_intra=4,
+                                  k_inter=4, rate_hz=2000.0,
+                                  area_adjacency=adj)
+        net = build_network(spec, seed=12, size_multiple=8, outgoing=True)
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        ref = make_engine(net, spec, EngineConfig(
+            neuron_model="ignore_and_fire", schedule="structure_aware"))
+        s_ref = ref.init()
+        for _ in range(5):
+            s_ref, _ = ref.window(s_ref)
+
+        got = {}
+        for adaptive in (False, True):
+            eng = make_dist_engine(net, spec, mesh, EngineConfig(
+                neuron_model="ignore_and_fire",
+                schedule="structure_aware", exchange="routed",
+                delivery_backend="event", s_max_headroom=0.0,
+                s_max_floor=1, adaptive_exchange=adaptive))
+            st = eng.init()
+            for _ in range(5):
+                st, _ = eng.window(st)
+            got[adaptive] = st
+        assert int(got[False].spike_count.sum()) > 0
+        assert int(got[False].overflow) > 0, (
+            "static floor=1 must spill on this workload")
+        assert int(got[True].overflow) == 0, (
+            "adaptive must eliminate the spill")
+        assert np.array_equal(np.asarray(got[True].spike_count),
+                              np.asarray(got[False].spike_count))
+        assert np.array_equal(np.asarray(got[True].ring),
+                              np.asarray(s_ref.ring)), (
+            "adaptive run must match the unconstrained reference bitwise")
+        print("OK")
+    """))
+
+
+def test_adaptive_single_group_mesh_runs_inprocess():
+    """A 1x1 mesh exercises the adaptive machinery (count collectives over
+    one device, ladder switches, offset-0 routed round) in-process, bitwise
+    against the single-host reference."""
+    import jax
+
+    from repro.core.areas import mam_benchmark_spec
+    from repro.core.connectivity import build_network
+    from repro.core.dist_engine import make_dist_engine
+    from repro.core.engine import EngineConfig, make_engine
+
+    spec = mam_benchmark_spec(n_areas=4, n_per_area=32, k_intra=4, k_inter=4,
+                              rate_hz=30.0)
+    net = build_network(spec, seed=12, size_multiple=8, outgoing=True)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    ref = make_engine(net, spec, EngineConfig(
+        neuron_model="ignore_and_fire", schedule="conventional"))
+    s0 = ref.init()
+    for exch in ("dense", "routed"):
+        eng = make_dist_engine(net, spec, mesh, EngineConfig(
+            neuron_model="ignore_and_fire", schedule="structure_aware",
+            delivery_backend="event", exchange=exch,
+            adaptive_exchange=True, s_max_floor=4))
+        assert eng.wire_bytes["adaptive_on"] is True
+        assert eng.wire_bytes["adaptive"]["applies"] is True
+        st = eng.init()
+        s_ref = s0
+        for w in range(4):
+            s_ref, blk_ref = ref.window(s_ref)
+            st, blk = eng.window(st)
+            assert np.array_equal(np.asarray(blk).astype(bool),
+                                  np.asarray(blk_ref)), (exch, w)
+        assert np.array_equal(np.asarray(st.ring), np.asarray(s_ref.ring))
+        assert int(st.overflow) == 0
+
+
+def test_adaptive_accounting_and_two_phase_cost():
+    """Host-only: the adaptive byte model reports both sizings coherently
+    (worst >= expected payload, savings positive when the static headroom
+    is large), and cost_model.exchange_time_s prices the two-phase trade:
+    one extra alpha dispatch, won back by the byte saving at scale."""
+    from repro.core import cost_model as cm
+    from repro.core import delivery
+    from repro.core import exchange as exchange_lib
+    from repro.core.areas import mam_benchmark_spec, ring_area_adjacency
+    from repro.core.connectivity import area_adjacency, build_network
+
+    spec = mam_benchmark_spec(n_areas=8, n_per_area=256, k_intra=8,
+                              k_inter=8,
+                              area_adjacency=ring_area_adjacency(8, width=2))
+    net = build_network(spec, seed=12, outgoing=True)
+    rep = exchange_lib.wire_report(
+        net, area_adjacency(net, spec), backend="event", n_groups=8, gsz=2,
+        headroom=8.0, floor=4)
+    for exch in ("dense", "routed"):
+        ad = rep[exch]["adaptive"]
+        assert ad["applies"]
+        assert ad["payload_bytes_worst"] >= ad["payload_bytes_expected"]
+        assert (ad["counts_bytes"] + ad["payload_bytes_expected"]
+                == ad["total_bytes_expected"])
+        assert ad["static_total_bytes"] == rep[exch]["total_bytes"]
+    # The routed sparse config must save (the bench assertion's twin).
+    assert rep["routed"]["adaptive"]["saved_bytes"] > 0
+
+    # Bit-packed dense backends have no id packets to size.
+    rep_sc = exchange_lib.wire_report(
+        net, area_adjacency(net, spec), backend="scatter", n_groups=8,
+        gsz=2, headroom=8.0, floor=4)
+    assert rep_sc["dense"]["adaptive"]["applies"] is False
+    assert rep_sc["routed"]["adaptive"]["applies"] is True
+
+    # Two-phase cost: an extra dispatch, cheaper overall when the payload
+    # saving dominates; never cheaper when nothing is saved.
+    mpi = cm.SUPERMUC_MPI
+    ad = rep["routed"]["adaptive"]
+    static_t = cm.exchange_time_s(0, ad["static_total_bytes"], 16, mpi)
+    two_t = cm.exchange_time_s(
+        ad["counts_bytes"], ad["payload_bytes_expected"], 16, mpi)
+    assert two_t == pytest.approx(
+        mpi.call_time_s(16, ad["counts_bytes"])
+        + mpi.call_time_s(16, ad["payload_bytes_expected"]))
+    assert cm.exchange_time_s(64, 1000, 16, mpi) > cm.exchange_time_s(
+        0, 1000, 16, mpi)
+    # At production-scale savings the two-phase exchange wins outright.
+    big_static = 140 * 2**20
+    big_adapt = 26 * 2**20
+    assert cm.exchange_time_s(340_000, big_adapt, 256, mpi) < (
+        cm.exchange_time_s(0, big_static, 256, mpi))
+    del delivery, static_t, two_t

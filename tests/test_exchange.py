@@ -536,6 +536,7 @@ def test_network_sds_outgoing_mirrors_build():
         t=s((), "int32"),
         spike_count=shard(s((A, n_pad), "int32"), st_specs.spike_count),
         overflow=s((), "int32"),
+        shipped_bytes=s((), "float32"),
     )
     nt_specs = network_pspecs(mesh, cfg.schedule, like=sds)
     net_in = jax.tree.map(
