@@ -21,13 +21,21 @@ import os
 import queue
 import shutil
 import threading
-from typing import Any
+import time
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["save", "restore", "latest_step", "AsyncWriter", "elastic_pod_resize"]
+__all__ = [
+    "save",
+    "restore",
+    "read_manifest",
+    "latest_step",
+    "AsyncWriter",
+    "elastic_pod_resize",
+]
 
 
 # numpy's savez cannot serialise ml_dtypes types (bf16, fp8); store them as
@@ -62,7 +70,12 @@ def save(directory: str, step: int, tree: Any, *, extra: dict | None = None) -> 
     """Synchronous atomic save. Returns the checkpoint path."""
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = final + ".tmp"
-    os.makedirs(tmp, exist_ok=True)
+    # A leftover .tmp from a crashed writer must not leak stale files into
+    # this write: the atomic rename would promote whatever the dead writer
+    # left behind alongside the fresh arrays.
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
     arrays, dtypes = _flatten(tree)
     np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
     treedef = jax.tree_util.tree_structure(tree)
@@ -93,6 +106,22 @@ def latest_step(directory: str) -> int | None:
     return max(steps) if steps else None
 
 
+def read_manifest(directory: str, step: int | None = None) -> tuple[dict, int]:
+    """Read a checkpoint's manifest without loading its arrays.
+
+    The cheap pre-flight for resume paths: config hashes, mesh metadata and
+    window-phase records live in ``manifest['extra']``, so compatibility can
+    be checked (and a clear error raised) before any state is materialised.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}", "manifest.json")
+    with open(path) as f:
+        return json.load(f), step
+
+
 def restore(directory: str, like: Any, step: int | None = None) -> tuple[Any, int]:
     """Restore into the structure of ``like`` (shape/dtype validated)."""
     if step is None:
@@ -120,11 +149,32 @@ def restore(directory: str, like: Any, step: int | None = None) -> tuple[Any, in
 
 
 class AsyncWriter:
-    """Background checkpoint writer with a bounded queue (backpressure)."""
+    """Background checkpoint writer with a bounded queue (backpressure).
 
-    def __init__(self, directory: str, keep: int = 3):
+    Transient I/O failures (``OSError``: full disks, flaky network mounts,
+    preempted blob stores) are retried up to ``retries`` times with
+    exponential backoff before the error is surfaced on the next
+    ``submit``/``close`` -- a long run should degrade through a hiccup, not
+    die on it. ``save_fn`` injects the underlying writer (the fault-injection
+    harness in :mod:`repro.core.faults` uses it to exercise the retry path
+    deterministically).
+    """
+
+    def __init__(
+        self,
+        directory: str,
+        keep: int = 3,
+        *,
+        retries: int = 3,
+        backoff_s: float = 0.05,
+        save_fn: Callable[..., str] | None = None,
+    ):
         self.directory = directory
         self.keep = keep
+        self.retries = retries
+        self.backoff_s = backoff_s
+        self.retry_count = 0  # total transient failures retried (observability)
+        self._save = save_fn or save
         self._q: queue.Queue = queue.Queue(maxsize=2)
         self._worker = threading.Thread(target=self._run, daemon=True)
         self._worker.start()
@@ -137,17 +187,37 @@ class AsyncWriter:
                 return
             step, host_tree, extra = item
             try:
-                save(self.directory, step, host_tree, extra=extra)
+                self._save_with_retry(step, host_tree, extra)
                 self._gc()
             except Exception as e:  # surfaced on next submit/close
                 self._errors.append(e)
             finally:
                 self._q.task_done()
 
+    def _save_with_retry(self, step: int, host_tree: Any, extra) -> None:
+        for attempt in range(self.retries + 1):
+            try:
+                self._save(self.directory, step, host_tree, extra=extra)
+                return
+            except OSError:
+                if attempt == self.retries:
+                    raise  # retries exhausted: surface on next submit/close
+                self.retry_count += 1
+                time.sleep(self.backoff_s * (2 ** attempt))
+
     def _gc(self) -> None:
+        entries = os.listdir(self.directory)
+        # Sweep orphaned .tmp dirs (a crashed writer's partial output) so a
+        # resumed run's directory converges back to `keep` clean checkpoints.
+        # Anything .tmp here is dead: this worker writes serially, so no
+        # in-flight write of our own can be visible during _gc.
+        for d in entries:
+            if d.startswith("step_") and d.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.directory, d),
+                              ignore_errors=True)
         steps = sorted(
             int(d.split("_")[1])
-            for d in os.listdir(self.directory)
+            for d in entries
             if d.startswith("step_") and not d.endswith(".tmp")
         )
         for s in steps[: -self.keep]:

@@ -287,6 +287,18 @@ def make_dist_engine(
     def window(state: SimState):
         return window_sm(state, net, gids_global)
 
+    state_shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), st_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+    def shard_state(state: SimState) -> SimState:
+        """Scatter a host/global SimState over the mesh (checkpoint restore:
+        the state layout is area-keyed and global, so the same arrays place
+        onto any group count -- elastic reshard-restart is this device_put
+        plus the re-cut inter tables above)."""
+        return jax.device_put(state, state_shardings)
+
     def init() -> SimState:
         if cfg.neuron_model == "lif":
             nstate = neuron_lib.lif_init((A, n_pad))
@@ -302,11 +314,7 @@ def make_dist_engine(
             overflow=jnp.int32(0),
             shipped_bytes=jnp.float32(0),
         )
-        shardings = jax.tree.map(
-            lambda s: NamedSharding(mesh, s), st_specs,
-            is_leaf=lambda x: isinstance(x, P),
-        )
-        return jax.device_put(state, shardings)
+        return shard_state(state)
 
     @functools.partial(jax.jit, static_argnums=1)
     def run(state: SimState, n_windows: int):
@@ -318,4 +326,5 @@ def make_dist_engine(
 
     return Engine(init=init, window=window, run=run, config=cfg,
                   delay_ratio=D, window_raw=window_sm,
-                  wire_bytes=exchange.wire_bytes(net))
+                  wire_bytes=exchange.wire_bytes(net),
+                  shard_state=shard_state)

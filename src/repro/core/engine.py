@@ -34,6 +34,7 @@ from repro.core.areas import MultiAreaSpec
 from repro.core.connectivity import Network
 from repro.core import delivery as delivery_lib
 from repro.core import exchange as exchange_lib
+from repro.core import faults as faults_lib
 from repro.core import neuron as neuron_lib
 from repro.core import schedule as schedule_lib
 from repro.core.schedule import CONVENTIONAL, STRUCTURE_AWARE, SimState
@@ -126,6 +127,13 @@ class EngineConfig:
     # unfused event engine are therefore guaranteed only while the unfused
     # engine reports overflow == 0 (its own exactness condition anyway).
     superstep_kernel: bool = False
+    # Host-side fault-injection plan (repro.core.faults.FaultConfig): per-
+    # device compute jitter slept at window boundaries, transient
+    # checkpoint-write failures, simulated preemption. Consumed by the
+    # windowed run loop (schedule.run_windows) only -- nothing here is
+    # traced into the jitted window body, so the trajectory is untouched;
+    # None injects nothing.
+    faults: faults_lib.FaultConfig | None = None
 
     def __post_init__(self) -> None:
         if self.neuron_model not in ("lif", "ignore_and_fire"):
@@ -199,6 +207,11 @@ class Engine(NamedTuple):
     # Static mesh-total wire bytes per window of the selected exchange
     # (repro.core.exchange; all zeros for the single-host LocalExchange).
     wire_bytes: dict | None = None
+    # Distributed engines: device_put a host/global SimState onto this
+    # engine's mesh with the schedule's shardings -- the re-scatter half of
+    # checkpoint restore (incl. elastic reshard onto a different group
+    # count). None for the single-host engine (restore needs no placement).
+    shard_state: Callable | None = None
 
 
 def make_fused_lif_update(params: neuron_lib.LIFParams):

@@ -31,6 +31,9 @@ __all__ = [
     "round_robin_placement",
     "structure_aware_placement",
     "elastic_reshard_plan",
+    "placement_from_sizes",
+    "reshard_area_order",
+    "reshard_moves",
 ]
 
 
@@ -154,3 +157,66 @@ def elastic_reshard_plan(
     for a in range(old.n_areas):
         plan[a] = (old.group_of_area(a), a // per)
     return plan
+
+
+def placement_from_sizes(
+    area_sizes: tuple[int, ...] | list[int],
+    n_groups: int,
+    *,
+    n_pad: int,
+    group_size: int = 1,
+) -> StructureAwarePlacement:
+    """A placement from already-built network metadata (no MultiAreaSpec).
+
+    Checkpoint resume works from a manifest + an instantiated ``Network``
+    (area sizes = live-neuron counts, ``n_pad`` already fixed), not from the
+    original spec; this constructor lets the resume path build the *old*
+    placement recorded in the manifest and plan the elastic re-mesh.
+    """
+    n_areas = len(area_sizes)
+    if n_areas % n_groups != 0:
+        raise ValueError(
+            f"n_areas={n_areas} not divisible by n_groups={n_groups}")
+    return StructureAwarePlacement(
+        n_groups=n_groups,
+        group_size=group_size,
+        areas_per_group=n_areas // n_groups,
+        n_pad=n_pad,
+        area_sizes=tuple(int(s) for s in area_sizes),
+    )
+
+
+def reshard_area_order(plan: dict[int, tuple[int, int]]) -> np.ndarray:
+    """Global area order implied by a reshard plan (new-group-major).
+
+    The gather/re-scatter step of elastic resume: per-area state rows are
+    re-laid-out so that each *new* group's areas are contiguous (ties broken
+    by area id, matching ``StructureAwarePlacement.areas_of_group``). For the
+    contiguous plans :func:`elastic_reshard_plan` emits this is the identity
+    permutation -- asserted by the resume tests, since any non-identity
+    order here would have to be applied to the inter-table shard cut too.
+    """
+    areas = np.arange(len(plan))
+    new_groups = np.asarray([plan[int(a)][1] for a in areas])
+    return areas[np.argsort(new_groups, kind="stable")]
+
+
+def reshard_moves(plan: dict[int, tuple[int, int]]) -> int:
+    """How many areas change device group under the plan.
+
+    Group ids are renumbered when the group count changes, so "moved" means
+    the area's *peer set* changed: the set of areas co-hosted with it differs
+    between the old and new placement. This is the data-movement count an
+    elastic restart actually pays (areas whose whole group maps 1:1 onto a
+    new group need no cross-device traffic).
+    """
+    old_peers: dict[int, list[int]] = {}
+    new_peers: dict[int, list[int]] = {}
+    for a, (og, ng) in plan.items():
+        old_peers.setdefault(og, []).append(a)
+        new_peers.setdefault(ng, []).append(a)
+    moved = 0
+    for a, (og, ng) in plan.items():
+        if old_peers[og] != new_peers[ng]:
+            moved += 1
+    return moved

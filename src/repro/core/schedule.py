@@ -30,20 +30,31 @@ pin that across schedules, backends, exchanges and meshes.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
+import time
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core import faults as faults_lib
 from repro.core import neuron as neuron_lib
+from repro.core import partition as partition_lib
 from repro.core import ring_buffer
 
 __all__ = [
     "CONVENTIONAL",
     "STRUCTURE_AWARE",
     "SimState",
+    "SimCheckpointer",
+    "RunResult",
     "make_update_fn",
     "make_window_fn",
+    "restore_sim",
+    "resume_config_hash",
+    "run_windows",
 ]
 
 CONVENTIONAL = "conventional"
@@ -232,3 +243,315 @@ def make_window_fn(
             shipped_bytes=state.shipped_bytes + d_ship), block
 
     return window
+
+
+# ---------------------------------------------------------------------------
+# Windowed checkpoint / resume / fault-tolerant run loop
+# ---------------------------------------------------------------------------
+#
+# Checkpoints are only taken at *window boundaries*: there t ≡ 0 (mod D), the
+# live window buffer is merged back and the ring's phase alignment
+# (ring_len ≡ 0 mod D) is the same invariant a fresh init satisfies, so a
+# restored SimState re-enters the superstep exactly where an uninterrupted
+# run would. The external drive is a counter-based pure function of
+# (seed, t, gid) -- the "RNG state" is fully captured by recording the seed
+# and the absolute cycle index t in the manifest -- which is what makes
+# resume *bitwise* identical rather than statistically identical.
+#
+# State arrays are keyed by area in global layout ([A, n_pad, ...]), so a
+# checkpoint gathered to host memory is mesh-independent: restoring onto a
+# different group count is gather -> (re-order per the elastic reshard plan,
+# the identity for contiguous plans) -> re-scatter through the new engine's
+# shardings, while make_dist_engine re-cuts the inter receive tables for the
+# new mesh via connectivity.shard_inter_tables.
+
+
+def resume_config_hash(cfg, net, *, exchange: str | None = None):
+    """``(hash, payload)`` identifying what a checkpoint can resume into.
+
+    Covers everything that changes the *trajectory* (neuron model, schedule,
+    exchange, adaptive flag, delivery backend, seed, packet bounds) plus the
+    network invariants a SimState's shapes encode (D, ring length, area
+    grid). Deliberately excludes the mesh shape: elastic reshard-restart
+    resumes the same config on a different group count. ``exchange``
+    overrides ``cfg.exchange`` so launchers can hash the requested exchange
+    independently of how it resolves for the current device count.
+    """
+    payload = {
+        "neuron_model": cfg.neuron_model,
+        "schedule": cfg.schedule,
+        "exchange": cfg.exchange if exchange is None else exchange,
+        "adaptive_exchange": bool(cfg.adaptive_exchange),
+        "delivery_backend": cfg.backend,
+        "seed": int(cfg.seed),
+        "s_max_headroom": float(cfg.s_max_headroom),
+        "s_max_floor": int(cfg.s_max_floor),
+        "delay_ratio": int(net.delay_ratio),
+        "ring_len": int(net.ring_len),
+        "n_areas": int(net.n_areas),
+        "n_pad": int(net.n_pad),
+    }
+    digest = hashlib.sha256(
+        json.dumps(payload, sort_keys=True).encode()).hexdigest()[:16]
+    return digest, payload
+
+
+class SimCheckpointer:
+    """Windowed SimState checkpointing through ``checkpoint.AsyncWriter``.
+
+    ``save`` submits the full SimState pytree (neuron state, phase-aligned
+    rings, ``t``, ``spike_count``, ``overflow``, ``shipped_bytes``) with a
+    manifest recording the window phase, seed (the drive's RNG state), the
+    group count the run executed on, and the resume-config hash. The step id
+    is the count of *completed windows* (``t // D``), so ``latest_step`` is
+    directly "how far did the dead run get".
+    """
+
+    def __init__(
+        self,
+        directory: str,
+        engine,
+        net,
+        *,
+        every: int = 50,
+        keep: int = 3,
+        exchange: str | None = None,
+        n_groups: int = 1,
+        injector: faults_lib.FaultInjector | None = None,
+        retries: int = 3,
+        backoff_s: float = 0.05,
+    ):
+        from repro.checkpoint import manager as ckpt_manager
+
+        self.directory = directory
+        self.every = every
+        self.delay_ratio = int(engine.delay_ratio)
+        self.seed = int(engine.config.seed)
+        self.n_groups = int(n_groups)
+        self.config_hash, self.config_payload = resume_config_hash(
+            engine.config, net, exchange=exchange)
+        save_fn = None
+        if injector is not None and injector.cfg.ckpt_write_failures > 0:
+            save_fn = injector.wrap_save(ckpt_manager.save)
+        self.writer = ckpt_manager.AsyncWriter(
+            directory, keep=keep, retries=retries, backoff_s=backoff_s,
+            save_fn=save_fn)
+        self.saved_windows: list[int] = []
+
+    def maybe_save(self, state: SimState, window: int | None = None) -> int | None:
+        """Cadence hook: save when the completed-window count hits `every`.
+
+        Pass ``window`` (the caller's host-side completed-window count) to
+        keep the off-cadence path free of device syncs -- reading
+        ``state.t`` forces a transfer every window, which is exactly the
+        overhead budget checkpointing must not spend.
+        """
+        w = int(state.t) // self.delay_ratio if window is None else int(window)
+        if self.every > 0 and w > 0 and w % self.every == 0:
+            return self.save(state)
+        return None
+
+    def save(self, state: SimState) -> int:
+        """Submit a window-boundary checkpoint; returns the step id."""
+        t = int(state.t)
+        if t % self.delay_ratio != 0:
+            raise ValueError(
+                f"checkpoint requested mid-window (t={t}, D="
+                f"{self.delay_ratio}): only window boundaries keep the ring "
+                f"phase alignment a resumed superstep needs")
+        w = t // self.delay_ratio
+        if self.saved_windows and self.saved_windows[-1] == w:
+            return w  # boundary already checkpointed (cadence + preemption)
+        ring_len = int(state.ring.shape[-1])
+        extra = {
+            "kind": "simstate",
+            "t": t,
+            "window": w,
+            "window_phase": 0,
+            "delay_ratio": self.delay_ratio,
+            "ring_len": ring_len,
+            "ring_phase": t % ring_len,
+            "seed": self.seed,
+            "n_groups": self.n_groups,
+            "config_hash": self.config_hash,
+            "config": self.config_payload,
+        }
+        self.writer.submit(w, state, extra=extra)
+        self.saved_windows.append(w)
+        return w
+
+    @property
+    def retry_count(self) -> int:
+        return self.writer.retry_count
+
+    def close(self) -> None:
+        self.writer.close()
+
+
+def _permute_areas(state: SimState, order: np.ndarray) -> SimState:
+    """Re-order the per-area leading axis of every area-keyed leaf."""
+    n_areas = int(state.spike_count.shape[0])
+    idx = jnp.asarray(order, dtype=jnp.int32)
+
+    def permute(x):
+        if hasattr(x, "ndim") and x.ndim >= 2 and x.shape[0] == n_areas:
+            return jnp.take(x, idx, axis=0)
+        return x
+
+    return jax.tree.map(permute, state)
+
+
+def restore_sim(
+    directory: str,
+    engine,
+    net,
+    *,
+    step: int | None = None,
+    exchange: str | None = None,
+    n_groups: int = 1,
+):
+    """Restore a SimState checkpoint into ``engine``, resharding if needed.
+
+    Fails fast -- before any array is materialised -- when the checkpoint's
+    resume-config hash differs from the current run's (clear field-by-field
+    error instead of a deep shape mismatch), or when its recorded window
+    phase is unaligned. If the checkpoint was taken on a different group
+    count, the elastic reshard plan
+    (:func:`repro.core.partition.elastic_reshard_plan`) validates the
+    re-mesh, the per-area state rows are re-ordered per the plan (identity
+    for contiguous plans), and the new engine's ``shard_state`` re-scatters
+    them over the new mesh. Returns ``(state, info)`` where ``info`` carries
+    the manifest, resumed step and reshard accounting.
+    """
+    from repro.checkpoint import manager as ckpt_manager
+
+    manifest, step = ckpt_manager.read_manifest(directory, step)
+    extra = manifest.get("extra", {})
+    expect_hash, payload = resume_config_hash(
+        engine.config, net, exchange=exchange)
+    got_hash = extra.get("config_hash")
+    if got_hash is not None and got_hash != expect_hash:
+        old = extra.get("config", {})
+        diffs = [
+            f"  {k}: checkpoint={old.get(k)!r} != run={v!r}"
+            for k, v in payload.items() if old.get(k) != v
+        ] or [f"  config hash {got_hash} != {expect_hash}"]
+        raise ValueError(
+            "checkpoint is incompatible with this run's config -- resuming "
+            "would not reproduce the uninterrupted trajectory:\n"
+            + "\n".join(diffs))
+    if extra.get("window_phase", 0) != 0:
+        raise ValueError(
+            f"checkpoint at step {step} is not window-phase aligned "
+            f"(window_phase={extra.get('window_phase')}); only "
+            f"window-boundary checkpoints can resume the D-cycle superstep")
+
+    state, _ = ckpt_manager.restore(directory, like=engine.init(), step=step)
+
+    old_groups = int(extra.get("n_groups", n_groups))
+    reshard_info = None
+    if n_groups != old_groups:
+        sizes = np.asarray(net.alive).sum(axis=1).astype(int)
+        placement = partition_lib.placement_from_sizes(
+            sizes, old_groups, n_pad=int(net.n_pad))
+        # Raises (fail fast) when the areas cannot rebalance onto n_groups.
+        plan = partition_lib.elastic_reshard_plan(placement, n_groups)
+        order = partition_lib.reshard_area_order(plan)
+        if not np.array_equal(order, np.arange(order.size)):
+            state = _permute_areas(state, order)
+        reshard_info = {
+            "old_n_groups": old_groups,
+            "new_n_groups": n_groups,
+            "moved_areas": partition_lib.reshard_moves(plan),
+        }
+    if engine.shard_state is not None:
+        state = engine.shard_state(state)
+    return state, {"step": step, "manifest": manifest,
+                   "reshard": reshard_info}
+
+
+@dataclasses.dataclass
+class RunResult:
+    """Outcome of :func:`run_windows` (also returned inside ``Preempted``)."""
+
+    state: SimState
+    spikes_per_window: np.ndarray   # [windows_done] int64
+    window_times_s: np.ndarray      # wall per window, incl. injected jitter
+    windows_done: int               # completed in THIS call
+    injected_sleep_s: float = 0.0
+
+
+def run_windows(
+    engine,
+    state: SimState,
+    n_windows: int,
+    *,
+    checkpointer: SimCheckpointer | None = None,
+    faults: "faults_lib.FaultConfig | faults_lib.FaultInjector | None" = None,
+    on_window: Callable[[int, SimState], None] | None = None,
+) -> RunResult:
+    """The engines' resilient run loop: windowed, checkpointed, fault-aware.
+
+    ``Engine.run`` is the fast path -- one jitted scan, no host control in
+    between. This loop trades one dispatch per window for window-boundary
+    control, which is exactly where checkpoints are phase-safe: after every
+    window it blocks on the state, submits a checkpoint when the cadence
+    fires, injects configured faults, and stops SIGTERM-style on simulated
+    preemption (writing a final checkpoint first, then raising
+    :class:`repro.core.faults.Preempted` with the result attached as
+    ``exc.result``). Works unchanged for the single-host and distributed
+    engines -- both assemble their window from this module.
+
+    ``faults`` defaults to ``engine.config.faults``; pass an injector to
+    share fault state (e.g. the transient-write budget also wired into the
+    checkpointer) across resume legs.
+    """
+    fault_arg = faults if faults is not None else getattr(
+        engine.config, "faults", None)
+    if isinstance(fault_arg, faults_lib.FaultInjector):
+        injector = fault_arg
+    elif fault_arg is not None and fault_arg.any_enabled:
+        injector = faults_lib.FaultInjector(
+            fault_arg, n_devices=jax.device_count(),
+            delay_ratio=engine.delay_ratio)
+    else:
+        injector = None
+
+    D = int(engine.delay_ratio)
+    w_done = int(jax.device_get(state.t)) // D  # absolute windows completed
+    spikes: list[int] = []
+    times: list[float] = []
+    slept = 0.0
+
+    def result() -> RunResult:
+        return RunResult(
+            state=state,
+            spikes_per_window=np.asarray(spikes, dtype=np.int64),
+            window_times_s=np.asarray(times, dtype=np.float64),
+            windows_done=len(times),
+            injected_sleep_s=slept,
+        )
+
+    for _ in range(n_windows):
+        t0 = time.perf_counter()
+        state, block = engine.window(state)
+        jax.block_until_ready(state.ring)
+        w_done += 1
+        if injector is not None:
+            slept += injector.sleep(w_done)
+        times.append(time.perf_counter() - t0)
+        spikes.append(int(np.asarray(jnp.sum(block.astype(jnp.int32)))))
+        if checkpointer is not None:
+            checkpointer.maybe_save(state, window=w_done)
+        if on_window is not None:
+            on_window(w_done, state)
+        if injector is not None and injector.preempt_now(w_done):
+            path = None
+            if checkpointer is not None:
+                checkpointer.save(state)   # the SIGTERM-grace checkpoint
+                checkpointer.close()
+                path = checkpointer.directory
+            exc = faults_lib.Preempted(w_done, path)
+            exc.result = result()
+            raise exc
+    return result()

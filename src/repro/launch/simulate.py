@@ -30,6 +30,8 @@ from repro.core.areas import mam_benchmark_spec, mam_spec
 from repro.core.connectivity import area_adjacency, build_network
 from repro.core.engine import EngineConfig, make_engine
 from repro.core import exchange as exchange_lib
+from repro.core import faults as faults_lib
+from repro.core import schedule as schedule_lib
 
 
 def _time_loop(fn, *args, repeats: int = 3):
@@ -210,6 +212,85 @@ def _pick_mesh(n_dev: int, n_areas: int, n_pad: int):
     return None
 
 
+def _run_resilient(args, eng, net, mesh, exchange, n_windows):
+    """The checkpointed/fault-injected leg of a run (schedule.run_windows).
+
+    Resumes from ``--checkpoint-dir`` when asked (elastically resharding if
+    the group count changed since the checkpoint was taken), wires the fault
+    injector into both the run loop and the checkpoint writer, and converts
+    simulated preemption into a clean exit with a resume hint. Returns
+    ``(state, wall_s, windows_run)`` for the shared reporting path.
+    """
+    n_groups = int(mesh.shape["data"]) if mesh is not None else 1
+    fault_cfg = faults_lib.parse_fault_specs(args.inject_fault,
+                                             seed=args.seed)
+    injector = None
+    if fault_cfg.any_enabled:
+        injector = faults_lib.FaultInjector(
+            fault_cfg, n_devices=jax.device_count(),
+            delay_ratio=eng.delay_ratio)
+        if fault_cfg.jitter_enabled:
+            print(f"  fault injection: per-device jitter mu="
+                  f"{fault_cfg.jitter_mu_ms} ms sigma="
+                  f"{fault_cfg.jitter_sigma_ms} ms/cycle -> predicted "
+                  f"straggler overhead "
+                  f"{injector.predicted_jitter_s() * 1e3:.2f} ms/window "
+                  f"(order-statistics sync model)")
+    start_w = 0
+    if args.resume:
+        st, info = schedule_lib.restore_sim(
+            args.checkpoint_dir, eng, net, exchange=exchange,
+            n_groups=n_groups)
+        start_w = int(info["step"])
+        resh = info["reshard"]
+        if resh is not None:
+            print(f"  resumed window {start_w} from {args.checkpoint_dir}: "
+                  f"elastic reshard {resh['old_n_groups']} -> "
+                  f"{resh['new_n_groups']} groups "
+                  f"({resh['moved_areas']} areas re-homed)")
+        else:
+            print(f"  resumed window {start_w} from {args.checkpoint_dir} "
+                  f"on {n_groups} group(s)")
+    else:
+        st = eng.init()
+    ckpt = None
+    if args.checkpoint_dir:
+        ckpt = schedule_lib.SimCheckpointer(
+            args.checkpoint_dir, eng, net, every=args.checkpoint_every,
+            keep=args.checkpoint_keep, exchange=exchange,
+            n_groups=n_groups, injector=injector)
+    remaining = n_windows - start_w
+    if remaining <= 0:
+        raise SystemExit(
+            f"checkpoint already covers {start_w} windows >= the requested "
+            f"{n_windows}; increase --t-ms or start a fresh run")
+    # A throwaway compile window would advance the trajectory, so the
+    # resilient leg pays compilation inside its first timed window.
+    try:
+        res = schedule_lib.run_windows(
+            eng, st, remaining, checkpointer=ckpt, faults=injector)
+    except faults_lib.Preempted as exc:
+        leg = exc.result.windows_done
+        print(f"  PREEMPTED after window {exc.window} ({leg} this leg); "
+              f"checkpoint written to {exc.checkpoint_path} -- resume with "
+              f"--resume --checkpoint-dir {exc.checkpoint_path}")
+        raise SystemExit(0)
+    if ckpt is not None:
+        ckpt.close()
+        if ckpt.retry_count:
+            print(f"  checkpoint writer retried {ckpt.retry_count} "
+                  f"transient write failure(s)")
+        if ckpt.saved_windows:
+            print(f"  checkpoints at windows {ckpt.saved_windows} "
+                  f"(every {args.checkpoint_every}, "
+                  f"keep {args.checkpoint_keep})")
+    if res.injected_sleep_s:
+        print(f"  injected jitter: {res.injected_sleep_s:.3f} s total, "
+              f"measured {res.injected_sleep_s / res.windows_done * 1e3:.2f} "
+              f"ms/window over {res.windows_done} windows")
+    return res.state, float(res.window_times_s.sum()), res.windows_done
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--model", default="mam_benchmark",
@@ -257,7 +338,40 @@ def main() -> None:
                     help="report per-phase timings (ring read/clear, update, "
                          "intra/inter deliver) and the dense-vs-routed wire "
                          "volume before the run")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="window-boundary SimState checkpoints through "
+                         "checkpoint.AsyncWriter land here; enables the "
+                         "resilient windowed run loop")
+    ap.add_argument("--checkpoint-every", type=int, default=50,
+                    help="checkpoint cadence in completed windows "
+                         "(default 50)")
+    ap.add_argument("--checkpoint-keep", type=int, default=3,
+                    help="retain this many newest checkpoints (default 3)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest checkpoint from "
+                         "--checkpoint-dir and continue -- bitwise-identical "
+                         "to the uninterrupted run, elastically resharding "
+                         "when the group count changed")
+    ap.add_argument("--inject-fault", action="append", default=[],
+                    metavar="SPEC",
+                    help="deterministic fault injection (repeatable): "
+                         "'jitter:mu_ms=1.6,sigma_ms=0.3[,rho=R][,devices=N]'"
+                         " per-device compute jitter, "
+                         "'ckpt-io:fails=K' transient checkpoint-write "
+                         "failures, 'preempt:window=W' SIGTERM-style stop "
+                         "after W completed windows")
+    ap.add_argument("--spikes-out", default=None,
+                    help="write the final per-neuron spike_count to this "
+                         ".npz (CI resume-equality checks)")
     args = ap.parse_args()
+
+    resilient = bool(args.checkpoint_dir or args.resume or args.inject_fault)
+    if resilient and (args.compare or args.compare_adaptive):
+        raise SystemExit(
+            "--checkpoint-dir/--resume/--inject-fault run one trajectory; "
+            "they cannot be combined with --compare/--compare-adaptive")
+    if args.resume and not args.checkpoint_dir:
+        raise SystemExit("--resume needs --checkpoint-dir")
 
     if args.model == "mam":
         spec = mam_spec(scale=args.scale)
@@ -326,18 +440,23 @@ def main() -> None:
                 eng = make_dist_engine(net, spec, mesh, cfg)
             else:
                 eng = make_engine(net, spec, cfg)
-            st = eng.init()
             n_windows = spec.steps_for(args.t_ms) // spec.delay_ratio
-            st, _ = eng.window(st)  # compile
-            jax.block_until_ready(st.ring)
-            t0 = time.perf_counter()
-            st, per_win = eng.run(st, n_windows - 1)
-            jax.block_until_ready(st.ring)
-            wall = time.perf_counter() - t0
+            if resilient:
+                st, wall, windows_run = _run_resilient(
+                    args, eng, net, mesh, exchange, n_windows)
+            else:
+                st = eng.init()
+                st, _ = eng.window(st)  # compile
+                jax.block_until_ready(st.ring)
+                t0 = time.perf_counter()
+                st, per_win = eng.run(st, n_windows - 1)
+                jax.block_until_ready(st.ring)
+                wall = time.perf_counter() - t0
+                windows_run = n_windows - 1
             t_s = float(st.t) * spec.dt_ms / 1000.0
             rate = float(st.spike_count.sum()) / (spec.n_total * t_s)
             rtf = wall / (
-                (n_windows - 1) * spec.delay_ratio * spec.dt_ms / 1000)
+                max(windows_run, 1) * spec.delay_ratio * spec.dt_ms / 1000)
             overflow = int(st.overflow)
             wire = eng.wire_bytes or {}
             wire_s = (f", {wire['total_bytes']:,} wire B/window (static)"
@@ -358,6 +477,11 @@ def main() -> None:
                     "adaptive exchange reported nonzero overflow -- the "
                     "two-phase sizing is broken (this must be impossible)")
             spikes[(sched, adaptive)] = np.asarray(st.spike_count)
+            if args.spikes_out:
+                np.savez(args.spikes_out,
+                         spike_count=np.asarray(st.spike_count),
+                         t=int(st.t))
+                print(f"  spike counts -> {args.spikes_out}")
 
     if args.compare:
         for adaptive in adaptives:

@@ -65,6 +65,75 @@ def test_atomicity_no_tmp_left_behind(tmp_path, tree):
     assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
 
 
+def test_save_removes_stale_tmp(tmp_path, tree):
+    """A crashed writer's leftover .tmp must not leak files into a fresh
+    save of the same step -- the atomic rename would promote them."""
+    stale = tmp_path / "step_00000007.tmp"
+    stale.mkdir()
+    (stale / "stale_garbage.bin").write_bytes(b"junk")
+    path = ckpt.save(str(tmp_path), 7, tree)
+    assert sorted(os.listdir(path)) == ["arrays.npz", "manifest.json"]
+    restored, _ = ckpt.restore(str(tmp_path), like=tree, step=7)
+    assert np.array_equal(np.asarray(restored["params"]["w"]),
+                          np.asarray(tree["params"]["w"]))
+
+
+def test_async_writer_sweeps_orphaned_tmp(tmp_path, tree):
+    """AsyncWriter GC removes dead .tmp dirs (crashed-writer partial output)
+    so a resumed run's directory converges to `keep` clean checkpoints."""
+    orphan = tmp_path / "step_00000001.tmp"
+    orphan.mkdir()
+    (orphan / "partial.npz").write_bytes(b"dead")
+    w = ckpt.AsyncWriter(str(tmp_path), keep=2)
+    w.submit(2, tree)
+    w.close()
+    assert not orphan.exists()
+    assert ckpt.latest_step(str(tmp_path)) == 2
+
+
+def test_async_writer_retries_transient_oserror(tmp_path, tree):
+    """The first two writes fail with OSError; the bounded-retry path must
+    absorb them (run completes, checkpoint lands, retries counted)."""
+    fails = {"left": 2}
+
+    def flaky(directory, step, t, *, extra=None):
+        if fails["left"] > 0:
+            fails["left"] -= 1
+            raise OSError("transient blob-store hiccup")
+        return ckpt.save(directory, step, t, extra=extra)
+
+    w = ckpt.AsyncWriter(str(tmp_path), retries=3, backoff_s=0.01,
+                         save_fn=flaky)
+    w.submit(1, tree)
+    w.close()
+    assert w.retry_count == 2
+    assert ckpt.latest_step(str(tmp_path)) == 1
+
+
+def test_async_writer_surfaces_exhausted_retries(tmp_path, tree):
+    """Past the retry budget the error must surface on close (or the next
+    submit), never pass silently."""
+
+    def always_fail(directory, step, t, *, extra=None):
+        raise OSError("disk is gone")
+
+    w = ckpt.AsyncWriter(str(tmp_path), retries=1, backoff_s=0.01,
+                         save_fn=always_fail)
+    w.submit(1, tree)
+    with pytest.raises(OSError, match="disk is gone"):
+        w.close()
+    assert w.retry_count == 1
+
+
+def test_read_manifest_without_loading_arrays(tmp_path, tree):
+    ckpt.save(str(tmp_path), 3, tree, extra={"config_hash": "abc123"})
+    manifest, step = ckpt.read_manifest(str(tmp_path))
+    assert step == 3
+    assert manifest["extra"]["config_hash"] == "abc123"
+    with pytest.raises(FileNotFoundError):
+        ckpt.read_manifest(str(tmp_path / "missing"))
+
+
 def test_snn_state_checkpoint_resume(tmp_path):
     """Simulation fault tolerance: checkpoint SimState mid-run, restore, and
     continue -- the resumed trajectory is bit-identical to an uninterrupted

@@ -1,0 +1,371 @@
+"""Preemption tolerance: windowed checkpoint/resume, elastic reshard, faults.
+
+The contract under test: a run killed at any window boundary and resumed from
+its checkpoint -- on the same mesh or an elastically resharded one -- is
+bitwise identical to the uninterrupted run, and the fault harness's injected
+conditions (compute jitter, transient checkpoint-write failures, simulated
+preemption) are deterministic and survivable. Distributed legs run in
+subprocesses with forced host device counts, per the launch contract.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import faults as faults_lib
+from repro.core import schedule as schedule_lib
+from repro.core.areas import mam_benchmark_spec
+from repro.core.connectivity import build_network
+from repro.core.engine import EngineConfig, make_engine
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str, n_devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=540,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+def _quick_engine(**cfg_kw):
+    spec = mam_benchmark_spec(n_areas=2, n_per_area=32, k_intra=4, k_inter=4)
+    net = build_network(spec, seed=12, outgoing=True)
+    cfg = EngineConfig(neuron_model="lif", delivery_backend="event",
+                       s_max_floor=4, **cfg_kw)
+    return make_engine(net, spec, cfg), net
+
+
+# ---------------------------------------------------------------------------
+# windowed checkpoint / resume (single device)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("superstep", [True, False],
+                         ids=["superstep", "legacy"])
+@pytest.mark.parametrize("adaptive", [False, True],
+                         ids=["static", "adaptive"])
+def test_checkpoint_roundtrip_counters_and_ring_phase(
+        tmp_path, superstep, adaptive):
+    """SimState round-trips whole: neuron state, phase-aligned rings and the
+    counters (t, spike_count, overflow, shipped_bytes) all survive restore,
+    across {superstep, legacy} x {static, adaptive} windows."""
+    eng, net = _quick_engine(superstep=superstep, adaptive_exchange=adaptive)
+    st = eng.init()
+    for _ in range(4):
+        st, _ = eng.window(st)
+
+    ckpt = schedule_lib.SimCheckpointer(str(tmp_path), eng, net, every=0)
+    ckpt.save(st)
+    ckpt.close()
+
+    restored, info = schedule_lib.restore_sim(str(tmp_path), eng, net)
+    assert info["step"] == 4
+    assert info["reshard"] is None
+    assert int(restored.t) == int(st.t)
+    assert int(restored.overflow) == int(st.overflow)
+    assert float(np.asarray(restored.shipped_bytes)) == float(
+        np.asarray(st.shipped_bytes))
+    assert np.array_equal(np.asarray(restored.ring), np.asarray(st.ring))
+    assert np.array_equal(np.asarray(restored.spike_count),
+                          np.asarray(st.spike_count))
+    extra = info["manifest"]["extra"]
+    assert extra["ring_phase"] == int(st.t) % net.ring_len
+    assert extra["window_phase"] == 0
+    assert extra["seed"] == eng.config.seed
+
+    # ... and the resumed trajectory continues bitwise-identically.
+    ref, resumed = st, restored
+    for _ in range(3):
+        ref, blk_ref = eng.window(ref)
+        resumed, blk_res = eng.window(resumed)
+    assert np.array_equal(np.asarray(blk_ref), np.asarray(blk_res))
+    assert np.array_equal(np.asarray(ref.ring), np.asarray(resumed.ring))
+
+
+def test_kill_at_window_k_resume_equals_uninterrupted(tmp_path):
+    """Preempt at window 5 of 9 through the resilient loop, resume from the
+    SIGTERM-grace checkpoint: spikes and final state match the uninterrupted
+    reference exactly."""
+    eng, net = _quick_engine()
+    ref = schedule_lib.run_windows(eng, eng.init(), 9)
+
+    inj = faults_lib.FaultInjector(
+        faults_lib.FaultConfig(preempt_after_window=5),
+        n_devices=1, delay_ratio=eng.delay_ratio)
+    ckpt = schedule_lib.SimCheckpointer(str(tmp_path), eng, net, every=2,
+                                        injector=inj)
+    with pytest.raises(faults_lib.Preempted) as exc_info:
+        schedule_lib.run_windows(eng, eng.init(), 9,
+                                 checkpointer=ckpt, faults=inj)
+    exc = exc_info.value
+    assert exc.window == 5
+    assert exc.checkpoint_path == str(tmp_path)
+    assert exc.result.windows_done == 5
+
+    st, info = schedule_lib.restore_sim(str(tmp_path), eng, net)
+    assert info["step"] == 5
+    res = schedule_lib.run_windows(eng, st, 9 - info["step"])
+    assert np.array_equal(res.spikes_per_window, ref.spikes_per_window[5:])
+    assert int(res.state.t) == int(ref.state.t)
+    assert np.array_equal(np.asarray(res.state.ring),
+                          np.asarray(ref.state.ring))
+    assert np.array_equal(np.asarray(res.state.spike_count),
+                          np.asarray(ref.state.spike_count))
+
+
+def test_resume_config_hash_mismatch_fails_fast(tmp_path):
+    """A checkpoint from a different config (here: seed) must refuse to
+    resume with a field-by-field error, before any array is loaded."""
+    eng, net = _quick_engine()
+    st = eng.init()
+    for _ in range(2):
+        st, _ = eng.window(st)
+    ckpt = schedule_lib.SimCheckpointer(str(tmp_path), eng, net, every=0)
+    ckpt.save(st)
+    ckpt.close()
+
+    spec = mam_benchmark_spec(n_areas=2, n_per_area=32, k_intra=4, k_inter=4)
+    other = make_engine(net, spec, EngineConfig(
+        neuron_model="lif", delivery_backend="event", s_max_floor=4, seed=7))
+    with pytest.raises(ValueError, match=r"seed: checkpoint=42 != run=7"):
+        schedule_lib.restore_sim(str(tmp_path), other, net)
+
+
+def test_checkpoint_rejects_mid_window_state():
+    import dataclasses
+
+    eng, net = _quick_engine()
+    ckpt = schedule_lib.SimCheckpointer("/nonexistent-never-written", eng,
+                                        net, every=0)
+    st = eng.init()
+    bad = dataclasses.replace(st, t=st.t + 3)  # not a multiple of D
+    with pytest.raises(ValueError, match="mid-window"):
+        ckpt.save(bad)
+    ckpt.close()
+
+
+# ---------------------------------------------------------------------------
+# fault harness
+# ---------------------------------------------------------------------------
+
+
+def test_jitter_is_deterministic_and_matches_sync_model():
+    """Injected per-window straggler times are a pure function of
+    (seed, window) -- resume legs replay them -- and their mean matches the
+    order-statistics prediction (Blom) within 10%."""
+    cfg = faults_lib.FaultConfig(jitter_mu_ms=1.0, jitter_sigma_ms=0.2,
+                                 jitter_devices=8, seed=3)
+    inj = faults_lib.FaultInjector(cfg, n_devices=1, delay_ratio=10)
+    twin = faults_lib.FaultInjector(cfg, n_devices=1, delay_ratio=10)
+    draws = [inj.window_jitter_s(w) for w in range(300)]
+    assert draws[7] == twin.window_jitter_s(7)
+    predicted = inj.predicted_jitter_s()
+    assert abs(np.mean(draws) / predicted - 1) < 0.10
+    # the straggler premium over the jitter-free D*mu floor is positive
+    assert predicted > 10 * cfg.jitter_mu_ms * 1e-3
+
+
+def test_jitter_inflates_measured_window_times():
+    import jax
+
+    eng, _ = _quick_engine()
+    jax.block_until_ready(eng.window(eng.init())[0].ring)  # compile
+    base = schedule_lib.run_windows(eng, eng.init(), 4)
+    inj = faults_lib.FaultInjector(
+        faults_lib.FaultConfig(jitter_mu_ms=5.0, jitter_devices=4, seed=1),
+        n_devices=1, delay_ratio=eng.delay_ratio)
+    jit = schedule_lib.run_windows(eng, eng.init(), 4, faults=inj)
+    assert jit.injected_sleep_s > 0.15  # 4 windows x D=10 x 5 ms
+    assert jit.window_times_s.sum() >= (base.window_times_s.sum()
+                                        + 0.8 * jit.injected_sleep_s)
+    # the fault plan rides on EngineConfig too (run_windows default)
+    eng2, _ = _quick_engine(faults=faults_lib.FaultConfig(
+        jitter_mu_ms=5.0, jitter_devices=4, seed=1))
+    jit2 = schedule_lib.run_windows(eng2, eng2.init(), 4)
+    assert jit2.injected_sleep_s == pytest.approx(jit.injected_sleep_s)
+
+
+def test_transient_ckpt_failures_are_survived(tmp_path):
+    """ckpt-io faults: first 2 writes fail; the run completes, the writer
+    retries exactly twice, and a readable checkpoint lands."""
+    from repro.checkpoint import manager as ckpt_manager
+
+    eng, net = _quick_engine()
+    inj = faults_lib.FaultInjector(
+        faults_lib.FaultConfig(ckpt_write_failures=2),
+        n_devices=1, delay_ratio=eng.delay_ratio)
+    ckpt = schedule_lib.SimCheckpointer(str(tmp_path), eng, net, every=2,
+                                        injector=inj, backoff_s=0.01)
+    schedule_lib.run_windows(eng, eng.init(), 4, checkpointer=ckpt,
+                             faults=inj)
+    ckpt.close()
+    assert ckpt.retry_count == 2
+    assert inj.ckpt_failures_injected == 2
+    assert ckpt_manager.latest_step(str(tmp_path)) == 4
+
+
+def test_parse_fault_specs():
+    cfg = faults_lib.parse_fault_specs(
+        ["jitter:mu_ms=1.6,sigma_ms=0.3,rho=0.5,devices=16",
+         "ckpt-io:fails=2", "preempt:window=12"], seed=9)
+    assert cfg.jitter_mu_ms == 1.6 and cfg.jitter_sigma_ms == 0.3
+    assert cfg.jitter_rho == 0.5 and cfg.jitter_devices == 16
+    assert cfg.ckpt_write_failures == 2 and cfg.preempt_after_window == 12
+    assert cfg.seed == 9 and cfg.any_enabled
+    assert not faults_lib.parse_fault_specs([]).any_enabled
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        faults_lib.parse_fault_specs(["meteor:size=large"])
+    with pytest.raises(ValueError, match="unknown option"):
+        faults_lib.parse_fault_specs(["preempt:window=1,when=now"])
+    with pytest.raises(ValueError, match="missing option"):
+        faults_lib.parse_fault_specs(["ckpt-io:"])
+
+
+# ---------------------------------------------------------------------------
+# distributed: checkpoint round-trips and elastic reshard-restart
+# ---------------------------------------------------------------------------
+
+
+def test_dist_checkpoint_resume_matrix(tmp_path):
+    """{dense, routed} x {static, adaptive} x {superstep, legacy} on a 4x2
+    mesh: preempt at window 3 of 6, resume from the grace checkpoint, and
+    match the uninterrupted reference bitwise."""
+    print(_run(f"""
+        import numpy as np, jax
+        from repro.core import faults as faults_lib
+        from repro.core import schedule as schedule_lib
+        from repro.core.areas import mam_benchmark_spec
+        from repro.core.connectivity import build_network
+        from repro.core.dist_engine import make_dist_engine
+        from repro.core.engine import EngineConfig
+
+        spec = mam_benchmark_spec(n_areas=4, n_per_area=32, k_intra=4,
+                                  k_inter=4, rate_hz=30.0)
+        net = build_network(spec, seed=12, size_multiple=8, outgoing=True)
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        for exchange in ("dense", "routed"):
+            for adaptive in (False, True):
+                for superstep in (True, False):
+                    tag = f"{{exchange}}-{{adaptive}}-{{superstep}}"
+                    d = r"{tmp_path}/" + tag
+                    cfg = EngineConfig(
+                        neuron_model="ignore_and_fire",
+                        delivery_backend="event", exchange=exchange,
+                        adaptive_exchange=adaptive, superstep=superstep,
+                        s_max_floor=4)
+                    eng = make_dist_engine(net, spec, mesh, cfg)
+                    ref = schedule_lib.run_windows(eng, eng.init(), 6)
+                    inj = faults_lib.FaultInjector(
+                        faults_lib.FaultConfig(preempt_after_window=3),
+                        n_devices=8, delay_ratio=eng.delay_ratio)
+                    ck = schedule_lib.SimCheckpointer(
+                        d, eng, net, every=0, n_groups=4, injector=inj)
+                    try:
+                        schedule_lib.run_windows(
+                            eng, eng.init(), 6, checkpointer=ck, faults=inj)
+                        raise AssertionError("preemption did not fire: " + tag)
+                    except faults_lib.Preempted:
+                        pass
+                    st, info = schedule_lib.restore_sim(
+                        d, eng, net, n_groups=4)
+                    assert info["step"] == 3, tag
+                    res = schedule_lib.run_windows(eng, st, 3)
+                    assert np.array_equal(res.spikes_per_window,
+                                          ref.spikes_per_window[3:]), tag
+                    assert np.array_equal(
+                        np.asarray(res.state.ring),
+                        np.asarray(ref.state.ring)), tag
+                    assert int(res.state.t) == int(ref.state.t), tag
+                    assert int(res.state.overflow) == 0, tag
+                    print("OK", tag)
+        print("MATRIX DONE")
+    """))
+
+
+@pytest.mark.parametrize("new_devices,new_groups", [(2, 2), (8, 8)])
+def test_elastic_reshard_restart(tmp_path, new_devices, new_groups):
+    """Checkpoint on 4 groups, kill, resume on a different group count:
+    the spike train must equal the unkilled reference exactly."""
+    common = """
+        import numpy as np, jax
+        from repro.core import faults as faults_lib
+        from repro.core import schedule as schedule_lib
+        from repro.core.areas import mam_benchmark_spec
+        from repro.core.connectivity import build_network
+        from repro.core.dist_engine import make_dist_engine
+        from repro.core.engine import EngineConfig
+
+        spec = mam_benchmark_spec(n_areas=8, n_per_area=32, k_intra=4,
+                                  k_inter=4, rate_hz=30.0)
+        net = build_network(spec, seed=12, size_multiple=8, outgoing=True)
+        cfg = EngineConfig(neuron_model="ignore_and_fire",
+                           delivery_backend="event", exchange="routed",
+                           s_max_floor=4)
+        n_groups = jax.device_count()
+        mesh = jax.make_mesh((n_groups, 1), ("data", "model"))
+        eng = make_dist_engine(net, spec, mesh, cfg)
+    """
+    # Leg 1 (4 groups): reference trajectory + preempted checkpoint.
+    _run(common + f"""
+        ref = schedule_lib.run_windows(eng, eng.init(), 8)
+        np.savez(r"{tmp_path}/ref.npz",
+                 spikes=np.asarray(ref.state.spike_count),
+                 per_win=ref.spikes_per_window)
+        inj = faults_lib.FaultInjector(
+            faults_lib.FaultConfig(preempt_after_window=4),
+            n_devices=4, delay_ratio=eng.delay_ratio)
+        ck = schedule_lib.SimCheckpointer(
+            r"{tmp_path}/ckpt", eng, net, every=0, n_groups=n_groups,
+            injector=inj)
+        try:
+            schedule_lib.run_windows(eng, eng.init(), 8,
+                                     checkpointer=ck, faults=inj)
+            raise AssertionError("preemption did not fire")
+        except faults_lib.Preempted as e:
+            assert e.window == 4
+        print("LEG1 OK")
+    """, n_devices=4)
+    # Leg 2 (different group count): elastic resume to completion.
+    _run(common + f"""
+        st, info = schedule_lib.restore_sim(
+            r"{tmp_path}/ckpt", eng, net, n_groups=n_groups)
+        assert info["step"] == 4
+        resh = info["reshard"]
+        assert resh is not None and resh["old_n_groups"] == 4
+        assert resh["new_n_groups"] == {new_groups}
+        res = schedule_lib.run_windows(eng, st, 8 - info["step"])
+        ref = np.load(r"{tmp_path}/ref.npz")
+        assert np.array_equal(np.asarray(res.state.spike_count),
+                              ref["spikes"])
+        assert np.array_equal(res.spikes_per_window, ref["per_win"][4:])
+        print("LEG2 OK", resh)
+    """, n_devices=new_devices)
+
+
+def test_reshard_plan_helpers():
+    """placement_from_sizes + elastic_reshard_plan + order/moves accounting:
+    contiguous plans are identity orderings; incompatible counts raise."""
+    from repro.core import partition
+
+    placement = partition.placement_from_sizes([30, 31, 32, 29], 4, n_pad=32)
+    assert placement.n_groups == 4 and placement.areas_per_group == 1
+    plan = partition.elastic_reshard_plan(placement, 2)
+    assert plan == {0: (0, 0), 1: (1, 0), 2: (2, 1), 3: (3, 1)}
+    assert np.array_equal(partition.reshard_area_order(plan), np.arange(4))
+    assert partition.reshard_moves(plan) == 4  # every peer set changed
+    same = partition.elastic_reshard_plan(placement, 4)
+    assert partition.reshard_moves(same) == 0
+    with pytest.raises(ValueError, match="cannot rebalance"):
+        partition.elastic_reshard_plan(placement, 3)
+    with pytest.raises(ValueError, match="not divisible"):
+        partition.placement_from_sizes([30, 31, 32], 2, n_pad=32)
