@@ -283,9 +283,61 @@ def make_dist_engine(
 
     gids_global = jnp.arange(A * n_pad, dtype=jnp.int32).reshape(A, n_pad)
 
-    @jax.jit
-    def window(state: SimState):
-        return window_sm(state, net, gids_global)
+    overlap_jit = drain_jit = init_inflight = None
+    if cfg.overlap_exchange:
+        overlap_body, drain_body = schedule_lib.make_overlap_window_fn(
+            cfg, exchange, update_fn)
+        # The in-flight wire's specs come from the exchange: the dense wire
+        # is a whole-mesh gather (replicated), the routed wire differs per
+        # device group (leading group axis sharded over the area axes).
+        # Finish is collective-free, so `drain` is safe as its own
+        # shard_map'd program -- no SPMD deadlock risk from running it at a
+        # host-decided boundary.
+        if_specs = exchange.inflight_pspecs()
+        overlap_sm = shard_map(
+            overlap_body,
+            mesh=mesh,
+            in_specs=(st_specs, if_specs, nt_specs, gid_spec),
+            out_specs=(st_specs, if_specs, block_spec),
+            check_vma=False,
+        )
+        drain_sm = shard_map(
+            drain_body,
+            mesh=mesh,
+            in_specs=(st_specs, if_specs, nt_specs, gid_spec),
+            out_specs=st_specs,
+            check_vma=False,
+        )
+        inflight_shardings = jax.tree.map(
+            lambda s: NamedSharding(mesh, s), if_specs,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+        def init_inflight():
+            return jax.device_put(
+                exchange.init_inflight(net), inflight_shardings)
+
+        @jax.jit
+        def overlap_jit(state, inflight):
+            return overlap_sm(state, inflight, net, gids_global)
+
+        @jax.jit
+        def drain_jit(state, inflight):
+            return drain_sm(state, inflight, net, gids_global)
+
+        # Compatibility `window`: one overlapped window drained on the spot
+        # (finish of an empty inflight is a no-op) -- bit-identical to the
+        # sequential window for every unpipelined caller.
+        @jax.jit
+        def window(state: SimState):
+            st, inf, block = overlap_sm(
+                state, exchange.init_inflight(net), net, gids_global)
+            return drain_sm(st, inf, net, gids_global), block
+
+    else:
+        @jax.jit
+        def window(state: SimState):
+            return window_sm(state, net, gids_global)
 
     state_shardings = jax.tree.map(
         lambda s: NamedSharding(mesh, s), st_specs,
@@ -316,15 +368,30 @@ def make_dist_engine(
         )
         return shard_state(state)
 
-    @functools.partial(jax.jit, static_argnums=1)
-    def run(state: SimState, n_windows: int):
-        def step(st, _):
-            st, block = window_sm(st, net, gids_global)
-            return st, block.astype(jnp.int32).sum()
+    if cfg.overlap_exchange:
+        @functools.partial(jax.jit, static_argnums=1)
+        def run(state: SimState, n_windows: int):
+            def step(carry, _):
+                st, inf = carry
+                st, inf, block = overlap_sm(st, inf, net, gids_global)
+                return (st, inf), block.astype(jnp.int32).sum()
 
-        return jax.lax.scan(step, state, None, length=n_windows)
+            (state, inf), spikes = jax.lax.scan(
+                step, (state, exchange.init_inflight(net)), None,
+                length=n_windows)
+            return drain_sm(state, inf, net, gids_global), spikes
+    else:
+        @functools.partial(jax.jit, static_argnums=1)
+        def run(state: SimState, n_windows: int):
+            def step(st, _):
+                st, block = window_sm(st, net, gids_global)
+                return st, block.astype(jnp.int32).sum()
+
+            return jax.lax.scan(step, state, None, length=n_windows)
 
     return Engine(init=init, window=window, run=run, config=cfg,
                   delay_ratio=D, window_raw=window_sm,
                   wire_bytes=exchange.wire_bytes(net),
-                  shard_state=shard_state)
+                  shard_state=shard_state,
+                  window_overlap=overlap_jit, drain=drain_jit,
+                  init_inflight=init_inflight)

@@ -127,6 +127,19 @@ class EngineConfig:
     # unfused event engine are therefore guaranteed only while the unfused
     # engine reports overflow == 0 (its own exactness condition anyway).
     superstep_kernel: bool = False
+    # Double-buffer the structure-aware window-end exchange
+    # (repro.core.exchange start_window_end/finish_window_end): window w's
+    # payload collectives are issued at the end of w's compute and their
+    # receive scatter deferred to the top of w+1 -- on hardware with async
+    # collectives (see launch.simulate.xla_overlap_flags) the transfer
+    # overlaps w+1's compute, so the per-window wall tracks
+    # max(compute, comm) instead of their sum (the order-statistics claim
+    # of sync_model.expected_wall_overlapped). Bit-identical to the
+    # sequential schedule: same packets, same scatter values, and the
+    # in-flight window drains at every checkpoint/preemption boundary, so
+    # saved states ARE sequential states (resume_config_hash treats the
+    # flag as layout, not trajectory). Structure-aware schedule only.
+    overlap_exchange: bool = False
     # Host-side fault-injection plan (repro.core.faults.FaultConfig): per-
     # device compute jitter slept at window boundaries, transient
     # checkpoint-write failures, simulated preemption. Consumed by the
@@ -171,6 +184,12 @@ class EngineConfig:
                 raise ValueError(
                     "superstep_kernel=True conflicts with superstep=False"
                 )
+        if self.overlap_exchange and self.schedule != STRUCTURE_AWARE:
+            raise ValueError(
+                "overlap_exchange double-buffers the structure-aware "
+                "window-end exchange; the conventional schedule has no "
+                "lumped exchange to overlap"
+            )
 
     @property
     def backend(self) -> str:
@@ -212,6 +231,19 @@ class Engine(NamedTuple):
     # checkpoint restore (incl. elastic reshard onto a different group
     # count). None for the single-host engine (restore needs no placement).
     shard_state: Callable | None = None
+    # Overlapped pipeline (EngineConfig.overlap_exchange; None otherwise):
+    # advance one window while finishing the previous window's in-flight
+    # exchange -- (state, InflightWindow) -> (state', InflightWindow',
+    # block). `window` stays available as the drained per-window
+    # composition (start + immediate finish), bit-identical but unpipelined.
+    window_overlap: Callable | None = None
+    # Retire an in-flight window: (state, InflightWindow) -> state' with the
+    # pending receive scatter applied -- run at checkpoint/preemption/run-end
+    # boundaries so the observable state is the sequential trajectory.
+    drain: Callable | None = None
+    # () -> an empty (scatters-nothing) InflightWindow on this engine's
+    # devices: what the pipeline starts from and resets to after a drain.
+    init_inflight: Callable | None = None
 
 
 def make_fused_lif_update(params: neuron_lib.LIFParams):
@@ -351,9 +383,35 @@ def make_engine(
     window_body = schedule_lib.make_window_fn(
         cfg, exchange, update_fn, fused_superstep=fused_window)
 
-    @jax.jit
-    def window(state: SimState) -> tuple[SimState, jax.Array]:
-        return window_body(state, net, gids)
+    overlap_jit = drain_jit = init_inflight = None
+    if cfg.overlap_exchange:
+        overlap_body, drain_body = schedule_lib.make_overlap_window_fn(
+            cfg, exchange, update_fn, fused_superstep=fused_window)
+
+        @jax.jit
+        def overlap_jit(state, inflight):
+            return overlap_body(state, inflight, net, gids)
+
+        @jax.jit
+        def drain_jit(state, inflight):
+            return drain_body(state, inflight, net, gids)
+
+        def init_inflight():
+            return exchange.init_inflight(net)
+
+        # The compatibility `window`: one overlapped window drained on the
+        # spot -- bit-identical to the sequential window (finish of an empty
+        # inflight is a no-op), so every unpipelined caller keeps working.
+        @jax.jit
+        def window(state: SimState) -> tuple[SimState, jax.Array]:
+            st, inf, block = overlap_body(
+                state, exchange.init_inflight(net), net, gids)
+            return drain_body(st, inf, net, gids), block
+
+    else:
+        @jax.jit
+        def window(state: SimState) -> tuple[SimState, jax.Array]:
+            return window_body(state, net, gids)
 
     def init() -> SimState:
         if cfg.neuron_model == "lif":
@@ -371,15 +429,34 @@ def make_engine(
             shipped_bytes=jnp.float32(0),
         )
 
-    @functools.partial(jax.jit, static_argnums=1)
-    def run(state: SimState, n_windows: int) -> tuple[SimState, jax.Array]:
-        def body(st, _):
-            st, spikes = window_body(st, net, gids)
-            return st, spikes.sum(dtype=jnp.int32)
+    if cfg.overlap_exchange:
+        # Pipelined scan threading the in-flight window through, drained
+        # once at the end -- the jitted fast path actually runs start/finish
+        # split across windows, so XLA's latency-hiding scheduler can move
+        # the collectives off the critical path.
+        @functools.partial(jax.jit, static_argnums=1)
+        def run(state: SimState, n_windows: int):
+            def body(carry, _):
+                st, inf = carry
+                st, inf, spikes = overlap_body(st, inf, net, gids)
+                return (st, inf), spikes.sum(dtype=jnp.int32)
 
-        return jax.lax.scan(body, state, None, length=n_windows)
+            (state, inf), spikes = jax.lax.scan(
+                body, (state, exchange.init_inflight(net)), None,
+                length=n_windows)
+            return drain_body(state, inf, net, gids), spikes
+    else:
+        @functools.partial(jax.jit, static_argnums=1)
+        def run(state: SimState, n_windows: int):
+            def body(st, _):
+                st, spikes = window_body(st, net, gids)
+                return st, spikes.sum(dtype=jnp.int32)
+
+            return jax.lax.scan(body, state, None, length=n_windows)
 
     return Engine(
         init=init, window=window, run=run, config=cfg, delay_ratio=D,
         wire_bytes=exchange.wire_bytes(net),
+        window_overlap=overlap_jit, drain=drain_jit,
+        init_inflight=init_inflight,
     )

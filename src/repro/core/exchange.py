@@ -81,7 +81,7 @@ accumulate the *measured* bytes in ``SimState.shipped_bytes``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -96,6 +96,7 @@ from repro.kernels import ops as kops
 __all__ = [
     "EXCHANGES",
     "Exchange",
+    "InflightWindow",
     "LocalExchange",
     "DenseMeshExchange",
     "RoutedExchange",
@@ -227,15 +228,49 @@ def build_routing(
 # ---------------------------------------------------------------------------
 
 
+class InflightWindow(NamedTuple):
+    """The two-window in-flight state of the overlapped exchange pipeline.
+
+    ``wire`` is the *received* window-end payload of window ``w`` -- every
+    collective has already run by the time an InflightWindow exists, so
+    finishing it (the receive scatter into the ring) is collective-free and
+    can happen at the top of window ``w+1``'s program, overlapping the
+    payload transfer with ``w+1``'s compute on hardware with async
+    collectives. ``t0`` is the window's start step (the scatter's time
+    base). An *empty* inflight (``Exchange.init_inflight``) scatters
+    nothing bitwise: id wires carry only the fill id (dropped by the
+    receive maps), dense wires carry zeros (+0.0 adds are bit-exact on the
+    1/256 grid, and rings never hold -0.0).
+    """
+
+    wire: jax.Array
+    t0: jax.Array
+
+
 class Exchange:
     """Interface + shared bookkeeping; see the module docstring.
 
-    Both hooks return ``(ring', overflow_delta, shipped_bytes_delta)``:
-    overflow counts spikes a fixed-size packet dropped (always 0 under the
-    adaptive two-phase exchange), shipped bytes is the mesh-total wire
-    volume the hook moved this call (f32 scalar; 0 on the single-host
-    identity), accumulated by the shared window core into
-    ``SimState.shipped_bytes``.
+    ``cycle`` and ``window_end`` return ``(ring', overflow_delta,
+    shipped_bytes_delta)``: overflow counts spikes a fixed-size packet
+    dropped (always 0 under the adaptive two-phase exchange), shipped bytes
+    is the mesh-total wire volume the hook moved this call (f32 scalar; 0
+    on the single-host identity), accumulated by the shared window core
+    into ``SimState.shipped_bytes``.
+
+    **Overlapped pipeline split** (``EngineConfig.overlap_exchange``):
+    ``window_end`` = ``start_window_end`` then ``finish_window_end``. The
+    causality of the structure-aware schedule pins where the cut can go:
+    window ``w``'s deposits land at slots ``[t0 + D, ...)`` and the
+    earliest of them is exactly the first slot window ``w+1`` reads -- so
+    the receive *scatter* cannot be deferred past ``w+1``'s ring reads, but
+    everything before it can be issued early. ``start`` therefore does the
+    assembly and ALL collectives (the adaptive phase-1 counts -- final at
+    the end of ``w``'s block -- plus the payload gathers/ppermutes) and all
+    overflow/shipped accounting, returning an :class:`InflightWindow`;
+    ``finish`` is the collective-free receive scatter, run at the top of
+    the next window's program (or by ``Engine.drain`` at a pipeline
+    boundary). Split == sequential bitwise: same packets, same scatter
+    values, scatter order is exact on the 1/256 grid.
     """
 
     name = "abstract"
@@ -245,6 +280,26 @@ class Exchange:
         raise NotImplementedError
 
     def window_end(self, ring, block, t0, net, gids, *, blocked: bool):
+        raise NotImplementedError
+
+    def start_window_end(self, block, t0, net, gids, *, blocked: bool):
+        """Assemble + ship window ``[t0, t0+D)``'s global pathway; returns
+        ``(InflightWindow, overflow_delta, shipped_bytes_delta)``."""
+        raise NotImplementedError
+
+    def finish_window_end(self, ring, inflight, net, gids, *, blocked: bool):
+        """Collective-free receive scatter of an in-flight window's payload
+        into the ring; returns the updated ring."""
+        raise NotImplementedError
+
+    def init_inflight(self, net: Network) -> InflightWindow:
+        """An empty (scatters-nothing) in-flight window, globally shaped
+        (what a pipeline starts from and resets to after a drain)."""
+        raise NotImplementedError
+
+    def inflight_pspecs(self) -> InflightWindow:
+        """PartitionSpecs of the in-flight state for ``shard_map`` threading
+        (distributed exchanges only)."""
         raise NotImplementedError
 
     def wire_bytes(self, net: Network) -> dict:
@@ -362,6 +417,63 @@ class LocalExchange(Exchange):
         else:
             ring, over = window_loop(self.s_max_all, ring)
         return ring, over, zero
+
+    # -- overlapped pipeline split ------------------------------------------
+
+    def start_window_end(self, block, t0, net, gids, *, blocked: bool):
+        del gids, blocked
+        t0 = jnp.asarray(t0, jnp.int32)
+        d_win = block.shape[0]
+        flat = block.reshape(d_win, -1).astype(jnp.float32)
+        if net.k_inter == 0:
+            return (InflightWindow(wire=flat[:, :0], t0=t0),
+                    jnp.int32(0), jnp.float32(0))
+        over = jnp.int32(0)
+        if self.backend == "event" and not self.adaptive:
+            # Same per-cycle spill count the sequential hook accumulates
+            # (blocked and legacy paths agree on it).
+            counts = block.reshape(d_win, -1).sum(axis=-1, dtype=jnp.int32)
+            over = jnp.maximum(counts - self.s_max_all, 0).sum()
+        return InflightWindow(wire=flat, t0=t0), over, jnp.float32(0)
+
+    def finish_window_end(self, ring, inflight, net, gids, *, blocked: bool):
+        del gids
+        if net.k_inter == 0 or inflight.wire.shape[-1] == 0:
+            return ring
+        flat, t0 = inflight.wire, inflight.t0
+        d_win = flat.shape[0]
+        adaptive = self.backend == "event" and self.adaptive
+        counts = flat.sum(axis=-1).astype(jnp.int32)
+        if blocked:
+            if adaptive:
+                return kops.ladder_switch(
+                    self.ladder_all, counts.max(),
+                    lambda b, r: delivery_lib.deliver_inter_block(
+                        r, flat, net, t0, backend=self.backend, s_max=b),
+                    ring)
+            return delivery_lib.deliver_inter_block(
+                ring, flat, net, t0, backend=self.backend,
+                s_max=self.s_max_all)
+
+        def window_loop(s_max, ring):
+            def deliver_s(s, ring):
+                return delivery_lib.deliver_inter(
+                    ring, flat[s], net, t0 + s,
+                    backend=self.backend, s_max=s_max)
+
+            return jax.lax.fori_loop(0, d_win, deliver_s, ring)
+
+        if adaptive:
+            return kops.ladder_switch(
+                self.ladder_all, counts.max(), window_loop, ring)
+        return window_loop(self.s_max_all, ring)
+
+    def init_inflight(self, net: Network) -> InflightWindow:
+        d_win = max(net.delay_ratio, 1)
+        a, n_pad = net.alive.shape
+        width = a * n_pad if net.k_inter > 0 else 0
+        return InflightWindow(
+            wire=jnp.zeros((d_win, width), jnp.float32), t0=jnp.int32(0))
 
     def wire_bytes(self, net: Network) -> dict:
         return dict(exchange=self.name, local_bytes=0, global_bytes=0,
@@ -701,6 +813,112 @@ class DenseMeshExchange(Exchange):
         ring = jax.lax.fori_loop(0, d_win, deliver_s, ring)
         return ring, jnp.int32(0), shipped
 
+    # -- overlapped pipeline split ------------------------------------------
+
+    def start_window_end(self, block, t0, net, gids, *, blocked: bool):
+        del blocked
+        t0 = jnp.asarray(t0, jnp.int32)
+        d_win = block.shape[0]
+        if net.k_inter == 0:
+            return (InflightWindow(jnp.zeros((d_win, 0), jnp.int32), t0),
+                    jnp.int32(0), jnp.float32(0))
+        A, n_pad = net.n_areas, net.n_pad
+        invalid = A * n_pad
+        shipped = jnp.float32(self._window_wire)
+        if self.backend == "event":
+            if self.adaptive:
+                # Phase 1 (the counts are final at the end of this window's
+                # block) + the payload all_gather, both issued here; the pad
+                # to the ladder cap keeps every bucket branch on one static
+                # in-flight shape, extra slots carrying the fill id.
+                cap = self.ladder_dev[-1]
+                need = comm.count_max(
+                    block.reshape(d_win, -1).sum(
+                        axis=-1, dtype=jnp.int32).max(),
+                    self.all_axes)
+
+                def assemble(b):
+                    packets, _ = delivery_lib.compact_fired_block(
+                        block, gids, s_max=b, invalid=invalid)
+                    gw = jax.lax.all_gather(
+                        packets, self.all_axes, axis=1, tiled=True)
+                    gw = gw.reshape(d_win, self.n_dev, b)
+                    gw = jnp.pad(gw, ((0, 0), (0, 0), (0, cap - b)),
+                                 constant_values=invalid)
+                    return gw.reshape(d_win, self.n_dev * cap)
+
+                wire = kops.ladder_switch(self.ladder_dev, need, assemble)
+                rung = kops.ladder_rung(self.ladder_dev, need)
+                shipped = (
+                    jnp.float32(self.n_dev * d_win * (self.n_dev - 1)
+                                * _I32_BYTES) * rung.astype(jnp.float32)
+                    + comm.count_wire_bytes(1, self.n_dev))
+                return InflightWindow(wire, t0), jnp.int32(0), shipped
+            packets, counts = delivery_lib.compact_fired_block(
+                block, gids, s_max=self.s_max_dev, invalid=invalid)
+            wire = jax.lax.all_gather(
+                packets, self.all_axes, axis=1, tiled=True)
+            over = jax.lax.psum(
+                jnp.maximum(counts - self.s_max_dev, 0).sum(), self.all_axes)
+            return InflightWindow(wire, t0), over, shipped
+        gblock = comm.gather_global(
+            block.astype(jnp.int8), area_axes=self.area_axes,
+            subgroup_axis=self.subgroup)          # [D, A, n_pad] int8
+        return InflightWindow(gblock, t0), jnp.int32(0), shipped
+
+    def finish_window_end(self, ring, inflight, net, gids, *, blocked: bool):
+        del gids
+        if net.k_inter == 0 or inflight.wire.shape[1] == 0:
+            return ring
+        a_loc, n_loc, r_len = ring.shape
+        A, n_pad = net.n_areas, net.n_pad
+        wire, t0 = inflight.wire, inflight.t0
+        d_win = wire.shape[0]
+        if self.backend == "event":
+            tgt_f, w_f, d_f = self._inter_tables(net)
+            to_local = self._global_to_local(a_loc, n_loc, net)
+            ring_flat = ring.reshape(a_loc * n_loc, r_len)
+            if blocked:
+                ring_flat = kops.event_deliver_block(
+                    ring_flat, wire, tgt_f, w_f, d_f, t0, tgt_map=to_local)
+            else:
+                def deliver_s(s, rf):
+                    return kops.event_deliver_ids(
+                        rf, wire[s], tgt_f, w_f, d_f, t0 + s,
+                        tgt_map=to_local)
+
+                ring_flat = jax.lax.fori_loop(0, d_win, deliver_s, ring_flat)
+            return ring_flat.reshape(a_loc, n_loc, r_len)
+        gflat = wire.astype(jnp.float32).reshape(d_win, A * n_pad)
+        if blocked:
+            return delivery_lib.deliver_inter_block(
+                ring, gflat, net, t0, backend=self.backend)
+
+        def deliver_s(s, ring):
+            return delivery_lib.deliver_inter(
+                ring, gflat[s], net, t0 + s, backend=self.backend)
+
+        return jax.lax.fori_loop(0, d_win, deliver_s, ring)
+
+    def init_inflight(self, net: Network) -> InflightWindow:
+        d_win = max(net.delay_ratio, 1)
+        A, n_pad = net.n_areas, net.n_pad
+        if net.k_inter == 0:
+            wire = jnp.zeros((d_win, 0), jnp.int32)
+        elif self.backend == "event":
+            cap = self.ladder_dev[-1] if self.adaptive else self.s_max_dev
+            wire = jnp.full((d_win, self.n_dev * cap), A * n_pad, jnp.int32)
+        else:
+            wire = jnp.zeros((d_win, A, n_pad), jnp.int8)
+        return InflightWindow(wire=wire, t0=jnp.int32(0))
+
+    def inflight_pspecs(self) -> InflightWindow:
+        from jax.sharding import PartitionSpec as P
+
+        # The dense wire is the result of a whole-mesh gather: identical on
+        # every device, so the in-flight state is replicated.
+        return InflightWindow(wire=P(), t0=P())
+
     # -- static wire accounting ---------------------------------------------
 
     def wire_bytes(self, net: Network) -> dict:
@@ -948,6 +1166,174 @@ class RoutedExchange(DenseMeshExchange):
                     jnp.float32(len(rnd.pairs) * gsz * d_win * _I32_BYTES)
                     * rung.astype(jnp.float32))
         return ring, jnp.int32(0), shipped
+
+    # -- overlapped pipeline split ------------------------------------------
+
+    def start_window_end(self, block, t0, net, gids, *, blocked: bool):
+        # All rotation rounds (collectives) run here; the received packets
+        # keep their [D, s] row=cycle layout and concatenate along the id
+        # axis into ONE in-flight wire, scattered by finish_window_end. The
+        # leading size-1 axis is this group's slot of the global in-flight
+        # state (the routed wire differs per group, unlike the dense one).
+        del blocked
+        t0 = jnp.asarray(t0, jnp.int32)
+        d_win = block.shape[0]
+        if net.k_inter == 0 or not self.routing.rounds:
+            return (InflightWindow(jnp.zeros((1, d_win, 0), jnp.int32), t0),
+                    jnp.int32(0), jnp.float32(0))
+        if self.adaptive:
+            return self._start_adaptive(block, t0, net, gids)
+        A, n_pad = net.n_areas, net.n_pad
+        G = self.routing.n_groups
+        invalid = A * n_pad
+
+        packets, counts = delivery_lib.compact_fired_block(
+            block, gids, s_max=self.s_max_dev, invalid=invalid)
+        over = jax.lax.psum(
+            jnp.maximum(counts - self.s_max_dev, 0).sum(), self.all_axes)
+        gwire = jax.lax.all_gather(
+            packets, self.subgroup, axis=1, tiled=True)      # [D, gsz*s_dev]
+
+        my_g = self._group_index()
+        lane0 = jax.lax.axis_index(self.subgroup) == 0
+        src_area = jnp.where(gwire < invalid, gwire // n_pad, A)
+        proj = jnp.asarray(self._proj_const)                 # [A+1, G]
+        gadj = jnp.asarray(self.routing.group_adj)           # [G, G]
+
+        received = []
+        for rnd in self.routing.rounds:
+            dst_g = jnp.mod(my_g + rnd.offset, G)
+            keep = proj[src_area, dst_g]                     # [D, L]
+            pkt, cnt = kops.compact_ids_block(
+                keep, gwire, size=rnd.s_max, fill_id=invalid)
+            spill = jnp.maximum(cnt - rnd.s_max, 0).sum()
+            over = over + jax.lax.psum(
+                jnp.where(lane0, spill, 0), self.all_axes)
+            if rnd.offset:
+                axis = (self.area_axes if len(self.area_axes) > 1
+                        else self.area_axes[0])
+                pkt = jax.lax.ppermute(pkt, axis, rnd.pairs)
+                ok = gadj[jnp.mod(my_g - rnd.offset, G), my_g]
+                pkt = jnp.where(ok, pkt, invalid)
+            received.append(pkt)
+        wire = jnp.concatenate(received, axis=1)[None]       # [1, D, L]
+        return (InflightWindow(wire, t0), over,
+                jnp.float32(self._window_wire))
+
+    def _start_adaptive(self, block, t0, net, gids):
+        """Two-phase start: phase 1 + every bucketed round, no scatter.
+
+        Identical collectives to ``_window_end_adaptive`` (the wire ships
+        rung-sized packets), but each round's packet is padded out to the
+        edge-ladder cap *after* the ppermute so all bucket branches share
+        one static in-flight shape; the extra slots carry the fill id,
+        which the deferred receive scatter absorbs bitwise.
+        """
+        A, n_pad = net.n_areas, net.n_pad
+        G = self.routing.n_groups
+        invalid = A * n_pad
+        d_win = block.shape[0]
+        gsz = self.gsz
+        cap_dev = self.ladder_dev[-1]
+        cap_edge = self.ladder_edge[-1]
+
+        # -- phase 1: counts ------------------------------------------------
+        counts_local = block.sum(axis=-1, dtype=jnp.int32)   # [D, A_loc]
+        counts_all = comm.gather_counts(
+            counts_local, area_axes=self.area_axes,
+            subgroup_axis=self.subgroup)                     # [D, A]
+        dev_need = comm.count_max(
+            counts_local.sum(axis=-1).max(), self.all_axes)
+        shipped = jnp.float32(
+            comm.count_wire_bytes(d_win * A + 1, self.n_dev))
+
+        # -- phase 2a: assemble the group packet at the device bucket -------
+        def assemble(b):
+            packets, _ = delivery_lib.compact_fired_block(
+                block, gids, s_max=b, invalid=invalid)       # [D, b]
+            gw = jax.lax.all_gather(
+                packets, self.subgroup, axis=1, tiled=True)  # [D, gsz*b]
+            gw = gw.reshape(d_win, gsz, b)
+            gw = jnp.pad(gw, ((0, 0), (0, 0), (0, cap_dev - b)),
+                         constant_values=invalid)
+            return gw.reshape(d_win, gsz * cap_dev)
+
+        gwire = kops.ladder_switch(self.ladder_dev, dev_need, assemble)
+        rung_dev = kops.ladder_rung(self.ladder_dev, dev_need)
+        shipped = shipped + (
+            jnp.float32(self.n_dev * (gsz - 1) * d_win * _I32_BYTES)
+            * rung_dev.astype(jnp.float32))
+
+        my_g = self._group_index()
+        src_area = jnp.where(gwire < invalid, gwire // n_pad, A)
+        proj = jnp.asarray(self._proj_const)                 # [A+1, G]
+        gadj = jnp.asarray(self.routing.group_adj)           # [G, G]
+        cg = counts_all.reshape(d_win, G, A // G)
+
+        # -- phase 2b: one bucketed round per existing offset ---------------
+        received = []
+        for rnd in self.routing.rounds:
+            mask = jnp.asarray(self._round_masks[rnd.offset])  # [G, A/G]
+            need_r = (cg * mask[None]).sum(axis=-1).max()
+            dst_g = jnp.mod(my_g + rnd.offset, G)
+            keep = proj[src_area, dst_g]                     # [D, L]
+
+            def round_fn(b, rnd=rnd, keep=keep):
+                pkt, _ = kops.compact_ids_block(
+                    keep, gwire, size=b, fill_id=invalid)
+                if rnd.offset:
+                    axis = (self.area_axes if len(self.area_axes) > 1
+                            else self.area_axes[0])
+                    pkt = jax.lax.ppermute(pkt, axis, rnd.pairs)
+                    ok = gadj[jnp.mod(my_g - rnd.offset, G), my_g]
+                    pkt = jnp.where(ok, pkt, invalid)
+                return jnp.pad(pkt, ((0, 0), (0, cap_edge - b)),
+                               constant_values=invalid)
+
+            received.append(
+                kops.ladder_switch(self.ladder_edge, need_r, round_fn))
+            if rnd.offset:
+                rung = kops.ladder_rung(self.ladder_edge, need_r)
+                shipped = shipped + (
+                    jnp.float32(len(rnd.pairs) * gsz * d_win * _I32_BYTES)
+                    * rung.astype(jnp.float32))
+        wire = jnp.concatenate(received, axis=1)[None]       # [1, D, L]
+        return InflightWindow(wire, t0), jnp.int32(0), shipped
+
+    def finish_window_end(self, ring, inflight, net, gids, *, blocked: bool):
+        # Collective-free: one blocked scatter of the concatenated rounds
+        # (scatter-order independence makes it bit-identical to the
+        # sequential path's per-round scatters; fill ids scatter nothing).
+        del blocked, gids
+        if net.k_inter == 0 or inflight.wire.shape[-1] == 0:
+            return ring
+        a_loc, n_loc, r_len = ring.shape
+        tgt_f, w_f, d_f = self._inter_tables(net)
+        to_local = self._global_to_local(a_loc, n_loc, net)
+        ring_flat = kops.event_deliver_block(
+            ring.reshape(a_loc * n_loc, r_len), inflight.wire[0],
+            tgt_f, w_f, d_f, inflight.t0, tgt_map=to_local)
+        return ring_flat.reshape(a_loc, n_loc, r_len)
+
+    def init_inflight(self, net: Network) -> InflightWindow:
+        d_win = max(net.delay_ratio, 1)
+        if net.k_inter == 0 or not self.routing.rounds:
+            width = 0
+        elif self.adaptive:
+            width = len(self.routing.rounds) * self.ladder_edge[-1]
+        else:
+            width = sum(rnd.s_max for rnd in self.routing.rounds)
+        wire = jnp.full((self.n_groups, d_win, width),
+                        net.n_areas * net.n_pad, jnp.int32)
+        return InflightWindow(wire=wire, t0=jnp.int32(0))
+
+    def inflight_pspecs(self) -> InflightWindow:
+        from jax.sharding import PartitionSpec as P
+
+        # The routed wire differs per device group: the global in-flight
+        # state carries a leading group axis, sharded over the area axes
+        # (local slice [1, D, L]); it is replicated over the subgroup axis.
+        return InflightWindow(wire=P(self.area_axes, None, None), t0=P())
 
     def wire_bytes(self, net: Network) -> dict:
         rep = routed_wire_bytes(

@@ -41,7 +41,9 @@ __all__ = [
     "FaultConfig",
     "FaultInjector",
     "Preempted",
+    "format_fault_specs",
     "parse_fault_specs",
+    "predicted_window_comm_jitter_s",
     "predicted_window_jitter_s",
 ]
 
@@ -76,6 +78,12 @@ class FaultConfig:
     jitter_sigma_ms: float = 0.0
     jitter_rho: float = 0.0
     jitter_devices: int = 0
+    # Per-window *exchange* (communication) jitter: one N(mu, sigma^2) draw
+    # per simulated device per window, maxed over devices. The overlapped
+    # schedule hides this behind the next window's compute (wall tracks
+    # max(compute, comm)); the sequential schedule pays the sum.
+    comm_mu_ms: float = 0.0
+    comm_sigma_ms: float = 0.0
     # Transient checkpoint-write failures: the first k saves raise OSError.
     ckpt_write_failures: int = 0
     # Simulated preemption after this many *completed* windows (1-based;
@@ -89,8 +97,13 @@ class FaultConfig:
         return self.jitter_mu_ms > 0 or self.jitter_sigma_ms > 0
 
     @property
+    def comm_enabled(self) -> bool:
+        return self.comm_mu_ms > 0 or self.comm_sigma_ms > 0
+
+    @property
     def any_enabled(self) -> bool:
-        return (self.jitter_enabled or self.ckpt_write_failures > 0
+        return (self.jitter_enabled or self.comm_enabled
+                or self.ckpt_write_failures > 0
                 or self.preempt_after_window > 0)
 
     def cycle_time_model(self) -> sync_model.CycleTimeModel:
@@ -114,6 +127,19 @@ def predicted_window_jitter_s(
     """
     return d * model.mu + math.sqrt(d) * model.sigma * sync_model.blom_xi(
         n_devices)
+
+
+def predicted_window_comm_jitter_s(
+    comm_mu_s: float, comm_sigma_s: float, n_devices: int
+) -> float:
+    """Analytic E[window exchange straggler]: max over M of N(mu, sigma^2).
+
+    The exchange happens once per window (not per cycle), so the lumping
+    factor is 1; the expected maximum over the M participating devices is
+    ``mu + sigma xi_M`` (Blom), same order-statistics form as the compute
+    prediction.
+    """
+    return comm_mu_s + comm_sigma_s * sync_model.blom_xi(n_devices)
 
 
 class FaultInjector:
@@ -145,19 +171,63 @@ class FaultInjector:
         t = self.model.sample(self.n_devices, self.delay_ratio, rng)
         return float(t.sum(axis=1).max())
 
-    def sleep(self, window: int) -> float:
-        """Inject the window's straggler time as a host sleep; returns it."""
-        s = self.window_jitter_s(window)
-        if s > 0:
-            time.sleep(s)
-            self.injected_sleep_s += s
+    def window_comm_jitter_s(self, window: int) -> float:
+        """Exchange straggler time for one window: max over simulated devices
+        of one N(comm_mu, comm_sigma^2) draw. Keyed by ``(seed, window)``
+        with a salt so the comm draw is independent of the compute draw --
+        both are pure functions of the window index, so interrupted,
+        resumed, sequential and pipelined runs all see the *same* realized
+        straggler sequence (what makes the max-vs-sum assertions exact)."""
+        if not self.cfg.comm_enabled:
+            return 0.0
+        rng = np.random.default_rng((self.cfg.seed, int(window), 0x0C))
+        t = (self.cfg.comm_mu_ms
+             + self.cfg.comm_sigma_ms * rng.standard_normal(self.n_devices))
+        return max(float(t.max()) * 1e-3, 0.0)
+
+    def inject(self, seconds: float) -> float:
+        """Sleep ``seconds`` on the host and account for it; returns it."""
+        if seconds > 0:
+            time.sleep(seconds)
+            self.injected_sleep_s += seconds
             self.windows_slept += 1
-        return s
+        return seconds
+
+    def sleep(self, window: int) -> float:
+        """Inject the window's compute straggler time as a host sleep."""
+        return self.inject(self.window_jitter_s(window))
 
     def predicted_jitter_s(self) -> float:
         """The sync model's per-window prediction for this injector's shape."""
         return predicted_window_jitter_s(
             self.model, self.n_devices, self.delay_ratio)
+
+    def predicted_comm_s(self) -> float:
+        """Per-window exchange-straggler prediction (0 when comm disabled)."""
+        if not self.cfg.comm_enabled:
+            return 0.0
+        return predicted_window_comm_jitter_s(
+            self.cfg.comm_mu_ms * 1e-3, self.cfg.comm_sigma_ms * 1e-3,
+            self.n_devices)
+
+    def predicted_sequential_s(self) -> float:
+        """Per-window injected wall under the sequential schedule: the SUM of
+        the compute and exchange straggler times (both on the critical
+        path)."""
+        return self.predicted_jitter_s() + self.predicted_comm_s()
+
+    def predicted_overlap_s(self) -> float:
+        """Per-window injected wall under the pipelined schedule: E[max] of
+        the compute and exchange stragglers (Clark), the paper's
+        max(compute, comm) claim in closed form. The straggler *spread*
+        (std of the max over M devices) is approximated by the per-device
+        sigma -- an upper bound that only matters when the two means are
+        close."""
+        m1 = self.predicted_jitter_s()
+        s1 = math.sqrt(self.delay_ratio) * self.model.sigma
+        m2 = self.predicted_comm_s()
+        s2 = self.cfg.comm_sigma_ms * 1e-3
+        return sync_model.expected_max_normals(m1, s1, m2, s2)
 
     # -- preemption --------------------------------------------------------
 
@@ -188,14 +258,36 @@ class FaultInjector:
         return flaky_save
 
 
+def _pop_number(kv: dict, key: str, default, spec: str, conv):
+    """Pop ``key`` from ``kv`` and convert with ``conv``, with context on a
+    bad numeric literal (a raw ``float('x')`` error names neither the option
+    nor the spec -- exactly the silent-misconfiguration trap this grammar
+    exists to close)."""
+    raw = kv.pop(key, None)
+    if raw is None:
+        return default
+    try:
+        return conv(raw)
+    except ValueError:
+        raise ValueError(
+            f"bad value {raw!r} for option {key!r} in fault spec {spec!r} "
+            f"(expected {conv.__name__})") from None
+
+
 def parse_fault_specs(specs: list[str] | None, *, seed: int = 0) -> FaultConfig:
     """Parse ``--inject-fault`` CLI specs into one :class:`FaultConfig`.
 
     Grammar (repeatable, later specs merge over earlier ones)::
 
-        jitter:mu_ms=1.6,sigma_ms=0.3[,rho=0.5][,devices=8]
+        jitter:mu_ms=1.6,sigma_ms=0.3[,comm_mu_ms=..][,comm_sigma_ms=..]
+              [,rho=0.5][,devices=8]
         ckpt-io:fails=2
         preempt:window=12
+
+    Round-trips with :func:`format_fault_specs`; every malformed input --
+    unknown kind, unknown or missing option, bad numeric literal, or a
+    ``jitter:`` spec that sets nothing -- raises ``ValueError`` naming the
+    offending spec.
     """
     cfg = FaultConfig(seed=seed)
     for spec in specs or ():
@@ -208,20 +300,36 @@ def parse_fault_specs(specs: list[str] | None, *, seed: int = 0) -> FaultConfig:
             kv[k] = v
         try:
             if kind == "jitter":
+                if not kv:
+                    raise ValueError(
+                        f"fault spec {spec!r} sets no options (a bare "
+                        f"'jitter' would silently disable the harness); "
+                        f"expected e.g. jitter:mu_ms=1.6,sigma_ms=0.3")
                 cfg = dataclasses.replace(
                     cfg,
-                    jitter_mu_ms=float(kv.pop("mu_ms", cfg.jitter_mu_ms)),
-                    jitter_sigma_ms=float(
-                        kv.pop("sigma_ms", cfg.jitter_sigma_ms)),
-                    jitter_rho=float(kv.pop("rho", cfg.jitter_rho)),
-                    jitter_devices=int(kv.pop("devices", cfg.jitter_devices)),
+                    jitter_mu_ms=_pop_number(
+                        kv, "mu_ms", cfg.jitter_mu_ms, spec, float),
+                    jitter_sigma_ms=_pop_number(
+                        kv, "sigma_ms", cfg.jitter_sigma_ms, spec, float),
+                    comm_mu_ms=_pop_number(
+                        kv, "comm_mu_ms", cfg.comm_mu_ms, spec, float),
+                    comm_sigma_ms=_pop_number(
+                        kv, "comm_sigma_ms", cfg.comm_sigma_ms, spec, float),
+                    jitter_rho=_pop_number(
+                        kv, "rho", cfg.jitter_rho, spec, float),
+                    jitter_devices=_pop_number(
+                        kv, "devices", cfg.jitter_devices, spec, int),
                 )
             elif kind == "ckpt-io":
-                cfg = dataclasses.replace(cfg, ckpt_write_failures=int(
-                    kv.pop("fails")))
+                if "fails" not in kv:
+                    raise KeyError("fails")
+                cfg = dataclasses.replace(cfg, ckpt_write_failures=_pop_number(
+                    kv, "fails", 0, spec, int))
             elif kind == "preempt":
-                cfg = dataclasses.replace(cfg, preempt_after_window=int(
-                    kv.pop("window")))
+                if "window" not in kv:
+                    raise KeyError("window")
+                cfg = dataclasses.replace(cfg, preempt_after_window=_pop_number(
+                    kv, "window", 0, spec, int))
             else:
                 raise ValueError(
                     f"unknown fault kind {kind!r} (expected jitter | "
@@ -232,3 +340,30 @@ def parse_fault_specs(specs: list[str] | None, *, seed: int = 0) -> FaultConfig:
             raise ValueError(
                 f"unknown option(s) {sorted(kv)} for fault kind {kind!r}")
     return cfg
+
+
+def format_fault_specs(cfg: FaultConfig) -> list[str]:
+    """Inverse of :func:`parse_fault_specs` (modulo ``seed``, which is a CLI
+    flag, not part of the spec grammar): emits one spec per enabled fault
+    such that ``parse_fault_specs(format_fault_specs(cfg), seed=cfg.seed)
+    == cfg``. Used to echo the active fault plan (resume hints, logs) in a
+    form that can be pasted straight back onto ``--inject-fault``."""
+    specs: list[str] = []
+    jitter_opts = []
+    base = FaultConfig()
+    for opt, field in (("mu_ms", "jitter_mu_ms"),
+                       ("sigma_ms", "jitter_sigma_ms"),
+                       ("comm_mu_ms", "comm_mu_ms"),
+                       ("comm_sigma_ms", "comm_sigma_ms"),
+                       ("rho", "jitter_rho"),
+                       ("devices", "jitter_devices")):
+        val = getattr(cfg, field)
+        if val != getattr(base, field):
+            jitter_opts.append(f"{opt}={val!r}")
+    if jitter_opts:
+        specs.append("jitter:" + ",".join(jitter_opts))
+    if cfg.ckpt_write_failures > 0:
+        specs.append(f"ckpt-io:fails={cfg.ckpt_write_failures}")
+    if cfg.preempt_after_window > 0:
+        specs.append(f"preempt:window={cfg.preempt_after_window}")
+    return specs

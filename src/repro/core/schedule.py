@@ -52,6 +52,7 @@ __all__ = [
     "RunResult",
     "make_update_fn",
     "make_window_fn",
+    "make_overlap_window_fn",
     "restore_sim",
     "resume_config_hash",
     "run_windows",
@@ -150,7 +151,40 @@ def make_window_fn(
     through the exchange hook.
     """
 
+    compute_window = _make_compute_window(
+        cfg, exchange, update_fn, fused_superstep)
+
+    if cfg.schedule == CONVENTIONAL:
+        return compute_window
+
+    blocked = bool(cfg.use_superstep)
+
     def window(state: SimState, net, gids):
+        t0 = state.t
+        state, block = compute_window(state, net, gids)
+        # The lumped 'global communication': the whole [D, ...] block in
+        # one pass. Every inter-area delay is >= D, so slot (t0+s+d) is
+        # strictly in the future of the window -- causal (paper §2.1)
+        # and bit-identical to D per-cycle deliveries.
+        ring, d_over, d_ship = exchange.window_end(
+            state.ring, block, t0, net, gids, blocked=blocked)
+        return dataclasses.replace(
+            state, ring=ring, overflow=state.overflow + d_over,
+            shipped_bytes=state.shipped_bytes + d_ship), block
+
+    return window
+
+
+def _make_compute_window(cfg, exchange, update_fn, fused_superstep):
+    """The window body *without* the structure-aware window-end exchange.
+
+    Shared by the sequential window (which appends ``exchange.window_end``)
+    and the overlapped window (which brackets it with ``finish``/``start``);
+    under the conventional schedule this IS the whole window (the per-cycle
+    hook runs the global pathway too).
+    """
+
+    def compute_window(state: SimState, net, gids):
         D = net.delay_ratio
         t0 = state.t
 
@@ -214,35 +248,79 @@ def make_window_fn(
                     body, (neuron, fut, over, shipped),
                     jnp.arange(D, dtype=jnp.int32))
             ring = ring_buffer.merge_window_tail(ring, fut[..., D:], t0 + D)
-
-            # The lumped 'global communication': the whole [D, ...] block in
-            # one pass. Every inter-area delay is >= D, so slot (t0+s+d) is
-            # strictly in the future of the window -- causal (paper §2.1)
-            # and bit-identical to D per-cycle deliveries.
-            ring, d_over, d_ship = exchange.window_end(
-                ring, block, t0, net, gids, blocked=True)
             return SimState(
                 neuron=neuron,
                 ring=ring,
                 t=t0 + D,
                 spike_count=state.spike_count + block.astype(jnp.int32).sum(0),
-                overflow=over + d_over,
-                shipped_bytes=shipped + d_ship,
+                overflow=over,
+                shipped_bytes=shipped,
             ), block
 
         # Legacy structure-aware window (the semantic reference for the
-        # superstep): per-cycle scan + a window-end replay of D deliveries.
+        # superstep): per-cycle scan, the window-end exchange appended by
+        # the caller.
         def body(st, _):
             return cycle_state(st, inter_now=False)
 
-        state, block = jax.lax.scan(body, state, None, length=D)
-        ring, d_over, d_ship = exchange.window_end(
-            state.ring, block, t0, net, gids, blocked=False)
-        return dataclasses.replace(
-            state, ring=ring, overflow=state.overflow + d_over,
-            shipped_bytes=state.shipped_bytes + d_ship), block
+        return jax.lax.scan(body, state, None, length=D)
 
-    return window
+    return compute_window
+
+
+def make_overlap_window_fn(
+    cfg,
+    exchange,
+    update_fn: Callable,
+    *,
+    fused_superstep: Callable | None = None,
+) -> tuple[Callable, Callable]:
+    """Build the double-buffered window pair ``(window_overlap, drain)``.
+
+    ``window_overlap(state, inflight, net, gids) -> (state', inflight',
+    block)`` runs one window of the overlapped pipeline: it first *finishes*
+    the previous window's in-flight exchange (the collective-free receive
+    scatter -- its earliest deposit lands exactly on the first ring slot
+    this window reads, so it cannot be deferred further), then runs the
+    compute body, then *starts* this window's exchange (assembly + all
+    collectives), handing the received payload back as the new in-flight
+    state. On hardware with async collectives the start's transfers overlap
+    the next window's compute; the schedule's wall becomes
+    ``max(compute, comm)`` per window instead of their sum.
+
+    ``drain(state, inflight, net, gids) -> state'`` retires an in-flight
+    window at a pipeline boundary (checkpoint, preemption, end of run) so
+    the ring equals the sequential schedule's -- a drained pipeline is
+    bitwise the sequential trajectory, which is what keeps checkpoints
+    layout-free and resume exact.
+    """
+    if cfg.schedule == CONVENTIONAL:
+        raise ValueError(
+            "overlap_exchange requires the structure-aware schedule: the "
+            "conventional schedule has no lumped window-end exchange to "
+            "overlap with compute")
+    compute_window = _make_compute_window(
+        cfg, exchange, update_fn, fused_superstep)
+    blocked = bool(cfg.use_superstep)
+
+    def window_overlap(state: SimState, inflight, net, gids):
+        ring = exchange.finish_window_end(
+            state.ring, inflight, net, gids, blocked=blocked)
+        state = dataclasses.replace(state, ring=ring)
+        t0 = state.t
+        state, block = compute_window(state, net, gids)
+        inflight, d_over, d_ship = exchange.start_window_end(
+            block, t0, net, gids, blocked=blocked)
+        return dataclasses.replace(
+            state, overflow=state.overflow + d_over,
+            shipped_bytes=state.shipped_bytes + d_ship), inflight, block
+
+    def drain(state: SimState, inflight, net, gids):
+        ring = exchange.finish_window_end(
+            state.ring, inflight, net, gids, blocked=blocked)
+        return dataclasses.replace(state, ring=ring)
+
+    return window_overlap, drain
 
 
 # ---------------------------------------------------------------------------
@@ -266,6 +344,15 @@ def make_window_fn(
 # new mesh via connectivity.shard_inter_tables.
 
 
+# Config fields that are *layout*, not *trajectory*: every value produces
+# bit-identical spike trains (sharded inter tables are re-cut by
+# make_dist_engine for whatever mesh the resume runs on; a drained overlap
+# pipeline IS the sequential trajectory), so checkpoints must stay
+# exchangeable across them. Recorded in the manifest payload for forensics,
+# excluded from the compatibility hash and the mismatch diff.
+_LAYOUT_KEYS = frozenset({"shard_inter_tables", "overlap_exchange"})
+
+
 def resume_config_hash(cfg, net, *, exchange: str | None = None):
     """``(hash, payload)`` identifying what a checkpoint can resume into.
 
@@ -273,9 +360,13 @@ def resume_config_hash(cfg, net, *, exchange: str | None = None):
     exchange, adaptive flag, delivery backend, seed, packet bounds) plus the
     network invariants a SimState's shapes encode (D, ring length, area
     grid). Deliberately excludes the mesh shape: elastic reshard-restart
-    resumes the same config on a different group count. ``exchange``
-    overrides ``cfg.exchange`` so launchers can hash the requested exchange
-    independently of how it resolves for the current device count.
+    resumes the same config on a different group count. Layout-only fields
+    (``_LAYOUT_KEYS``: replicated vs sharded inter tables, overlapped vs
+    sequential exchange) ride along in the payload but do not enter the
+    hash -- they change how the run executes, never what it computes.
+    ``exchange`` overrides ``cfg.exchange`` so launchers can hash the
+    requested exchange independently of how it resolves for the current
+    device count.
     """
     payload = {
         "neuron_model": cfg.neuron_model,
@@ -290,9 +381,12 @@ def resume_config_hash(cfg, net, *, exchange: str | None = None):
         "ring_len": int(net.ring_len),
         "n_areas": int(net.n_areas),
         "n_pad": int(net.n_pad),
+        "shard_inter_tables": bool(cfg.shard_inter_tables),
+        "overlap_exchange": bool(getattr(cfg, "overlap_exchange", False)),
     }
+    hashed = {k: v for k, v in payload.items() if k not in _LAYOUT_KEYS}
     digest = hashlib.sha256(
-        json.dumps(payload, sort_keys=True).encode()).hexdigest()[:16]
+        json.dumps(hashed, sort_keys=True).encode()).hexdigest()[:16]
     return digest, payload
 
 
@@ -338,6 +432,14 @@ class SimCheckpointer:
             save_fn=save_fn)
         self.saved_windows: list[int] = []
 
+    def due(self, window: int) -> bool:
+        """Does the cadence fire at this completed-window count? Callers
+        running the overlapped pipeline check this *before* touching the
+        state so the in-flight window can drain first (the save must see
+        the sequential-equivalent ring for resume to stay bitwise)."""
+        w = int(window)
+        return self.every > 0 and w > 0 and w % self.every == 0
+
     def maybe_save(self, state: SimState, window: int | None = None) -> int | None:
         """Cadence hook: save when the completed-window count hits `every`.
 
@@ -347,7 +449,7 @@ class SimCheckpointer:
         overhead budget checkpointing must not spend.
         """
         w = int(state.t) // self.delay_ratio if window is None else int(window)
-        if self.every > 0 and w > 0 and w % self.every == 0:
+        if self.due(w):
             return self.save(state)
         return None
 
@@ -434,7 +536,8 @@ def restore_sim(
         old = extra.get("config", {})
         diffs = [
             f"  {k}: checkpoint={old.get(k)!r} != run={v!r}"
-            for k, v in payload.items() if old.get(k) != v
+            for k, v in payload.items()
+            if k not in _LAYOUT_KEYS and old.get(k) != v
         ] or [f"  config hash {got_hash} != {expect_hash}"]
         raise ValueError(
             "checkpoint is incompatible with this run's config -- resuming "
@@ -479,6 +582,8 @@ class RunResult:
     window_times_s: np.ndarray      # wall per window, incl. injected jitter
     windows_done: int               # completed in THIS call
     injected_sleep_s: float = 0.0
+    overlapped: bool = False        # ran the double-buffered pipeline
+    drains: int = 0                 # in-flight windows retired at boundaries
 
 
 def run_windows(
@@ -489,6 +594,7 @@ def run_windows(
     checkpointer: SimCheckpointer | None = None,
     faults: "faults_lib.FaultConfig | faults_lib.FaultInjector | None" = None,
     on_window: Callable[[int, SimState], None] | None = None,
+    stop_requested: Callable[[], bool] | None = None,
 ) -> RunResult:
     """The engines' resilient run loop: windowed, checkpointed, fault-aware.
 
@@ -497,14 +603,31 @@ def run_windows(
     control, which is exactly where checkpoints are phase-safe: after every
     window it blocks on the state, submits a checkpoint when the cadence
     fires, injects configured faults, and stops SIGTERM-style on simulated
-    preemption (writing a final checkpoint first, then raising
+    preemption or when ``stop_requested()`` turns true (a real signal
+    handler's flag) -- writing a final checkpoint first, then raising
     :class:`repro.core.faults.Preempted` with the result attached as
-    ``exc.result``). Works unchanged for the single-host and distributed
+    ``exc.result``. Works unchanged for the single-host and distributed
     engines -- both assemble their window from this module.
+
+    When the engine carries the overlapped pipeline (``engine.window_overlap``
+    is set), the loop threads the in-flight window through and *drains* it at
+    every pipeline boundary -- before a checkpoint save, on preemption/stop,
+    and at the end of the run -- so everything observable (saved state,
+    returned state) is the sequential-equivalent trajectory. Injected faults
+    then model the pipeline: the sequential loop sleeps ``compute + comm``
+    per window, the overlapped loop ``max(compute, prev window's comm)``
+    with the last window's comm paid at the drain -- the realized sleeps ARE
+    the order-statistics quantities ``sync_model.expected_wall_overlapped``
+    prices.
 
     ``faults`` defaults to ``engine.config.faults``; pass an injector to
     share fault state (e.g. the transient-write budget also wired into the
     checkpointer) across resume legs.
+
+    ``on_window(w, state)`` fires after every window; under the overlapped
+    pipeline ``state`` may still have an undrained in-flight window (its
+    ``spike_count``/``t`` are exact, the ring is missing the last window's
+    inter deposits).
     """
     fault_arg = faults if faults is not None else getattr(
         engine.config, "faults", None)
@@ -516,6 +639,12 @@ def run_windows(
             delay_ratio=engine.delay_ratio)
     else:
         injector = None
+
+    overlapped = getattr(engine, "window_overlap", None) is not None
+    inflight = engine.init_inflight() if overlapped else None
+    in_flight_dirty = False
+    pending_comm = 0.0
+    drains = 0
 
     D = int(engine.delay_ratio)
     w_done = int(jax.device_get(state.t)) // D  # absolute windows completed
@@ -530,22 +659,54 @@ def run_windows(
             window_times_s=np.asarray(times, dtype=np.float64),
             windows_done=len(times),
             injected_sleep_s=slept,
+            overlapped=overlapped,
+            drains=drains,
         )
+
+    def drain_pipeline():
+        """Retire the in-flight window (and pay its modelled comm time)."""
+        nonlocal state, inflight, in_flight_dirty, pending_comm, slept, drains
+        if not overlapped or not in_flight_dirty:
+            return
+        state = engine.drain(state, inflight)
+        inflight = engine.init_inflight()
+        jax.block_until_ready(state.ring)
+        if injector is not None and pending_comm > 0.0:
+            slept += injector.inject(pending_comm)
+        pending_comm = 0.0
+        in_flight_dirty = False
+        drains += 1
 
     for _ in range(n_windows):
         t0 = time.perf_counter()
-        state, block = engine.window(state)
+        if overlapped:
+            state, inflight, block = engine.window_overlap(state, inflight)
+            in_flight_dirty = True
+        else:
+            state, block = engine.window(state)
         jax.block_until_ready(state.ring)
         w_done += 1
         if injector is not None:
-            slept += injector.sleep(w_done)
+            comp = injector.window_jitter_s(w_done)
+            comm = injector.window_comm_jitter_s(w_done)
+            if overlapped:
+                # This window's compute straggler overlaps the *previous*
+                # window's exchange; its own exchange becomes next window's
+                # in-flight time.
+                slept += injector.inject(max(comp, pending_comm))
+                pending_comm = comm
+            else:
+                slept += injector.inject(comp + comm)
         times.append(time.perf_counter() - t0)
         spikes.append(int(np.asarray(jnp.sum(block.astype(jnp.int32)))))
-        if checkpointer is not None:
+        if checkpointer is not None and checkpointer.due(w_done):
+            drain_pipeline()
             checkpointer.maybe_save(state, window=w_done)
         if on_window is not None:
             on_window(w_done, state)
-        if injector is not None and injector.preempt_now(w_done):
+        stop = stop_requested is not None and stop_requested()
+        if (injector is not None and injector.preempt_now(w_done)) or stop:
+            drain_pipeline()
             path = None
             if checkpointer is not None:
                 checkpointer.save(state)   # the SIGTERM-grace checkpoint
@@ -554,4 +715,5 @@ def run_windows(
             exc = faults_lib.Preempted(w_done, path)
             exc.result = result()
             raise exc
+    drain_pipeline()
     return result()

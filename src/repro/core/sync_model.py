@@ -27,10 +27,13 @@ import numpy as np
 
 __all__ = [
     "norm_cdf",
+    "norm_pdf",
     "norm_ppf",
     "blom_xi",
     "expected_wall_conventional",
     "expected_wall_structure_aware",
+    "expected_max_normals",
+    "expected_wall_overlapped",
     "sync_time_ratio",
     "max_tail_probability",
     "tail_for_max_coverage",
@@ -42,6 +45,10 @@ __all__ = [
 
 def norm_cdf(x: float) -> float:
     return 0.5 * (1.0 + math.erf(x / math.sqrt(2.0)))
+
+
+def norm_pdf(x: float) -> float:
+    return math.exp(-0.5 * x * x) / math.sqrt(2.0 * math.pi)
 
 
 # Acklam's inverse normal CDF coefficients.
@@ -104,6 +111,48 @@ def expected_wall_structure_aware(
 def sync_time_ratio(d: int) -> float:
     """Paper eq. (11): E[T_sync^struc] / E[T_sync^conv] = 1/sqrt(D)."""
     return 1.0 / math.sqrt(d)
+
+
+def expected_max_normals(
+    mu1: float, sigma1: float, mu2: float, sigma2: float
+) -> float:
+    """Clark (1961): E[max(X1, X2)] for independent normals.
+
+    With theta = sqrt(sigma1^2 + sigma2^2) and delta = (mu1 - mu2)/theta:
+    ``E[max] = mu1 Phi(delta) + mu2 Phi(-delta) + theta phi(delta)``.
+    This is the analytic heart of the overlapped-schedule claim: when the
+    window-end exchange of window ``w`` runs concurrently with the compute
+    of ``w+1``, the per-window wall is governed by the *maximum* of the two
+    straggler times, not their sum -- the correction term ``theta phi``
+    vanishes as the means separate, so a pipeline dominated by either phase
+    costs exactly that phase.
+    """
+    theta = math.hypot(sigma1, sigma2)
+    if theta == 0.0:
+        return max(mu1, mu2)
+    delta = (mu1 - mu2) / theta
+    return (mu1 * norm_cdf(delta) + mu2 * norm_cdf(-delta)
+            + theta * norm_pdf(delta))
+
+
+def expected_wall_overlapped(
+    n_windows: int,
+    compute_window_s: float,
+    compute_spread_s: float,
+    comm_window_s: float,
+    comm_spread_s: float,
+) -> float:
+    """Expected pipelined wall over ``n_windows``: the steady-state window
+    costs E[max(compute, comm)] (the exchange of window ``w`` hides behind
+    the compute of ``w+1``), plus the pipeline's fill/drain edges -- the
+    first window has no in-flight exchange to hide and the last exchange has
+    no compute left to hide behind. The sequential reference over the same
+    windows is ``n_windows * (compute + comm)``."""
+    if n_windows < 1:
+        raise ValueError("n_windows >= 1 required")
+    steady = expected_max_normals(
+        compute_window_s, compute_spread_s, comm_window_s, comm_spread_s)
+    return compute_window_s + (n_windows - 1) * steady + comm_window_s
 
 
 def max_tail_probability(p_tail: float, m: int) -> float:

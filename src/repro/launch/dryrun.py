@@ -83,6 +83,32 @@ def _dominant(terms: dict) -> str:
                key=lambda k: terms[k])
 
 
+def modelled_hbm_gib(row: dict) -> float:
+    """Per-device footprint (GiB) from XLA's memory_analysis on the row."""
+    mem = row.get("memory_analysis") or {}
+    return (mem.get("argument_bytes", 0) + mem.get("temp_bytes", 0)
+            + mem.get("output_bytes", 0)) / 2**30
+
+
+def enforce_hbm_budget(row: dict, budget_gib: float | None) -> dict:
+    """Fail-fast HBM gate: the modelled per-device footprint must fit.
+
+    Flips an OK row to FAIL (which trips the dry run's nonzero exit) when
+    XLA's own memory analysis says the compiled cell cannot live within
+    ``budget_gib`` per device -- the bound is recorded on the row either way
+    so the JSON stays auditable.
+    """
+    if not budget_gib or row.get("status") != "OK":
+        return row
+    got = modelled_hbm_gib(row)
+    row["hbm_gib_modelled"] = round(got, 3)
+    row["hbm_gib_budget"] = budget_gib
+    if got > budget_gib:
+        row["status"] = (f"FAIL(HBM: modelled {got:.2f} GiB/device exceeds "
+                         f"the --hbm-gib {budget_gib:g} budget)")
+    return row
+
+
 def _analyze(lowered, compiled, n_devices: int) -> dict:
     cost = compiled.cost_analysis()
     if isinstance(cost, (list, tuple)):
@@ -384,6 +410,13 @@ def main() -> None:
                     help="lower the adaptive two-phase exchange (phase-1 "
                          "count collective + bucket-ladder payloads via "
                          "lax.switch) instead of static s_max packets")
+    ap.add_argument("--hbm-gib", type=float, default=16.0,
+                    help="per-device HBM budget (GiB) enforced on the SNN "
+                         "rows: a cell whose modelled footprint (argument + "
+                         "temp + output bytes from XLA's memory_analysis) "
+                         "exceeds this FAILs the dry run instead of just "
+                         "printing the number (default 16, the v5e chip; "
+                         "0 disables the gate)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -397,7 +430,7 @@ def main() -> None:
             if arch == SNN_ARCH:
                 for sched in args.snn_schedule.split(","):
                     try:
-                        rows.append(dryrun_snn_cell(
+                        rows.append(enforce_hbm_budget(dryrun_snn_cell(
                             sched, multi_pod, args.snn_scale,
                             backend=args.snn_backend,
                             # routed applies to the structure-aware lumped
@@ -405,7 +438,7 @@ def main() -> None:
                             exchange=(args.snn_exchange
                                       if sched == "structure_aware" else ""),
                             shard_tables=not args.snn_replicated_tables,
-                            adaptive=args.snn_adaptive))
+                            adaptive=args.snn_adaptive), args.hbm_gib))
                     except Exception as e:
                         rows.append({
                             "arch": arch, "shape": sched,
@@ -448,9 +481,7 @@ def _print_row(row: dict) -> None:
         print(base + status)
         return
     r = row["roofline"]
-    mem = row["memory_analysis"]
-    per_dev_gb = (mem["argument_bytes"] + mem["temp_bytes"]
-                  + mem["output_bytes"]) / 2**30
+    per_dev_gb = modelled_hbm_gib(row)
     tables = ""
     if "inter_tables" in row:
         tb = row["inter_tables"]["table_bytes"]

@@ -20,6 +20,10 @@ the adaptive and static paths are bit-identical.
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import importlib.util
+import os
+import signal
 import time
 
 import jax
@@ -32,6 +36,98 @@ from repro.core.engine import EngineConfig, make_engine
 from repro.core import exchange as exchange_lib
 from repro.core import faults as faults_lib
 from repro.core import schedule as schedule_lib
+
+# XLA flags that let the overlapped exchange actually run concurrently on
+# GPU: collectives issued on their own async stream and the latency-hiding
+# scheduler free to move them off the critical path (the standard
+# set_platform recipe). GPU-ONLY: CPU/TPU jaxlib builds abort the process on
+# unknown --xla_gpu_* flags in XLA_FLAGS, so these must never be appended
+# unless a GPU platform is actually present.
+_XLA_OVERLAP_FLAGS = (
+    "--xla_gpu_enable_async_collectives=true",
+    "--xla_gpu_enable_latency_hiding_scheduler=true",
+    "--xla_gpu_enable_highest_priority_async_stream=true",
+)
+
+
+def xla_overlap_flags(platform: str | None = None) -> list[str]:
+    """The async-collective XLA flags appropriate for ``platform``.
+
+    ``None`` autodetects: 'gpu' only when a CUDA plugin is importable (the
+    cheap check that cannot itself initialize a backend). Everything except
+    'gpu' gets ``[]`` -- on this repo's CPU CI the flags would be a fatal
+    ``Unknown flags in XLA_FLAGS`` abort, and on TPU the latency-hiding
+    scheduler is already the default.
+    """
+    if platform is None:
+        def _importable(mod: str) -> bool:
+            try:
+                # find_spec raises (not returns None) when the parent
+                # package of a dotted name is itself missing.
+                return importlib.util.find_spec(mod) is not None
+            except ModuleNotFoundError:
+                return False
+
+        platform = "gpu" if any(
+            _importable(mod)
+            for mod in ("jax_cuda12_plugin", "jax_plugins.xla_cuda12")
+        ) else "cpu"
+    return list(_XLA_OVERLAP_FLAGS) if platform == "gpu" else []
+
+
+def enable_overlap_flags(platform: str | None = None) -> bool:
+    """Append the overlap flags to ``XLA_FLAGS`` (before backend init).
+
+    Must run before the first jax device/backend call of the process --
+    XLA parses the env var once at backend initialization. Returns whether
+    anything was enabled (False on non-GPU platforms).
+    """
+    flags = xla_overlap_flags(platform)
+    if not flags:
+        return False
+    current = os.environ.get("XLA_FLAGS", "")
+    missing = [f for f in flags if f not in current]
+    if missing:
+        os.environ["XLA_FLAGS"] = " ".join([current, *missing]).strip()
+    return True
+
+
+class StopFlag:
+    """SIGTERM/SIGINT -> "checkpoint at the next window boundary" flag.
+
+    The handler only flips a bool (async-signal-safe); the windowed run loop
+    polls it via ``stop_requested`` and performs the graceful stop -- drain
+    the in-flight window, write the final checkpoint, raise ``Preempted`` --
+    at the next window boundary, where the ring phase makes a bitwise resume
+    possible.
+    """
+
+    def __init__(self):
+        self.signum: int | None = None
+
+    def __call__(self) -> bool:
+        return self.signum is not None
+
+    @property
+    def name(self) -> str:
+        return signal.Signals(self.signum).name if self.signum else "stop"
+
+    def install(self) -> "StopFlag":
+        def handler(signum, frame):
+            del frame
+            first = self.signum is None
+            self.signum = signum
+            if first:
+                print(f"\n  caught {signal.Signals(signum).name}: finishing "
+                      f"the current window, then checkpointing and exiting "
+                      f"(repeat to kill immediately)", flush=True)
+            else:
+                signal.signal(signum, signal.SIG_DFL)
+                signal.raise_signal(signum)
+
+        signal.signal(signal.SIGTERM, handler)
+        signal.signal(signal.SIGINT, handler)
+        return self
 
 
 def _time_loop(fn, *args, repeats: int = 3):
@@ -140,6 +236,23 @@ def profile_phases(net, spec, cfg: EngineConfig, cycles: int = 200) -> None:
         print(f"{name:30s} {wall / cycles * 1e6:10.2f} {cycles / wall:12.1f}")
     win = _time_loop(eng.window, st)
     print(f"{'full window / D':30s} {win / D * 1e6:10.2f} {D / win:12.1f}")
+    if cfg.schedule == schedule_lib.STRUCTURE_AWARE:
+        # Sequential vs the double-buffered pipeline over the same windows:
+        # the pipelined run finishes window w's exchange while computing
+        # w+1, so the gap is the per-window comm wall the overlap absorbs
+        # (bit-identical trajectory either way).
+        eng_o = make_engine(
+            net, spec, dataclasses.replace(cfg, overlap_exchange=True))
+        k = max(cycles // D, 1)
+        seq = _time_loop(lambda s: eng.run(s, k), st)
+        pipe = _time_loop(lambda s: eng_o.run(s, k), st)
+        print(f"{f'window seq (run x{k})':30s} "
+              f"{seq / (k * D) * 1e6:10.2f} {k * D / seq:12.1f}")
+        print(f"{'window overlapped (pipeline)':30s} "
+              f"{pipe / (k * D) * 1e6:10.2f} {k * D / pipe:12.1f}")
+        print(f"  overlap hides {(seq - pipe) / k * 1e6:+.2f} us/window "
+              f"({(seq - pipe) / seq * 100:+.1f}% of sequential wall) "
+              f"on this host")
 
 
 def print_wire_volume(net, spec, cfg: EngineConfig, n_groups: int, gsz: int):
@@ -236,6 +349,14 @@ def _run_resilient(args, eng, net, mesh, exchange, n_windows):
                   f"straggler overhead "
                   f"{injector.predicted_jitter_s() * 1e3:.2f} ms/window "
                   f"(order-statistics sync model)")
+        if fault_cfg.comm_enabled:
+            print(f"  fault injection: exchange straggler mu="
+                  f"{fault_cfg.comm_mu_ms} ms sigma="
+                  f"{fault_cfg.comm_sigma_ms} ms/window -> predicted wall "
+                  f"sequential {injector.predicted_sequential_s() * 1e3:.2f}"
+                  f" (sum) vs overlapped "
+                  f"{injector.predicted_overlap_s() * 1e3:.2f} ms/window "
+                  f"(Clark E[max])")
     start_w = 0
     if args.resume:
         st, info = schedule_lib.restore_sim(
@@ -266,15 +387,24 @@ def _run_resilient(args, eng, net, mesh, exchange, n_windows):
             f"{n_windows}; increase --t-ms or start a fresh run")
     # A throwaway compile window would advance the trajectory, so the
     # resilient leg pays compilation inside its first timed window.
+    stop = StopFlag().install()
     try:
         res = schedule_lib.run_windows(
-            eng, st, remaining, checkpointer=ckpt, faults=injector)
+            eng, st, remaining, checkpointer=ckpt, faults=injector,
+            stop_requested=stop)
     except faults_lib.Preempted as exc:
         leg = exc.result.windows_done
-        print(f"  PREEMPTED after window {exc.window} ({leg} this leg); "
-              f"checkpoint written to {exc.checkpoint_path} -- resume with "
-              f"--resume --checkpoint-dir {exc.checkpoint_path}")
+        why = f"caught {stop.name}" if stop() else "simulated preemption"
+        hint = (f"checkpoint written to {exc.checkpoint_path} -- resume "
+                f"with --resume --checkpoint-dir {exc.checkpoint_path}"
+                if exc.checkpoint_path
+                else "no --checkpoint-dir was given, so nothing was saved")
+        print(f"  PREEMPTED ({why}) after window {exc.window} "
+              f"({leg} this leg); {hint}")
         raise SystemExit(0)
+    if res.overlapped:
+        print(f"  overlapped pipeline: {res.drains} in-flight drain(s) at "
+              f"checkpoint/end boundaries")
     if ckpt is not None:
         ckpt.close()
         if ckpt.retry_count:
@@ -328,12 +458,25 @@ def main() -> None:
                          "(EngineConfig.adaptive_exchange): counts first, "
                          "then bucket-sized payloads; SimState.overflow is "
                          "provably 0 and asserted after every run")
+    ap.add_argument("--overlap", action="store_true",
+                    help="double-buffered window pipeline "
+                         "(EngineConfig.overlap_exchange): window w's "
+                         "payload exchange overlaps window w+1's compute -- "
+                         "bitwise-identical trajectory, structure-aware "
+                         "schedule only; on GPU also enables XLA's "
+                         "async-collective + latency-hiding-scheduler flags")
     ap.add_argument("--compare", action="store_true",
                     help="run both schedules, assert identical spikes")
     ap.add_argument("--compare-adaptive", action="store_true",
                     help="run every selected schedule with BOTH the static "
                          "and the adaptive exchange, assert bit-identical "
                          "spike counts and zero adaptive overflow")
+    ap.add_argument("--compare-overlap", action="store_true",
+                    help="run every structure-aware leg BOTH sequential and "
+                         "overlapped, assert bit-identical spike counts; "
+                         "with a jitter-only --inject-fault spec the legs "
+                         "run through the fault harness and the pipelined "
+                         "injected wall must beat the sequential one")
     ap.add_argument("--profile", action="store_true",
                     help="report per-phase timings (ring read/clear, update, "
                          "intra/inter deliver) and the dense-vs-routed wire "
@@ -355,23 +498,53 @@ def main() -> None:
     ap.add_argument("--inject-fault", action="append", default=[],
                     metavar="SPEC",
                     help="deterministic fault injection (repeatable): "
-                         "'jitter:mu_ms=1.6,sigma_ms=0.3[,rho=R][,devices=N]'"
-                         " per-device compute jitter, "
-                         "'ckpt-io:fails=K' transient checkpoint-write "
-                         "failures, 'preempt:window=W' SIGTERM-style stop "
-                         "after W completed windows")
+                         "'jitter:mu_ms=1.6,sigma_ms=0.3[,rho=R][,devices=N]"
+                         "[,comm_mu_ms=M][,comm_sigma_ms=S]' per-device "
+                         "compute jitter plus a per-window exchange "
+                         "straggler, 'ckpt-io:fails=K' transient "
+                         "checkpoint-write failures, 'preempt:window=W' "
+                         "SIGTERM-style stop after W completed windows")
     ap.add_argument("--spikes-out", default=None,
                     help="write the final per-neuron spike_count to this "
                          ".npz (CI resume-equality checks)")
     args = ap.parse_args()
 
-    resilient = bool(args.checkpoint_dir or args.resume or args.inject_fault)
-    if resilient and (args.compare or args.compare_adaptive):
+    # --compare-overlap + a jitter-only fault spec is the one sanctioned
+    # fault/compare combination: every leg runs the fault harness with the
+    # same deterministic draws, so the sequential-vs-pipelined injected
+    # walls are directly comparable (the paper's max-vs-sum claim).
+    inject_compare = bool(args.inject_fault and args.compare_overlap)
+    resilient = bool(args.checkpoint_dir or args.resume
+                     or (args.inject_fault and not inject_compare))
+    if resilient and (args.compare or args.compare_adaptive
+                      or args.compare_overlap):
         raise SystemExit(
             "--checkpoint-dir/--resume/--inject-fault run one trajectory; "
-            "they cannot be combined with --compare/--compare-adaptive")
+            "they cannot be combined with --compare/--compare-adaptive/"
+            "--compare-overlap (exception: --compare-overlap with a "
+            "jitter-only --inject-fault spec)")
     if args.resume and not args.checkpoint_dir:
         raise SystemExit("--resume needs --checkpoint-dir")
+    compare_fault_cfg = None
+    if inject_compare:
+        if args.compare or args.compare_adaptive:
+            raise SystemExit(
+                "--inject-fault with --compare-overlap cannot also run "
+                "--compare/--compare-adaptive legs")
+        compare_fault_cfg = faults_lib.parse_fault_specs(
+            args.inject_fault, seed=args.seed)
+        if (compare_fault_cfg.preempt_after_window > 0
+                or compare_fault_cfg.ckpt_write_failures > 0):
+            raise SystemExit(
+                "--compare-overlap only accepts jitter specs in "
+                "--inject-fault; preempt/ckpt-io faults run one trajectory")
+    wants_overlap = args.overlap or args.compare_overlap
+    if wants_overlap and args.schedule == "conventional" and not args.compare:
+        raise SystemExit(
+            "--overlap/--compare-overlap need the structure-aware schedule "
+            "(the conventional schedule has no window-end exchange to hide)")
+    if wants_overlap and enable_overlap_flags():
+        print("XLA async-collective/latency-hiding flags enabled (gpu)")
 
     if args.model == "mam":
         spec = mam_spec(scale=args.scale)
@@ -422,8 +595,13 @@ def main() -> None:
     adaptives = ([False, True] if args.compare_adaptive
                  else [args.adaptive])
     spikes = {}
+    injected = {}
     for sched in schedules:
         for adaptive in adaptives:
+          overlaps = ([False, True]
+                      if args.compare_overlap and sched == "structure_aware"
+                      else [args.overlap and sched == "structure_aware"])
+          for overlap_on in overlaps:
             # The routed exchange routes the structure-aware window's lumped
             # global pathway; the conventional schedule always runs dense.
             exchange = (args.exchange if sched == "structure_aware"
@@ -433,7 +611,7 @@ def main() -> None:
                 delivery_backend=backend,
                 exchange=exchange if mesh is not None else "", seed=42,
                 shard_inter_tables=not args.replicated_inter_tables,
-                adaptive_exchange=adaptive)
+                adaptive_exchange=adaptive, overlap_exchange=overlap_on)
             if mesh is not None:
                 from repro.core.dist_engine import make_dist_engine
 
@@ -444,6 +622,19 @@ def main() -> None:
             if resilient:
                 st, wall, windows_run = _run_resilient(
                     args, eng, net, mesh, exchange, n_windows)
+            elif inject_compare:
+                # Same deterministic draws for every leg (injector state is
+                # keyed by (seed, window)), so the injected walls realize
+                # the exact sum-vs-max quantities the sync model prices.
+                injector = faults_lib.FaultInjector(
+                    compare_fault_cfg, n_devices=n_dev,
+                    delay_ratio=eng.delay_ratio)
+                res = schedule_lib.run_windows(
+                    eng, eng.init(), n_windows, faults=injector)
+                st = res.state
+                wall = float(res.window_times_s.sum())
+                windows_run = res.windows_done
+                injected[(sched, adaptive, overlap_on)] = res.injected_sleep_s
             else:
                 st = eng.init()
                 st, _ = eng.window(st)  # compile
@@ -464,7 +655,8 @@ def main() -> None:
             measured = float(st.shipped_bytes) / n_windows
             meas_s = (f", {measured:,.0f} measured B/window"
                       if measured else "")
-            mode = "adaptive" if adaptive else "static"
+            mode = ("adaptive" if adaptive else "static") + \
+                   ("+overlap" if overlap_on else "")
             print(f"  {sched:16s} "
                   f"({exchange if mesh is not None else 'local'}/{mode}):"
                   f" {wall:6.2f} s wall, RTF {rtf:8.1f}, "
@@ -476,7 +668,7 @@ def main() -> None:
                 raise SystemExit(
                     "adaptive exchange reported nonzero overflow -- the "
                     "two-phase sizing is broken (this must be impossible)")
-            spikes[(sched, adaptive)] = np.asarray(st.spike_count)
+            spikes[(sched, adaptive, overlap_on)] = np.asarray(st.spike_count)
             if args.spikes_out:
                 np.savez(args.spikes_out,
                          spike_count=np.asarray(st.spike_count),
@@ -485,20 +677,53 @@ def main() -> None:
 
     if args.compare:
         for adaptive in adaptives:
-            same = np.array_equal(spikes[("conventional", adaptive)],
-                                  spikes[("structure_aware", adaptive)])
-            mode = "adaptive" if adaptive else "static"
-            print(f"\nschedules produce identical spike counts ({mode}): "
-                  f"{same}")
-            if not same:
-                raise SystemExit(1)
+            ref = spikes[("conventional", adaptive, False)]
+            for (sched, ad, ovl), spk in spikes.items():
+                if sched == "conventional" or ad != adaptive:
+                    continue
+                same = np.array_equal(ref, spk)
+                mode = ("adaptive" if ad else "static") + \
+                       ("+overlap" if ovl else "")
+                print(f"\nschedules produce identical spike counts "
+                      f"({mode}): {same}")
+                if not same:
+                    raise SystemExit(1)
     if args.compare_adaptive:
         for sched in schedules:
-            same = np.array_equal(spikes[(sched, False)],
-                                  spikes[(sched, True)])
-            print(f"adaptive == static spike counts ({sched}): {same}")
+            for ovl in sorted({o for (s, _, o) in spikes if s == sched}):
+                same = np.array_equal(spikes[(sched, False, ovl)],
+                                      spikes[(sched, True, ovl)])
+                print(f"adaptive == static spike counts "
+                      f"({sched}{'/overlap' if ovl else ''}): {same}")
+                if not same:
+                    raise SystemExit(1)
+    if args.compare_overlap:
+        for (sched, adaptive, ovl) in sorted(spikes):
+            if not ovl:
+                continue
+            same = np.array_equal(spikes[(sched, adaptive, False)],
+                                  spikes[(sched, adaptive, True)])
+            mode = "adaptive" if adaptive else "static"
+            print(f"overlapped == sequential spike counts "
+                  f"({sched}/{mode}): {same}")
             if not same:
                 raise SystemExit(1)
+        if inject_compare and compare_fault_cfg.comm_enabled:
+            for (sched, adaptive, ovl), pipe_wall in sorted(
+                    injected.items()):
+                if not ovl:
+                    continue
+                seq_wall = injected[(sched, adaptive, False)]
+                mode = "adaptive" if adaptive else "static"
+                print(f"injected wall ({sched}/{mode}): sequential "
+                      f"{seq_wall:.3f} s (sum) vs pipelined "
+                      f"{pipe_wall:.3f} s (max) -- "
+                      f"{(1 - pipe_wall / seq_wall) * 100:.1f}% hidden")
+                if not pipe_wall < seq_wall:
+                    raise SystemExit(
+                        "pipelined injected wall failed to beat the "
+                        "sequential wall under jitter -- the overlap is "
+                        "not hiding the exchange")
 
 
 if __name__ == "__main__":

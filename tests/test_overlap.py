@@ -1,0 +1,273 @@
+"""Overlapped (double-buffered) window exchange: bit-identity + jitter walls.
+
+The tentpole contract under test: with ``EngineConfig.overlap_exchange`` the
+payload exchange of window ``w`` stays in flight while window ``w+1``
+computes, and the deferred receive scatter lands before ``w+1``'s first ring
+read -- so the trajectory is *bitwise identical* to the sequential schedule
+(spikes, rings, ``shipped_bytes``, overflow) across every exchange x
+packet-mode x window-body combination, survives a mid-run checkpoint/resume
+(the in-flight window drains before every save), and under injected faults
+the pipelined wall follows ``max(compute, comm)`` per window while the
+sequential wall pays the sum -- the closed-form quantities
+``sync_model.expected_wall_overlapped`` prices.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import faults as faults_lib
+from repro.core import schedule as schedule_lib
+from repro.core import sync_model
+from repro.core.areas import mam_benchmark_spec
+from repro.core.connectivity import build_network
+from repro.core.engine import EngineConfig, make_engine
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str, n_devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=540,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+def _quick_net():
+    spec = mam_benchmark_spec(n_areas=2, n_per_area=32, k_intra=4, k_inter=4)
+    return spec, build_network(spec, seed=12, outgoing=True)
+
+
+def _engine(spec, net, **cfg_kw):
+    cfg = EngineConfig(neuron_model="lif", delivery_backend="event",
+                      s_max_floor=4, **cfg_kw)
+    return make_engine(net, spec, cfg)
+
+
+def _assert_states_equal(a, b, tag=""):
+    assert int(a.t) == int(b.t), tag
+    assert int(a.overflow) == int(b.overflow), tag
+    assert float(np.asarray(a.shipped_bytes)) == float(
+        np.asarray(b.shipped_bytes)), tag
+    assert np.array_equal(np.asarray(a.ring), np.asarray(b.ring)), tag
+    assert np.array_equal(np.asarray(a.spike_count),
+                          np.asarray(b.spike_count)), tag
+
+
+# ---------------------------------------------------------------------------
+# single host: overlapped == sequential, bitwise
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("superstep", [True, False],
+                         ids=["superstep", "legacy"])
+@pytest.mark.parametrize("adaptive", [False, True],
+                         ids=["static", "adaptive"])
+def test_overlap_bitwise_equals_sequential(superstep, adaptive):
+    """run_windows and the jitted Engine.run pipeline both reproduce the
+    sequential trajectory exactly, across {static, adaptive} packets and
+    {superstep, legacy} window bodies."""
+    spec, net = _quick_net()
+    seq = _engine(spec, net, superstep=superstep, adaptive_exchange=adaptive)
+    ovl = _engine(spec, net, superstep=superstep, adaptive_exchange=adaptive,
+                  overlap_exchange=True)
+    assert ovl.window_overlap is not None and seq.window_overlap is None
+
+    ref = schedule_lib.run_windows(seq, seq.init(), 6)
+    res = schedule_lib.run_windows(ovl, ovl.init(), 6)
+    assert res.overlapped and res.drains == 1
+    assert not ref.overlapped and ref.drains == 0
+    assert np.array_equal(res.spikes_per_window, ref.spikes_per_window)
+    _assert_states_equal(res.state, ref.state)
+
+    # The jitted scan path (Engine.run carries the in-flight window through
+    # the scan and drains once at the end) agrees too.
+    st_r, _ = seq.run(seq.init(), 6)
+    st_o, _ = ovl.run(ovl.init(), 6)
+    _assert_states_equal(st_o, st_r, "Engine.run")
+
+    # And the overlap engine's compatibility `window` (empty in-flight +
+    # immediate drain) is the sequential window, usable interchangeably.
+    st_a, blk_a = seq.window(seq.init())
+    st_b, blk_b = ovl.window(ovl.init())
+    assert np.array_equal(np.asarray(blk_a), np.asarray(blk_b))
+    _assert_states_equal(st_a, st_b, "compat window")
+
+
+def test_overlap_requires_structure_aware():
+    with pytest.raises(ValueError, match="structure-aware"):
+        EngineConfig(schedule="conventional", overlap_exchange=True)
+
+
+@pytest.mark.parametrize("adaptive", [False, True], ids=["static", "adaptive"])
+def test_overlap_checkpoint_midrun_resume(tmp_path, adaptive):
+    """Preempt an overlapped run mid-pipeline: the in-flight window must
+    drain before the grace save, so the checkpoint is the sequential-
+    equivalent state -- resumable by a sequential OR an overlapped engine,
+    both landing bitwise on the uninterrupted reference (the
+    ``overlap_exchange`` flag is a layout key, not part of the trajectory
+    hash)."""
+    spec, net = _quick_net()
+    seq = _engine(spec, net, adaptive_exchange=adaptive)
+    ovl = _engine(spec, net, adaptive_exchange=adaptive,
+                  overlap_exchange=True)
+    ref = schedule_lib.run_windows(seq, seq.init(), 8)
+
+    inj = faults_lib.FaultInjector(
+        faults_lib.FaultConfig(preempt_after_window=5),
+        n_devices=1, delay_ratio=ovl.delay_ratio)
+    ckpt = schedule_lib.SimCheckpointer(str(tmp_path), ovl, net, every=3,
+                                        injector=inj)
+    with pytest.raises(faults_lib.Preempted) as exc_info:
+        schedule_lib.run_windows(ovl, ovl.init(), 8,
+                                 checkpointer=ckpt, faults=inj)
+    exc = exc_info.value
+    assert exc.window == 5
+    # every save drained first: the cadence save at 3 plus the grace save
+    assert exc.result.drains >= 2
+
+    for resumer, tag in ((seq, "sequential"), (ovl, "overlapped")):
+        st, info = schedule_lib.restore_sim(str(tmp_path), resumer, net)
+        assert info["step"] == 5, tag
+        res = schedule_lib.run_windows(resumer, st, 3)
+        assert np.array_equal(res.spikes_per_window,
+                              ref.spikes_per_window[5:]), tag
+        _assert_states_equal(res.state, ref.state, tag)
+
+
+def test_overlap_jitter_wall_max_vs_sum():
+    """The acceptance criterion in closed form: under injected compute +
+    exchange jitter the sequential loop's injected wall is exactly
+    sum(comp_w + comm_w) while the pipelined loop pays
+    comp_1 + sum(max(comp_w, comm_{w-1})) + comm_n -- strictly less -- and
+    both realized walls sit within 15% of the extended sync model
+    (``expected_wall_overlapped``, Clark's E[max])."""
+    spec, net = _quick_net()
+    seq = _engine(spec, net)
+    ovl = _engine(spec, net, overlap_exchange=True)
+    n = 40
+    fcfg = faults_lib.FaultConfig(
+        jitter_mu_ms=1.0, jitter_sigma_ms=0.1, jitter_devices=8,
+        comm_mu_ms=12.0, comm_sigma_ms=1.0, seed=4)
+
+    def injector():
+        return faults_lib.FaultInjector(fcfg, n_devices=4,
+                                        delay_ratio=seq.delay_ratio)
+
+    res_seq = schedule_lib.run_windows(seq, seq.init(), n, faults=injector())
+    res_ovl = schedule_lib.run_windows(ovl, ovl.init(), n, faults=injector())
+    assert np.array_equal(res_ovl.spikes_per_window, res_seq.spikes_per_window)
+
+    # Exact replay: the injector draws are a pure function of (seed, window).
+    twin = injector()
+    comp = [twin.window_jitter_s(w) for w in range(1, n + 1)]
+    comm = [twin.window_comm_jitter_s(w) for w in range(1, n + 1)]
+    want_seq = sum(c + x for c, x in zip(comp, comm))
+    want_ovl = (comp[0] + sum(max(comp[w], comm[w - 1]) for w in range(1, n))
+                + comm[-1])
+    assert res_seq.injected_sleep_s == pytest.approx(want_seq, rel=1e-9)
+    assert res_ovl.injected_sleep_s == pytest.approx(want_ovl, rel=1e-9)
+    assert res_ovl.injected_sleep_s < res_seq.injected_sleep_s
+
+    # ... and the sync model prices both walls within 15%.
+    inj = injector()
+    mu_comp, mu_comm = inj.predicted_jitter_s(), inj.predicted_comm_s()
+    pred_seq = n * (mu_comp + mu_comm)
+    pred_ovl = sync_model.expected_wall_overlapped(
+        n, mu_comp,
+        np.sqrt(seq.delay_ratio) * inj.model.sigma,
+        mu_comm, fcfg.comm_sigma_ms * 1e-3)
+    assert abs(res_seq.injected_sleep_s / pred_seq - 1) < 0.15
+    assert abs(res_ovl.injected_sleep_s / pred_ovl - 1) < 0.15
+    assert pred_ovl == pytest.approx(
+        n * inj.predicted_overlap_s(), rel=0.25)
+
+
+# ---------------------------------------------------------------------------
+# XLA flag gating (the CPU build aborts on unknown --xla_gpu_* flags)
+# ---------------------------------------------------------------------------
+
+
+def test_xla_overlap_flags_gpu_only(monkeypatch):
+    from repro.launch import simulate
+
+    assert simulate.xla_overlap_flags("cpu") == []
+    assert simulate.xla_overlap_flags("tpu") == []
+    gpu = simulate.xla_overlap_flags("gpu")
+    assert len(gpu) == 3 and all(f.startswith("--xla_gpu_") for f in gpu)
+    # autodetect on this CPU-only container must find no GPU plugin
+    assert simulate.xla_overlap_flags() == []
+
+    monkeypatch.setenv("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+    assert simulate.enable_overlap_flags("cpu") is False
+    assert os.environ["XLA_FLAGS"] == \
+        "--xla_force_host_platform_device_count=8"
+    assert simulate.enable_overlap_flags("gpu") is True
+    for flag in gpu:
+        assert flag in os.environ["XLA_FLAGS"]
+    before = os.environ["XLA_FLAGS"]
+    assert simulate.enable_overlap_flags("gpu") is True  # idempotent
+    assert os.environ["XLA_FLAGS"] == before
+
+
+# ---------------------------------------------------------------------------
+# distributed: the full exchange matrix in an 8-device subprocess
+# ---------------------------------------------------------------------------
+
+
+def test_dist_overlap_bitwise_matrix(tmp_path):
+    """{dense, routed} x {static, adaptive} x {superstep, legacy} on a 4x2
+    mesh: the shard_mapped overlapped pipeline (in-flight wire sharded
+    per-group for routed, replicated for dense) matches the sequential
+    engine bitwise, including the measured shipped_bytes."""
+    print(_run("""
+        import numpy as np, jax
+        from repro.core import schedule as schedule_lib
+        from repro.core.areas import mam_benchmark_spec
+        from repro.core.connectivity import build_network
+        from repro.core.dist_engine import make_dist_engine
+        from repro.core.engine import EngineConfig
+
+        spec = mam_benchmark_spec(n_areas=4, n_per_area=32, k_intra=4,
+                                  k_inter=4, rate_hz=30.0)
+        net = build_network(spec, seed=12, size_multiple=8, outgoing=True)
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        for exchange in ("dense", "routed"):
+            for adaptive in (False, True):
+                for superstep in (True, False):
+                    tag = f"{exchange}-{adaptive}-{superstep}"
+                    kw = dict(neuron_model="ignore_and_fire",
+                              delivery_backend="event", exchange=exchange,
+                              adaptive_exchange=adaptive,
+                              superstep=superstep, s_max_floor=4)
+                    seq = make_dist_engine(net, spec, mesh,
+                                           EngineConfig(**kw))
+                    ovl = make_dist_engine(net, spec, mesh, EngineConfig(
+                        overlap_exchange=True, **kw))
+                    ref = schedule_lib.run_windows(seq, seq.init(), 4)
+                    res = schedule_lib.run_windows(ovl, ovl.init(), 4)
+                    assert res.overlapped and res.drains == 1, tag
+                    assert np.array_equal(res.spikes_per_window,
+                                          ref.spikes_per_window), tag
+                    assert int(res.state.t) == int(ref.state.t), tag
+                    assert int(res.state.overflow) == int(
+                        ref.state.overflow), tag
+                    assert float(np.asarray(res.state.shipped_bytes)) == \
+                        float(np.asarray(ref.state.shipped_bytes)), tag
+                    assert np.array_equal(np.asarray(res.state.ring),
+                                          np.asarray(ref.state.ring)), tag
+                    assert np.array_equal(
+                        np.asarray(res.state.spike_count),
+                        np.asarray(ref.state.spike_count)), tag
+                    print("OK", tag)
+        print("DIST OVERLAP MATRIX DONE")
+    """))

@@ -214,6 +214,57 @@ def test_transient_ckpt_failures_are_survived(tmp_path):
     assert ckpt_manager.latest_step(str(tmp_path)) == 4
 
 
+def test_fault_spec_grammar_round_trip():
+    """format_fault_specs is the exact inverse of parse_fault_specs (modulo
+    seed, a CLI flag): parse(format(cfg)) == cfg, defaults emit nothing, and
+    the comm-jitter options survive the trip."""
+    import dataclasses
+
+    cfg = faults_lib.parse_fault_specs(
+        ["jitter:mu_ms=1.6,sigma_ms=0.3,comm_mu_ms=12.5,comm_sigma_ms=2.0,"
+         "rho=0.5,devices=16",
+         "ckpt-io:fails=2", "preempt:window=12"], seed=9)
+    specs = faults_lib.format_fault_specs(cfg)
+    assert specs == [
+        "jitter:mu_ms=1.6,sigma_ms=0.3,comm_mu_ms=12.5,comm_sigma_ms=2.0,"
+        "rho=0.5,devices=16",
+        "ckpt-io:fails=2", "preempt:window=12"]
+    assert faults_lib.parse_fault_specs(specs, seed=9) == cfg
+
+    assert faults_lib.format_fault_specs(faults_lib.FaultConfig()) == []
+    partial = faults_lib.FaultConfig(comm_mu_ms=3.0, preempt_after_window=4)
+    assert faults_lib.format_fault_specs(partial) == [
+        "jitter:comm_mu_ms=3.0", "preempt:window=4"]
+    assert faults_lib.parse_fault_specs(
+        faults_lib.format_fault_specs(partial)) == partial
+    # later specs merge over earlier ones
+    merged = faults_lib.parse_fault_specs(
+        ["jitter:mu_ms=1.0", "jitter:sigma_ms=0.5"])
+    assert merged.jitter_mu_ms == 1.0 and merged.jitter_sigma_ms == 0.5
+    assert dataclasses.replace(merged, jitter_mu_ms=0, jitter_sigma_ms=0) \
+        == faults_lib.FaultConfig()
+
+
+def test_fault_spec_grammar_rejects_malformed():
+    """Every malformed --inject-fault spec raises a ValueError that names
+    the offending spec/option -- no silent misconfiguration."""
+    cases = [
+        (["meteor:size=large"], "unknown fault kind"),
+        (["jitter:"], "sets no options"),
+        (["jitter"], "sets no options"),
+        (["jitter:mu_ms=1.6,turbo"], "bad fault option 'turbo'"),
+        (["jitter:mu_ms=fast"], "bad value 'fast' for option 'mu_ms'"),
+        (["jitter:mu=1.6"], r"unknown option\(s\) \['mu'\]"),
+        (["ckpt-io:"], "missing option 'fails'"),
+        (["ckpt-io:fails=two"], "bad value 'two' for option 'fails'"),
+        (["preempt:"], "missing option 'window'"),
+        (["preempt:window=1,when=now"], "unknown option"),
+    ]
+    for specs, pattern in cases:
+        with pytest.raises(ValueError, match=pattern):
+            faults_lib.parse_fault_specs(specs)
+
+
 def test_parse_fault_specs():
     cfg = faults_lib.parse_fault_specs(
         ["jitter:mu_ms=1.6,sigma_ms=0.3,rho=0.5,devices=16",
@@ -350,6 +401,151 @@ def test_elastic_reshard_restart(tmp_path, new_devices, new_groups):
         assert np.array_equal(res.spikes_per_window, ref["per_win"][4:])
         print("LEG2 OK", resh)
     """, n_devices=new_devices)
+
+
+def test_resume_across_table_layout_change(tmp_path):
+    """The replicated <-> sharded inter-table layouts (and the overlapped
+    flag) are execution details, not trajectory: the config-hash preflight
+    treats them as compatible, and a checkpoint taken under one layout
+    resumes under the other with bitwise-identical spikes, both directions,
+    on a distributed event/routed engine."""
+    spec = mam_benchmark_spec(n_areas=2, n_per_area=32, k_intra=4, k_inter=4)
+    net = build_network(spec, seed=12, outgoing=True)
+    cfg_a = EngineConfig(neuron_model="lif", delivery_backend="event",
+                         s_max_floor=4, shard_inter_tables=True)
+    cfg_b = EngineConfig(neuron_model="lif", delivery_backend="event",
+                         s_max_floor=4, shard_inter_tables=False,
+                         overlap_exchange=True)
+    h_a, pay_a = schedule_lib.resume_config_hash(cfg_a, net)
+    h_b, pay_b = schedule_lib.resume_config_hash(cfg_b, net)
+    assert h_a == h_b  # layout keys never enter the hash ...
+    assert pay_a["shard_inter_tables"] != pay_b["shard_inter_tables"]
+    assert pay_a["overlap_exchange"] != pay_b["overlap_exchange"]
+
+    print(_run(f"""
+        import numpy as np, jax
+        from repro.core import faults as faults_lib
+        from repro.core import schedule as schedule_lib
+        from repro.core.areas import mam_benchmark_spec
+        from repro.core.connectivity import build_network
+        from repro.core.dist_engine import make_dist_engine
+        from repro.core.engine import EngineConfig
+
+        spec = mam_benchmark_spec(n_areas=4, n_per_area=32, k_intra=4,
+                                  k_inter=4, rate_hz=30.0)
+        net = build_network(spec, seed=12, size_multiple=8, outgoing=True)
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+
+        def engine(sharded):
+            return make_dist_engine(net, spec, mesh, EngineConfig(
+                neuron_model="ignore_and_fire", delivery_backend="event",
+                exchange="routed", s_max_floor=4,
+                shard_inter_tables=sharded))
+
+        for save_sharded in (True, False):
+            tag = f"sharded={{save_sharded}}->{{not save_sharded}}"
+            d = r"{tmp_path}/" + tag
+            saver = engine(save_sharded)
+            ref = schedule_lib.run_windows(saver, saver.init(), 6)
+            inj = faults_lib.FaultInjector(
+                faults_lib.FaultConfig(preempt_after_window=3),
+                n_devices=8, delay_ratio=saver.delay_ratio)
+            ck = schedule_lib.SimCheckpointer(
+                d, saver, net, every=0, n_groups=4, injector=inj)
+            try:
+                schedule_lib.run_windows(saver, saver.init(), 6,
+                                         checkpointer=ck, faults=inj)
+                raise AssertionError("preemption did not fire: " + tag)
+            except faults_lib.Preempted:
+                pass
+            resumer = engine(not save_sharded)   # the OTHER table layout
+            st, info = schedule_lib.restore_sim(d, resumer, net, n_groups=4)
+            assert info["step"] == 3, tag
+            res = schedule_lib.run_windows(resumer, st, 3)
+            assert np.array_equal(res.spikes_per_window,
+                                  ref.spikes_per_window[3:]), tag
+            assert np.array_equal(np.asarray(res.state.ring),
+                                  np.asarray(ref.state.ring)), tag
+            assert np.array_equal(np.asarray(res.state.spike_count),
+                                  np.asarray(ref.state.spike_count)), tag
+            print("OK", tag)
+        print("LAYOUT RESUME DONE")
+    """))
+
+
+def test_sigterm_checkpoints_at_window_boundary(tmp_path):
+    """Satellite contract: a real SIGTERM delivered mid-run lands a graceful
+    grace checkpoint at the next window boundary (exit 0, resume hint), and
+    the resumed trajectory is bitwise identical to an uninterrupted run."""
+    import signal
+    import time as time_lib
+
+    driver = textwrap.dedent(f"""
+        import sys
+        from repro.core import faults as faults_lib
+        from repro.core import schedule as schedule_lib
+        from repro.core.areas import mam_benchmark_spec
+        from repro.core.connectivity import build_network
+        from repro.core.engine import EngineConfig, make_engine
+        from repro.launch.simulate import StopFlag
+
+        spec = mam_benchmark_spec(n_areas=2, n_per_area=32, k_intra=4,
+                                  k_inter=4)
+        net = build_network(spec, seed=12, outgoing=True)
+        eng = make_engine(net, spec, EngineConfig(
+            neuron_model="lif", delivery_backend="event", s_max_floor=4,
+            overlap_exchange=True))
+        stop = StopFlag().install()
+        inj = faults_lib.FaultInjector(
+            faults_lib.FaultConfig(jitter_mu_ms=25.0, seed=1),
+            n_devices=1, delay_ratio=eng.delay_ratio)
+        ck = schedule_lib.SimCheckpointer(r"{tmp_path}", eng, net, every=0)
+        try:
+            schedule_lib.run_windows(
+                eng, eng.init(), 200, checkpointer=ck, faults=inj,
+                stop_requested=stop,
+                on_window=lambda w, s: print(f"W{{w}}", flush=True))
+        except faults_lib.Preempted as e:
+            print(f"PREEMPTED {{e.window}} {{stop.name}}", flush=True)
+            sys.exit(0)
+        raise SystemExit("the run drained 200 windows without the signal")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.Popen([sys.executable, "-u", "-c", driver],
+                            stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+                            text=True, env=env)
+    try:
+        deadline = time_lib.monotonic() + 240
+        for line in proc.stdout:
+            if line.startswith("W") and int(line[1:]) >= 3:
+                proc.send_signal(signal.SIGTERM)
+                break
+            assert time_lib.monotonic() < deadline, "no window marker seen"
+        out, err = proc.communicate(timeout=120)
+    finally:
+        proc.kill()
+    assert proc.returncode == 0, f"STDOUT:\n{out}\nSTDERR:\n{err}"
+    preempted = [l for l in out.splitlines() if l.startswith("PREEMPTED")]
+    assert preempted, f"no graceful preemption line in:\n{out}\n{err}"
+    _, window, signame = preempted[0].split()
+    assert signame == "SIGTERM"
+    stopped_at = int(window)
+    assert stopped_at >= 3
+
+    # Resume from the grace checkpoint (with a *sequential* engine -- the
+    # overlap flag is a layout key) and match the uninterrupted reference.
+    eng, net = _quick_engine()
+    ref = schedule_lib.run_windows(eng, eng.init(), stopped_at + 3)
+    st, info = schedule_lib.restore_sim(str(tmp_path), eng, net)
+    assert info["step"] == stopped_at
+    res = schedule_lib.run_windows(eng, st, 3)
+    assert np.array_equal(res.spikes_per_window,
+                          ref.spikes_per_window[stopped_at:])
+    assert np.array_equal(np.asarray(res.state.ring),
+                          np.asarray(ref.state.ring))
+    assert np.array_equal(np.asarray(res.state.spike_count),
+                          np.asarray(ref.state.spike_count))
 
 
 def test_reshard_plan_helpers():
