@@ -452,6 +452,106 @@ def bench_table_bytes_production(results):
     ))
 
 
+def bench_table_memory(name, spec, net, results, *, n_groups=None, gsz=2):
+    """Per-device inter-table bytes across the three layouts
+    (phase=memory): replicated outgoing, per-group inbound slices (PR 4),
+    and inbound+subgroup slices (the memory-diet tentpole). The subgroup
+    numbers come from actually cutting the instantiated tables, so the
+    row prices real widths, not bounds."""
+    from repro.core import exchange as exchange_lib
+
+    if spec.k_inter == 0 or net.tgt_inter is None:
+        return
+    if net.n_pad % gsz != 0:
+        # The subgroup cut needs the neuron window to tile the padded area
+        # (odd n_pad configs exist in the full sweep); nothing to price.
+        print(f"\n-- {name} / memory diet: skipped "
+              f"(n_pad={net.n_pad} not divisible by subgroup={gsz})")
+        return
+    A = spec.n_areas
+    if n_groups is None:
+        n_groups = A if A <= 8 else 8
+    rep_in = exchange_lib.priced_inter_table_report(
+        net, n_groups=n_groups, gsz=gsz)
+    rep_sub = exchange_lib.priced_inter_table_report(
+        net, n_groups=n_groups, gsz=gsz, subgroup=gsz)
+    b_rep = rep_in["table_bytes"]["replicated"]
+    b_in = rep_in["table_bytes"]["sharded"]
+    b_sub = rep_sub["table_bytes"]["sharded"]
+    shrink = b_in / b_sub if b_sub else float("inf")
+    print(f"\n-- {name} / memory diet (bytes/device, {n_groups} groups x "
+          f"{gsz} subgroup, {net.bytes_per_synapse()} B/syn) --")
+    print(f"{'replicated':16s} {b_rep:14,d}  K={rep_in['k_out_replicated']}")
+    print(f"{'inbound':16s} {b_in:14,d}  K={rep_in['k_in_sharded']} "
+          f"({rep_in['table_bytes']['reduction']:.1f}x)")
+    print(f"{'inbound+subgroup':16s} {b_sub:14,d}  "
+          f"K={rep_sub['k_in_sharded']} "
+          f"({rep_sub['table_bytes']['reduction']:.1f}x, "
+          f"{shrink:.1f}x vs inbound)")
+    results.append(dict(
+        config=name, phase="memory", backend="event", exchange="dense",
+        bytes_per_device_replicated=b_rep,
+        bytes_per_device_inbound=b_in,
+        bytes_per_device_subgroup=b_sub,
+        k_in_inbound=rep_in["k_in_sharded"],
+        k_in_subgroup=rep_sub["k_in_sharded"],
+        reduction_inbound=round(rep_in["table_bytes"]["reduction"], 3),
+        reduction_subgroup=round(rep_sub["table_bytes"]["reduction"], 3),
+        subgroup_slice_shrink=round(shrink, 3),
+        bytes_per_synapse=net.bytes_per_synapse(),
+        n_groups=n_groups, gsz=gsz,
+    ))
+
+
+def bench_table_memory_production(results):
+    """Production memory-diet row (MAM x1, 16x16 mesh, SDS width bounds):
+    the per-device inter slice must shrink by >= 4x going from the PR 4
+    per-group inbound layout to the subgroup-sliced one (the acceptance
+    bar of the 16 GiB diet; the ideal is gsz=16x, the bound's +6 sigma+16
+    slack on a 256x smaller mean eats part of it). Asserted, so the
+    benchmark fails if the slice ever fattens back up."""
+    from repro.core import exchange as exchange_lib
+    from repro.core.areas import mam_spec
+    from repro.core.connectivity import network_sds
+
+    spec = mam_spec(scale=1.0)
+    n_groups, gsz = 16, 16
+    sds_rep = network_sds(spec, size_multiple=16, outgoing=True)
+    rep_in = exchange_lib.priced_inter_table_report(
+        sds_rep, n_groups=n_groups, gsz=gsz)
+    rep_sub = exchange_lib.priced_inter_table_report(
+        sds_rep, n_groups=n_groups, gsz=gsz, subgroup=gsz)
+    b_rep = rep_in["table_bytes"]["replicated"]
+    b_in = rep_in["table_bytes"]["sharded"]
+    b_sub = rep_sub["table_bytes"]["sharded"]
+    shrink = b_in / b_sub
+    print(f"\n-- mam_x1 production / memory diet ({n_groups} groups x "
+          f"{gsz} subgroup, SDS bounds, "
+          f"{sds_rep.bytes_per_synapse()} B/syn) --")
+    print(f"replicated       {b_rep / 2**30:8.1f} GiB/dev")
+    print(f"inbound          {b_in / 2**30:8.1f} GiB/dev "
+          f"(K={rep_in['k_in_sharded']})")
+    print(f"inbound+subgroup {b_sub / 2**30:8.1f} GiB/dev "
+          f"(K={rep_sub['k_in_sharded']}, {shrink:.1f}x vs inbound)")
+    assert shrink >= 4.0, (
+        f"subgroup slicing must shrink the production inter slice >= 4x "
+        f"over the per-group inbound layout; got {shrink:.1f}x")
+    results.append(dict(
+        config="mam_x1_16x16", phase="memory", backend="event",
+        exchange="dense",
+        bytes_per_device_replicated=b_rep,
+        bytes_per_device_inbound=b_in,
+        bytes_per_device_subgroup=b_sub,
+        k_in_inbound=rep_in["k_in_sharded"],
+        k_in_subgroup=rep_sub["k_in_sharded"],
+        reduction_inbound=round(rep_in["table_bytes"]["reduction"], 3),
+        reduction_subgroup=round(rep_sub["table_bytes"]["reduction"], 3),
+        subgroup_slice_shrink=round(shrink, 3),
+        bytes_per_synapse=sds_rep.bytes_per_synapse(),
+        n_groups=n_groups, gsz=gsz, sds_bounds=True,
+    ))
+
+
 def bench_resilience(name, spec, net, results, *, windows=300, cadence=50):
     """Checkpoint overhead + fault harness, end to end (phase=resilience).
 
@@ -711,6 +811,11 @@ _STATIC_GUARDED = {
     "wire": ("local_bytes", "global_bytes", "total_bytes"),
     "table": ("table_bytes_per_device_sharded",
               "table_bytes_per_device_replicated"),
+    # Memory-diet rows: the three per-device table layouts are pure shape
+    # arithmetic (instantiated widths on laptop configs, SDS bounds at
+    # production scale) -- any byte increase is a layout regression.
+    "memory": ("bytes_per_device_replicated", "bytes_per_device_inbound",
+               "bytes_per_device_subgroup"),
     # Adaptive two-phase rows: count-collective overhead, expectation-
     # window total, and the hard-cap worst case are all pure shape
     # arithmetic -- any increase vs the recorded baseline is a regression
@@ -830,10 +935,12 @@ def main(argv=None) -> None:
         bench_wire_volume(name, spec, net, results)
         bench_adaptive_wire(name, spec, net, results)
         bench_table_bytes(name, spec, net, results)
+        bench_table_memory(name, spec, net, results)
         if name == "quickstart":
             bench_resilience(name, spec, net, results)
             bench_overlap(name, spec, net, results)
     bench_table_bytes_production(results)
+    bench_table_memory_production(results)
     bench_adaptive_wire_production(results)
 
     payload = dict(

@@ -52,13 +52,17 @@ class Network:
     # [A, n_pad] f32 -- per-neuron target rate (drive/emission), Hz.
     rate_hz: jax.Array
     # intra-area synapses ---------------------------------------------------
+    # Delays are stored int8 whenever the spec's step cutoffs fit in [1, 127]
+    # (the production MAM tops out at steps_inter_max=100) and widened to
+    # int32 only at the gather/deposit sites -- a third off every synapse's
+    # delay bytes. Tables fall back to int32 for exotic specs.
     src_intra: jax.Array    # [A, n_pad, K_i] int32, index within the same area
     w_intra: jax.Array      # [A, n_pad, K_i] f32
-    delay_intra: jax.Array  # [A, n_pad, K_i] int32, steps in [1, steps_intra_max]
+    delay_intra: jax.Array  # [A, n_pad, K_i] int8/int32, steps in [1, steps_intra_max]
     # inter-area synapses ---------------------------------------------------
     src_inter: jax.Array    # [A, n_pad, K_e] int32, global id = area * n_pad + idx
     w_inter: jax.Array      # [A, n_pad, K_e] f32
-    delay_inter: jax.Array  # [A, n_pad, K_e] int32, steps in [D, steps_inter_max]
+    delay_inter: jax.Array  # [A, n_pad, K_e] int8/int32, steps in [D, steps_inter_max]
 
     # Optional *outgoing* adjacency (event-driven delivery, see
     # kernels/ops.event_deliver): per source neuron, padded target lists.
@@ -80,9 +84,16 @@ class Network:
     # ``tgt_map`` remaps them exactly as for the replicated table), padded
     # with -1 / weight 0. ``K_in`` ~= K_out / S, so each device holds
     # ~1/S of the replicated table bytes.
-    tgt_inter_in: jax.Array | None = None   # [S, A*n_pad, K_in] int32
-    wout_inter_in: jax.Array | None = None  # [S, A*n_pad, K_in] f32
-    dout_inter_in: jax.Array | None = None  # [S, A*n_pad, K_in] int32
+    #
+    # With ``subgroup > 1`` the tables are additionally sliced over the
+    # within-group neuron-window axis: ``[S, gsz, A * n_pad, K_in]`` where
+    # lane ``l`` of group ``s`` keeps only the synapses landing in its own
+    # ``n_pad / gsz`` window of each owned area -- each *device* (not just
+    # each group) holds ~1/(S * gsz) of the inter edges, and ``K_in``
+    # shrinks another ~gsz x.
+    tgt_inter_in: jax.Array | None = None   # [S(, gsz), A*n_pad, K_in] int32
+    wout_inter_in: jax.Array | None = None  # [S(, gsz), A*n_pad, K_in] f32
+    dout_inter_in: jax.Array | None = None  # [S(, gsz), A*n_pad, K_in] int8/int32
 
     # static metadata (ints are fine as static fields of the dataclass pytree)
     n_pad: int = dataclasses.field(metadata=dict(static=True), default=0)
@@ -135,9 +146,11 @@ class Network:
         return self.n_areas * self.n_pad
 
     def bytes_per_synapse(self) -> int:
-        # src int32 + weight f32 + delay int32 (delay could be int8; we keep
-        # int32 for XLA-friendly gathers and count it honestly here).
-        return 12
+        # src/tgt int32 + weight f32 + the delay table's own dtype: int8 (9
+        # B/syn) whenever the spec's step cutoffs fit [1, 127] -- every
+        # production config -- int32 (12 B/syn) otherwise. Delays widen to
+        # int32 only at the gather sites.
+        return 8 + np.dtype(self.delay_inter.dtype).itemsize
 
     def synapse_count(self) -> int:
         return int(
@@ -158,6 +171,17 @@ def _outgoing_k_bound(k: int) -> int:
     if k <= 0:
         return 0
     return int(k + math.ceil(6.0 * math.sqrt(k)) + 8)
+
+
+def _delay_dtype(hi_steps: int):
+    """The narrowest delay-table dtype covering ``[1, hi_steps]``.
+
+    int8 whenever the pathway's step cutoff fits in 127 (the production MAM
+    tops out at ``steps_inter_max=100``); int32 otherwise. Every consumer
+    widens to int32 at its gather/deposit site, so the choice is pure
+    storage layout -- trajectories are bitwise identical either way.
+    """
+    return np.int8 if hi_steps <= 127 else np.int32
 
 
 def _inbound_k_bound(k: int, n_shards: int) -> int:
@@ -185,6 +209,7 @@ def network_sds(
     outgoing: bool = False,
     inter_shards: int = 0,
     inter_shard_mode: str = "group",
+    subgroup: int = 1,
 ) -> Network:
     """ShapeDtypeStruct stand-in for :func:`build_network` (no allocation).
 
@@ -202,28 +227,54 @@ def network_sds(
     stand-in carries the ``[S, A * n_pad, K_in]`` *inbound* inter tables
     (width bound :func:`_inbound_k_bound`) and no replicated inter tables,
     so the dry-run lowers -- and its memory analysis prices -- the sharded
-    receive path at production scale.
+    receive path at production scale. ``subgroup > 1`` additionally slices
+    the inbound stand-in over the within-group neuron-window axis
+    (``[S, subgroup, A * n_pad, K_in]``, width bound over ``S * subgroup``
+    effective shards), matching ``shard_inter_tables(subgroup=)`` -- and
+    the outgoing intra tables the same way (``[subgroup, A, n_pad,
+    K_lane]``, matching :func:`slice_intra_tables`), since their
+    lane-replication otherwise dominates the event path's per-device HBM.
     """
     import jax
 
     A = spec.n_areas
     n_pad = spec.padded_area_size(size_multiple)
     K_i, K_e = spec.k_intra, spec.k_inter
+    dt_i = _delay_dtype(spec.steps_intra_max)
+    dt_e = _delay_dtype(spec.steps_inter_max)
     s = jax.ShapeDtypeStruct
     out: dict = {}
     if outgoing:
-        k_oi = _outgoing_k_bound(K_i)
-        out.update(
-            tgt_intra=s((A, n_pad, k_oi), jnp.int32),
-            wout_intra=s((A, n_pad, k_oi), jnp.float32),
-            dout_intra=s((A, n_pad, k_oi), jnp.int32),
-        )
-        if K_e > 0 and inter_shards > 0:
-            k_ie = _inbound_k_bound(K_e, inter_shards)
+        if subgroup > 1:
+            # Subgroup-sliced outgoing intra tables
+            # (:func:`slice_intra_tables`): [gsz, A, n_pad, K_lane], the
+            # leading lane axis sharded over the subgroup so the local
+            # pathway's tables stop being lane-replicated.
+            k_li = _inbound_k_bound(K_i, subgroup)
             out.update(
-                tgt_inter_in=s((inter_shards, A * n_pad, k_ie), jnp.int32),
-                wout_inter_in=s((inter_shards, A * n_pad, k_ie), jnp.float32),
-                dout_inter_in=s((inter_shards, A * n_pad, k_ie), jnp.int32),
+                tgt_intra=s((subgroup, A, n_pad, k_li), jnp.int32),
+                wout_intra=s((subgroup, A, n_pad, k_li), jnp.float32),
+                dout_intra=s((subgroup, A, n_pad, k_li), dt_i),
+            )
+        else:
+            k_oi = _outgoing_k_bound(K_i)
+            out.update(
+                tgt_intra=s((A, n_pad, k_oi), jnp.int32),
+                wout_intra=s((A, n_pad, k_oi), jnp.float32),
+                dout_intra=s((A, n_pad, k_oi), dt_i),
+            )
+        if K_e > 0 and inter_shards > 0:
+            if subgroup > 1 and inter_shard_mode != "group":
+                raise ValueError(
+                    "subgroup slicing applies to the 'group' mode only "
+                    "(the 'window' mode is already per-device)")
+            k_ie = _inbound_k_bound(K_e, inter_shards * max(subgroup, 1))
+            lead = ((inter_shards, subgroup) if subgroup > 1
+                    else (inter_shards,))
+            out.update(
+                tgt_inter_in=s((*lead, A * n_pad, k_ie), jnp.int32),
+                wout_inter_in=s((*lead, A * n_pad, k_ie), jnp.float32),
+                dout_inter_in=s((*lead, A * n_pad, k_ie), dt_e),
                 inter_shard_mode=inter_shard_mode,
             )
         elif K_e > 0:
@@ -231,17 +282,17 @@ def network_sds(
             out.update(
                 tgt_inter=s((A, n_pad, k_oe), jnp.int32),
                 wout_inter=s((A, n_pad, k_oe), jnp.float32),
-                dout_inter=s((A, n_pad, k_oe), jnp.int32),
+                dout_inter=s((A, n_pad, k_oe), dt_e),
             )
     return Network(
         alive=s((A, n_pad), jnp.bool_),
         rate_hz=s((A, n_pad), jnp.float32),
         src_intra=s((A, n_pad, K_i), jnp.int32),
         w_intra=s((A, n_pad, K_i), jnp.float32),
-        delay_intra=s((A, n_pad, K_i), jnp.int32),
+        delay_intra=s((A, n_pad, K_i), dt_i),
         src_inter=s((A, n_pad, K_e), jnp.int32),
         w_inter=s((A, n_pad, K_e), jnp.float32),
-        delay_inter=s((A, n_pad, K_e), jnp.int32),
+        delay_inter=s((A, n_pad, K_e), dt_e),
         n_pad=n_pad,
         n_areas=A,
         ring_len=spec.ring_len,
@@ -274,7 +325,7 @@ def _draw_delays(
 ) -> np.ndarray:
     """Gaussian delays on the dt grid with [lo, hi] cutoffs (paper §4.2)."""
     d = rng.normal(mean_ms, std_ms, size=shape) / dt_ms
-    return np.clip(np.round(d), lo_steps, hi_steps).astype(np.int32)
+    return np.clip(np.round(d), lo_steps, hi_steps).astype(_delay_dtype(hi_steps))
 
 
 def _invert_adjacency(
@@ -301,7 +352,8 @@ def _invert_adjacency(
     k_out = int(counts.max()) if counts.size else 0
     tgt = np.full((n_src, k_out), -1, dtype=np.int32)
     wout = np.zeros((n_src, k_out), dtype=np.float32)
-    dout = np.ones((n_src, k_out), dtype=np.int32)
+    # Preserve the incoming delay dtype (int8 narrow tables stay narrow).
+    dout = np.ones((n_src, k_out), dtype=d.dtype)
     if tgt_ids is None:
         tgt_ids = np.arange(n_tgt, dtype=np.int64) + tgt_base
     tgt_ids = np.repeat(np.asarray(tgt_ids, dtype=np.int64), k)[order]
@@ -459,21 +511,27 @@ def build_network(
 
 
 def _inbound_target_rows(
-    mode: str, shard: int, n_shards: int, n_areas: int, n_pad: int
+    mode: str, shard: int, n_shards: int, n_areas: int, n_pad: int,
+    subgroup: int = 1, lane: int = 0,
 ) -> np.ndarray:
-    """Global row ids of the targets shard ``shard`` owns.
+    """Global row ids of the targets shard ``shard`` (lane ``lane``) owns.
 
     ``'group'`` -- the structure-aware placement: shards own ``A / S``
     consecutive areas (row-major over the mesh's area axes, matching
-    ``dist_engine`` placement and ``exchange._group_index``).
+    ``dist_engine`` placement and ``exchange._group_index``). With
+    ``subgroup > 1``, lane ``lane`` of the shard additionally owns only its
+    ``n_pad / subgroup`` neuron window of each owned area (matching the
+    mesh's last-axis window split, ``exchange._axis_offset``).
     ``'window'`` -- the conventional round-robin placement: shards own a
     ``n_pad / S`` neuron window of *every* area (matching
     ``exchange._axis_offset`` over all mesh axes).
     """
     if mode == "group":
         a_loc = n_areas // n_shards
-        return np.arange(shard * a_loc * n_pad, (shard + 1) * a_loc * n_pad,
-                         dtype=np.int64)
+        n_loc = n_pad // subgroup
+        areas = np.arange(shard * a_loc, (shard + 1) * a_loc, dtype=np.int64)
+        win = np.arange(lane * n_loc, (lane + 1) * n_loc, dtype=np.int64)
+        return (areas[:, None] * n_pad + win[None, :]).reshape(-1)
     if mode == "window":
         n_loc = n_pad // n_shards
         win = np.arange(shard * n_loc, (shard + 1) * n_loc, dtype=np.int64)
@@ -483,7 +541,7 @@ def _inbound_target_rows(
 
 
 def shard_inter_tables(
-    net: Network, n_shards: int, *, mode: str = "group"
+    net: Network, n_shards: int, *, mode: str = "group", subgroup: int = 1
 ) -> Network:
     """Re-cut the replicated outgoing inter tables into per-shard inbound
     slices (the tentpole of the sharded receive path).
@@ -508,15 +566,30 @@ def shard_inter_tables(
     bit-identical to the replicated table by construction.
 
     Returns a new :class:`Network` carrying the sharded tables with any
-    replicated inter tables dropped (``tgt_intra`` untouched -- the local
-    pathway is already group-sharded by placement). Built entirely from the
+    replicated inter tables dropped (``tgt_intra`` untouched -- its
+    subgroup cut is the separate :func:`slice_intra_tables`). Built entirely from the
     *incoming* ``src_inter/w_inter/delay_inter`` tensors, so the replicated
     outgoing tables never need to exist: a production engine can go
     straight from ``build_network()`` to the ~1/S inbound slices without
     materialising the ~150 GiB replicated layout this refactor removes.
+    With ``subgroup > 1`` ('group' mode only) the slices are cut once more
+    over the within-group neuron-window axis into a
+    ``[S, subgroup, A * n_pad, K_in]`` stack: lane ``l`` of group ``s``
+    keeps only the synapses landing in its own ``n_pad / subgroup`` window
+    of each owned area. The distributed engine shards BOTH leading axes
+    (area groups x subgroup lanes), so each device holds ~1/(S * subgroup)
+    of the inter edges and ``K_in`` shrinks another ~subgroup x. Delivery
+    stays bitwise: every lane's receive ``tgt_map`` already masks targets
+    outside its window to the absorbing row, so removing those synapses
+    from its slice changes nothing it would have kept.
+
     Works on ShapeDtypeStruct stand-ins too (dry-run lowering), where the
     width is the deterministic bound of :func:`_inbound_k_bound`.
     """
+    if subgroup > 1 and mode != "group":
+        raise ValueError(
+            "subgroup slicing applies to the 'group' mode only (the "
+            "'window' mode is already per-device)")
     if net.k_inter == 0:
         return dataclasses.replace(net, inter_shard_mode=mode)
     A, n_pad = net.n_areas, net.n_pad
@@ -524,17 +597,21 @@ def shard_inter_tables(
         raise ValueError(f"n_areas={A} not divisible by {n_shards} shards")
     if mode == "window" and n_pad % n_shards != 0:
         raise ValueError(f"n_pad={n_pad} not divisible by {n_shards} shards")
+    if subgroup > 1 and n_pad % subgroup != 0:
+        raise ValueError(
+            f"n_pad={n_pad} not divisible by subgroup={subgroup}")
     n_rows = A * n_pad
     drop = dict(tgt_inter=None, wout_inter=None, dout_inter=None)
+    lead = (n_shards, subgroup) if subgroup > 1 else (n_shards,)
 
     if not hasattr(net.src_inter, "__array__"):  # ShapeDtypeStruct stand-in
-        k_in = _inbound_k_bound(net.k_inter, n_shards)
+        k_in = _inbound_k_bound(net.k_inter, n_shards * max(subgroup, 1))
         s = jax.ShapeDtypeStruct
         return dataclasses.replace(
             net,
-            tgt_inter_in=s((n_shards, n_rows, k_in), jnp.int32),
-            wout_inter_in=s((n_shards, n_rows, k_in), jnp.float32),
-            dout_inter_in=s((n_shards, n_rows, k_in), jnp.int32),
+            tgt_inter_in=s((*lead, n_rows, k_in), jnp.int32),
+            wout_inter_in=s((*lead, n_rows, k_in), jnp.float32),
+            dout_inter_in=s((*lead, n_rows, k_in), net.delay_inter.dtype),
             inter_shard_mode=mode,
             **drop,
         )
@@ -545,24 +622,111 @@ def shard_inter_tables(
     d = np.asarray(net.delay_inter).reshape(n_rows, K_e)
     ts, ws, ds = [], [], []
     for shard in range(n_shards):
-        rows = _inbound_target_rows(mode, shard, n_shards, A, n_pad)
-        t_, w_, d_ = _invert_adjacency(
-            src[rows], w[rows], d[rows], n_rows, tgt_ids=rows)
-        ts.append(t_), ws.append(w_), ds.append(d_)
+        for lane in range(max(subgroup, 1)):
+            rows = _inbound_target_rows(
+                mode, shard, n_shards, A, n_pad, max(subgroup, 1), lane)
+            t_, w_, d_ = _invert_adjacency(
+                src[rows], w[rows], d[rows], n_rows, tgt_ids=rows)
+            ts.append(t_), ws.append(w_), ds.append(d_)
     k_in = max(t.shape[1] for t in ts)
 
     def padk(x, fill):
         return np.pad(x, ((0, 0), (0, k_in - x.shape[1])),
                       constant_values=fill)
 
+    def stack(parts, fill):
+        out = np.stack([padk(p, fill) for p in parts])
+        return jnp.asarray(out.reshape(*lead, n_rows, k_in))
+
     return dataclasses.replace(
         net,
-        tgt_inter_in=jnp.asarray(np.stack([padk(t, -1) for t in ts])),
-        wout_inter_in=jnp.asarray(np.stack([padk(w_, 0.0) for w_ in ws])),
-        dout_inter_in=jnp.asarray(np.stack([padk(d_, 1) for d_ in ds])),
+        tgt_inter_in=stack(ts, -1),
+        wout_inter_in=stack(ws, 0.0),
+        dout_inter_in=stack(ds, 1),
         inter_shard_mode=mode,
         **drop,
     )
+
+
+def slice_intra_tables(net: Network, subgroup: int) -> Network:
+    """Slice the outgoing intra (local-pathway) tables over the subgroup
+    (within-group neuron-window) axis.
+
+    The structure-aware event path receives the *whole group's* fired ids
+    each cycle (subgroup all-gather) and every lane scatters through the
+    full ``[A, n_pad, K_out]`` outgoing intra tables, masking targets
+    outside its own ``n_pad / subgroup`` window to the absorbing row
+    (``to_local``). Those tables are therefore replicated over the
+    subgroup axis -- at production MAM scale that replication, not the
+    inter tables, dominates per-device HBM (~15 GiB of the event path's
+    footprint). This cuts them the same way :func:`shard_inter_tables`
+    cuts the inbound inter slices: lane ``l`` keeps, per source row, only
+    the synapses whose within-area target lands in its own window, stacked
+    into a ``[subgroup, A, n_pad, K_lane]`` table whose leading axis the
+    distributed engine shards over the subgroup -- ``K_lane`` shrinks
+    ~subgroup x and the replication is gone.
+
+    Bitwise-safe by the same argument as the inter cut: the surviving
+    entries of each row keep their original relative order (stable
+    compaction), and the entries removed are exactly the ones the lane's
+    ``tgt_map`` already masked out -- the ring-buffer deposits a lane
+    actually makes are the same values in the same order.
+
+    Works on ShapeDtypeStruct stand-ins too (dry-run lowering), where the
+    width is the deterministic bound of :func:`_inbound_k_bound` (a
+    source's intra targets spread ~uniformly over the lanes, like inter
+    targets over shards).
+    """
+    if subgroup <= 1 or net.tgt_intra is None:
+        return net
+    if net.tgt_intra.ndim == 4:
+        raise ValueError("outgoing intra tables are already subgroup-sliced")
+    A, n_pad = net.n_areas, net.n_pad
+    if n_pad % subgroup != 0:
+        raise ValueError(
+            f"n_pad={n_pad} not divisible by subgroup={subgroup}")
+
+    if not hasattr(net.tgt_intra, "__array__"):  # ShapeDtypeStruct stand-in
+        k_li = _inbound_k_bound(net.k_intra, subgroup)
+        s = jax.ShapeDtypeStruct
+        return dataclasses.replace(
+            net,
+            tgt_intra=s((subgroup, A, n_pad, k_li), jnp.int32),
+            wout_intra=s((subgroup, A, n_pad, k_li), jnp.float32),
+            dout_intra=s((subgroup, A, n_pad, k_li), net.dout_intra.dtype),
+        )
+
+    tgt = np.asarray(net.tgt_intra).reshape(A * n_pad, -1)
+    w = np.asarray(net.wout_intra).reshape(A * n_pad, -1)
+    d = np.asarray(net.dout_intra).reshape(A * n_pad, -1)
+    K = tgt.shape[-1]
+    n_loc = n_pad // subgroup
+    cols = np.arange(K, dtype=np.int64)[None, :]
+    lanes = []
+    k_lane = 0
+    for lane in range(subgroup):
+        lo = lane * n_loc
+        keep = (tgt >= lo) & (tgt < lo + n_loc)   # -1 padding never kept
+        order = np.argsort(~keep, axis=1, kind="stable")
+        cnt = keep.sum(axis=1)
+        valid = cols < cnt[:, None]
+        lanes.append((
+            np.where(valid, np.take_along_axis(tgt, order, axis=1),
+                     tgt.dtype.type(-1)),
+            np.where(valid, np.take_along_axis(w, order, axis=1),
+                     w.dtype.type(0)),
+            np.where(valid, np.take_along_axis(d, order, axis=1),
+                     d.dtype.type(1)),
+        ))
+        k_lane = max(k_lane, int(cnt.max(initial=0)))
+
+    def stack(i):
+        return jnp.asarray(
+            np.stack([ln[i][:, :k_lane] for ln in lanes])
+            .reshape(subgroup, A, n_pad, k_lane))
+
+    return dataclasses.replace(
+        net, tgt_intra=stack(0), wout_intra=stack(1), dout_intra=stack(2))
 
 
 def area_adjacency(

@@ -106,10 +106,24 @@ def network_pspecs(mesh: Mesh, schedule: str, like: Network | None = None) -> Ne
         area = P(_area_axes(mesh), _subgroup_axis(mesh))
         syn = P(_area_axes(mesh), _subgroup_axis(mesh), None)
         out_intra = P(_area_axes(mesh), None, None)
+        if like is not None and like.tgt_intra is not None \
+                and like.tgt_intra.ndim == 4:
+            # [gsz, A, n_pad, K_lane]: subgroup-sliced outgoing intra
+            # tables (connectivity.slice_intra_tables) -- the leading lane
+            # axis shards over the subgroup, so the local pathway's tables
+            # stop being replicated across the gsz lanes of each group.
+            out_intra = P(_subgroup_axis(mesh), _area_axes(mesh), None,
+                          None)
         # [G, n_rows, K_in]: one group slice per area-group shard,
         # replicated over the subgroup (every lane scatters its own
         # neuron window of the group's targets).
         inter_in = P(_area_axes(mesh), None, None)
+        if like is not None and like.tgt_inter_in is not None \
+                and like.tgt_inter_in.ndim == 4:
+            # [G, gsz, n_rows, K_in]: subgroup-sliced inbound tables -- the
+            # second axis shards over the subgroup so each lane holds only
+            # the rows targeting its own neuron window.
+            inter_in = P(_area_axes(mesh), _subgroup_axis(mesh), None, None)
     else:  # conventional round-robin analogue: slice every area everywhere
         area = P(None, tuple(mesh.axis_names))
         syn = P(None, tuple(mesh.axis_names), None)
@@ -225,21 +239,54 @@ def make_dist_engine(
     if (backend == "event" or cfg.exchange == "routed") and net.k_inter > 0:
         if cfg.schedule == STRUCTURE_AWARE:
             n_shards = math.prod(mesh.shape[a] for a in _area_axes(mesh))
+            gsz = mesh.shape[_subgroup_axis(mesh)]
             mode = "group"
         else:
-            n_shards, mode = mesh.size, "window"
+            n_shards, gsz, mode = mesh.size, 1, "window"
         if net.tgt_inter_in is not None:
+            got_sub = (net.tgt_inter_in.shape[1]
+                       if net.tgt_inter_in.ndim == 4 else 1)
+            want_sub = gsz if net.tgt_inter_in.ndim == 4 else 1
             if (net.tgt_inter_in.shape[0] != n_shards
+                    or got_sub != want_sub
                     or net.inter_shard_mode != mode):
                 raise ValueError(
                     f"sharded inter tables ({net.tgt_inter_in.shape[0]} "
-                    f"{net.inter_shard_mode!r} shards) do not match the "
-                    f"mesh ({n_shards} {mode!r} shards)")
+                    f"{net.inter_shard_mode!r} shards x {got_sub} lanes) "
+                    f"do not match the "
+                    f"mesh ({n_shards} {mode!r} shards x {want_sub} lanes)")
         elif cfg.shard_inter_tables:
             # Built from the incoming tensors -- no replicated outgoing
             # inter tables needed (build_network(outgoing=True) is only
             # required for the event backend's intra tables above).
-            net = connectivity_lib.shard_inter_tables(net, n_shards, mode=mode)
+            # With subgroup_inter_tables the structure-aware cut also
+            # slices each group's table over the gsz neuron windows
+            # ([S, gsz, rows, K]) so a lane holds only its own targets.
+            sub = (gsz if cfg.subgroup_inter_tables and mode == "group"
+                   else 1)
+            net = connectivity_lib.shard_inter_tables(
+                net, n_shards, mode=mode, subgroup=sub)
+    # The outgoing intra tables get the same subgroup treatment: under the
+    # structure-aware event path every lane scatters the whole group's
+    # fired ids through them, masking foreign targets -- so they are
+    # lane-replicated unless each lane's slice is cut down to its own
+    # neuron window (connectivity.slice_intra_tables). At production scale
+    # that replication, not the inter tables, dominates per-device HBM.
+    if net.tgt_intra is not None and net.tgt_intra.ndim == 4:
+        gsz = mesh.shape[_subgroup_axis(mesh)]
+        if cfg.schedule != STRUCTURE_AWARE:
+            raise ValueError(
+                "subgroup-sliced intra tables need the structure-aware "
+                "schedule (the conventional cut is already per-device)")
+        if net.tgt_intra.shape[0] != gsz:
+            raise ValueError(
+                f"subgroup-sliced intra tables ({net.tgt_intra.shape[0]} "
+                f"lanes) do not match the mesh subgroup ({gsz})")
+    elif (backend == "event" and net.tgt_intra is not None
+          and cfg.schedule == STRUCTURE_AWARE
+          and cfg.shard_inter_tables and cfg.subgroup_inter_tables):
+        net = connectivity_lib.slice_intra_tables(
+            net, mesh.shape[_subgroup_axis(mesh)])
     if cfg.superstep_kernel:
         raise ValueError(
             "superstep_kernel is single-host only; the distributed engine "
@@ -255,6 +302,22 @@ def make_dist_engine(
     fused_lif = make_fused_lif_update(lif_params) if cfg.fused else None
 
     exchange = _make_exchange(net, spec, mesh, cfg)
+    if net.tgt_inter_in is not None and (
+            backend == "event" or cfg.exchange == "routed"):
+        # Every inter receive on these paths scatters id packets through
+        # the inbound tables (`_inter_tables`); the dense incoming
+        # src_inter/w_inter/delay_inter tensors are never read again after
+        # the slices are cut (area_adjacency above was their last reader),
+        # so free them here instead of keeping both layouts live.
+        # Zero-row stand-ins keep the pytree structure and the K_e axis
+        # (`k_inter` gates the window-end exchange on shape[-1] > 0).
+        k_e = net.k_inter
+        net = dataclasses.replace(
+            net,
+            src_inter=jnp.zeros((0, 0, k_e), net.src_inter.dtype),
+            w_inter=jnp.zeros((0, 0, k_e), net.w_inter.dtype),
+            delay_inter=jnp.zeros((0, 0, k_e), net.delay_inter.dtype),
+        )
     update_fn = schedule_lib.make_update_fn(
         cfg, spec, net.dt_ms, lif_params, fused_lif)
     window_body = schedule_lib.make_window_fn(cfg, exchange, update_fn)

@@ -74,6 +74,20 @@ class EngineConfig:
     # False keeps the legacy replicated tables -- the bit-identity
     # reference for the equivalence suite. Single-host engines ignore it.
     shard_inter_tables: bool = True
+    # On top of shard_inter_tables, slice each group's inbound inter table
+    # over the subgroup (window-within-group) axis as well
+    # (connectivity.shard_inter_tables(subgroup=gsz)): the [S, rows, K_in]
+    # stack becomes [S, gsz, rows, K_in] and every device lane holds only
+    # the rows targeting its own neuron window -- ~gsz x smaller inter
+    # slices at identical trajectories (the receive scatter already masks
+    # foreign targets to -1). The event path's outgoing intra tables get
+    # the same cut (connectivity.slice_intra_tables: [A, n_pad, K_out] ->
+    # [gsz, A, n_pad, K_lane]), removing their per-lane replication -- at
+    # production scale the dominant per-device table cost. Structure-aware
+    # distributed engines only; ignored under shard_inter_tables=False and
+    # by the conventional schedule (whose "window" cut is already
+    # per-device).
+    subgroup_inter_tables: bool = True
     # Use the fused Pallas LIF kernel (kernels.ops.lif_update) for the update
     # phase. None = enable exactly when delivery_backend is 'pallas' (the
     # all-kernel cycle); the flag exists so the fused update can be tested

@@ -111,9 +111,11 @@ __all__ = [
 EXCHANGES = ("local", "dense", "routed")
 
 _I32_BYTES = 4
-# Receive-table bytes per synapse entry: tgt int32 + w f32 + delay int32
-# (matches Network.bytes_per_synapse).
-_SYN_BYTES = 12
+# Receive-table bytes per synapse entry at the production delay dtypes:
+# tgt int32 + w f32 + delay int8 (matches Network.bytes_per_synapse for
+# every spec whose step cutoffs fit int8; reports use the network's own
+# accounting so exotic int32-delay specs stay honest).
+_SYN_BYTES = 9
 
 
 # ---------------------------------------------------------------------------
@@ -585,11 +587,17 @@ class DenseMeshExchange(Exchange):
         the default distributed assembly) the shard_map view's leading
         shard axis is local size 1 -- ``[0]`` selects this device's own
         inbound slice, so the receive scatter touches only the ~1/S of
-        edges this device owns. The legacy replicated reshape is kept for
+        edges this device owns. Subgroup-sliced tables carry a second
+        sharded lane axis (``[S, gsz, rows, K]``, local view ``[1, 1,
+        rows, K]``) -- ``[0, 0]`` selects this device's own ~1/(S * gsz)
+        slice. The legacy replicated reshape is kept for
         ``EngineConfig.shard_inter_tables=False`` (the equivalence suite's
         bit-identity reference).
         """
         if net.tgt_inter_in is not None:
+            if net.tgt_inter_in.ndim == 4:
+                return (net.tgt_inter_in[0, 0], net.wout_inter_in[0, 0],
+                        net.dout_inter_in[0, 0])
             return (net.tgt_inter_in[0], net.wout_inter_in[0],
                     net.dout_inter_in[0])
         n_rows = net.n_areas * net.n_pad
@@ -597,6 +605,22 @@ class DenseMeshExchange(Exchange):
         return (net.tgt_inter.reshape(n_rows, k_out),
                 net.wout_inter.reshape(n_rows, k_out),
                 net.dout_inter.reshape(n_rows, k_out))
+
+    def _intra_tables(self, net: Network):
+        """This device's outgoing intra tables ``(tgt, w, d) [A, n, K]``.
+
+        Subgroup-sliced tables (``connectivity.slice_intra_tables``) carry
+        a leading lane axis sharded over the subgroup (``[gsz, A, n_pad,
+        K_lane]``, local view ``[1, A_loc, n_pad, K_lane]``) -- ``[0]``
+        selects this lane's own target-window slice, so the local-pathway
+        scatter touches only the ~1/gsz of intra edges landing in its own
+        neuron window instead of a lane-replicated full table. The 3-D
+        passthrough keeps the legacy replicated layout (single-host
+        engines, the conventional cut, ``subgroup_inter_tables=False``).
+        """
+        if net.tgt_intra.ndim == 4:
+            return net.tgt_intra[0], net.wout_intra[0], net.dout_intra[0]
+        return net.tgt_intra, net.wout_intra, net.dout_intra
 
     # -- hooks --------------------------------------------------------------
 
@@ -632,7 +656,7 @@ class DenseMeshExchange(Exchange):
                 ring = jax.vmap(
                     lambda r, idl, tg, w, d: kops.event_deliver_ids(
                         r, idl, tg, w, d, t, tgt_map=to_local)
-                )(ring, wire, net.tgt_intra, net.wout_intra, net.dout_intra)
+                )(ring, wire, *self._intra_tables(net))
                 return ring, counts
 
             if self.adaptive:
@@ -699,8 +723,7 @@ class DenseMeshExchange(Exchange):
                     ring = jax.vmap(
                         lambda r, idl, tg, w, d: kops.event_deliver_ids(
                             r, idl, tg, w, d, t, tgt_map=win_local)
-                    )(ring, ids_a, net.tgt_intra, net.wout_intra,
-                      net.dout_intra)
+                    )(ring, ids_a, *self._intra_tables(net))
                 # Long-range: global target id -> (area row, local window).
                 if net.k_inter > 0:
                     tgt_f, w_f, d_f = self._inter_tables(net)
@@ -1569,20 +1592,24 @@ def inter_table_report(
     headroom: float = 8.0,
     floor: int = 16,
     routing: Routing | None = None,
+    subgroup: int = 1,
 ) -> dict:
     """Per-device inter receive-table bytes and receive-side scatter work,
     replicated vs sharded -- the static accounting of the sharded-table
     tentpole (pure shape arithmetic, no devices).
 
     ``table_bytes.replicated`` prices the legacy layout (every device holds
-    the full ``[A * n_pad, K_out]`` outgoing tables, 12 B/synapse);
-    ``table_bytes.sharded`` prices the inbound slice one device keeps after
+    the full ``[A * n_pad, K_out]`` outgoing tables,
+    ``Network.bytes_per_synapse()`` B/synapse); ``table_bytes.sharded``
+    prices the inbound slice one device keeps after
     :func:`repro.core.connectivity.shard_inter_tables` (one shard of the
-    ``[S, A * n_pad, K_in]`` stack). Widths come from the network's own
-    tables when it carries them and fall back to the deterministic
-    ``network_sds`` bounds otherwise, so the report matches what the
-    dry-run lowers. ``receive`` counts synapse touches per device per
-    window of the event receive scatter (ids scattered x table width):
+    ``[S, A * n_pad, K_in]`` stack, or one ``[S, gsz, A * n_pad, K_in]``
+    lane of the subgroup-sliced layout -- detected from the table rank, or
+    requested via ``subgroup`` for the width-bound fallback). Widths come
+    from the network's own tables when it carries them and fall back to the
+    deterministic ``network_sds`` bounds otherwise, so the report matches
+    what the dry-run lowers. ``receive`` counts synapse touches per device
+    per window of the event receive scatter (ids scattered x table width):
     the id volume is unchanged by sharding -- the win is the ~S x narrower
     table each id fans out over. Feeds ``launch/dryrun.py``,
     ``benchmarks/bench_delivery.py`` and ``cost_model.receive_time_s``.
@@ -1594,17 +1621,20 @@ def inter_table_report(
     rows = net.n_areas * net.n_pad
     n_shards = n_groups if schedule == STRUCTURE_AWARE else n_dev
     k_e = net.k_inter
+    syn_b = net.bytes_per_synapse()
     if net.tgt_inter is not None:
         k_rep = net.tgt_inter.shape[-1]
     else:
         k_rep = connectivity_lib._outgoing_k_bound(k_e)
     if net.tgt_inter_in is not None:
         k_sh = net.tgt_inter_in.shape[-1]
-        n_shards = net.tgt_inter_in.shape[0]
+        # [S, rows, K] -> S shards; [S, gsz, rows, K] -> S * gsz slices.
+        n_shards = int(np.prod(net.tgt_inter_in.shape[:-2]))
     else:
+        n_shards = n_shards * max(subgroup, 1)
         k_sh = connectivity_lib._inbound_k_bound(k_e, n_shards)
-    bytes_rep = rows * k_rep * _SYN_BYTES
-    bytes_sh = rows * k_sh * _SYN_BYTES
+    bytes_rep = rows * k_rep * syn_b
+    bytes_sh = rows * k_sh * syn_b
     _, s_max_dev = _mesh_bounds(
         net, n_groups=n_groups, gsz=gsz, headroom=headroom, floor=floor)
     # Ids scattered per device per window by each global pathway.
@@ -1642,6 +1672,7 @@ def priced_inter_table_report(
     headroom: float = 8.0,
     floor: int = 16,
     routing: Routing | None = None,
+    subgroup: int = 1,
 ) -> dict:
     """:func:`inter_table_report` with *both* table layouts priced from one
     network.
@@ -1663,13 +1694,14 @@ def priced_inter_table_report(
         n_shards = n_groups if schedule == STRUCTURE_AWARE else n_groups * gsz
         mode = "group" if schedule == STRUCTURE_AWARE else "window"
         sharded = connectivity_lib.shard_inter_tables(
-            net, n_shards, mode=mode)
+            net, n_shards, mode=mode,
+            subgroup=subgroup if mode == "group" else 1)
         net = dataclasses.replace(
             sharded, tgt_inter=net.tgt_inter, wout_inter=net.wout_inter,
             dout_inter=net.dout_inter)
     return inter_table_report(
         net, n_groups=n_groups, gsz=gsz, schedule=schedule,
-        headroom=headroom, floor=floor, routing=routing)
+        headroom=headroom, floor=floor, routing=routing, subgroup=subgroup)
 
 
 def wire_report(

@@ -125,7 +125,7 @@ def deposit(
     the tiled version of exactly this contraction.
     """
     r = ring.shape[-1]
-    slots = jnp.mod(t + delays, r)  # [N, K]
+    slots = jnp.mod(t + delays.astype(jnp.int32), r)  # [N, K]
     onehot = jax.nn.one_hot(slots, r, dtype=vals.dtype)  # [N, K, R]
     return ring + jnp.einsum("nk,nkr->nr", vals, onehot)
 
@@ -153,7 +153,7 @@ def deposit_scatter(
     """
     r = ring.shape[-1]
     n, k = vals.shape
-    slots = jnp.mod(t + delays, r)
+    slots = jnp.mod(t + delays.astype(jnp.int32), r)
     flat_idx = (jnp.arange(n, dtype=jnp.int32)[:, None] * r + slots).reshape(-1)
     flat = ring.reshape(-1).at[flat_idx].add(vals.reshape(-1))
     return flat.reshape(n, r)

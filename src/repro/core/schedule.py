@@ -350,7 +350,8 @@ def make_overlap_window_fn(
 # pipeline IS the sequential trajectory), so checkpoints must stay
 # exchangeable across them. Recorded in the manifest payload for forensics,
 # excluded from the compatibility hash and the mismatch diff.
-_LAYOUT_KEYS = frozenset({"shard_inter_tables", "overlap_exchange"})
+_LAYOUT_KEYS = frozenset(
+    {"shard_inter_tables", "subgroup_inter_tables", "overlap_exchange"})
 
 
 def resume_config_hash(cfg, net, *, exchange: str | None = None):
@@ -382,6 +383,8 @@ def resume_config_hash(cfg, net, *, exchange: str | None = None):
         "n_areas": int(net.n_areas),
         "n_pad": int(net.n_pad),
         "shard_inter_tables": bool(cfg.shard_inter_tables),
+        "subgroup_inter_tables": bool(
+            getattr(cfg, "subgroup_inter_tables", True)),
         "overlap_exchange": bool(getattr(cfg, "overlap_exchange", False)),
     }
     hashed = {k: v for k, v in payload.items() if k not in _LAYOUT_KEYS}

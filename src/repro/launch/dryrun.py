@@ -28,6 +28,7 @@ Usage:
 """
 
 import argparse
+import dataclasses
 import json
 import math
 import time
@@ -252,6 +253,76 @@ def dryrun_lm_cell(arch_id: str, shape_name: str, multi_pod: bool,
     return row
 
 
+def verify_inter_table_bounds(
+    n_shards: int = 2, subgroup: int = 2, seed: int = 12
+) -> dict:
+    """Laptop-scale instantiated-shard check behind the production SDS rows.
+
+    The production ``--snn`` cells price their inter tables from
+    ``network_sds`` width *bounds* (nothing is allocated). This builds a
+    small real network, cuts the same inbound slices
+    (``shard_inter_tables(mode='group', subgroup=...)``), and asserts the
+    SDS bound brackets the instantiated bytes: same leading shard/lane
+    axes, bound width >= the data-dependent width, and the instantiated
+    bytes within the bound's padding slack. A violated bound FAILs the dry
+    run -- the production memory claims are only as good as these bounds.
+    """
+    from repro.core.areas import mam_benchmark_spec
+    from repro.core.connectivity import (
+        build_network, network_sds, shard_inter_tables, slice_intra_tables)
+
+    spec = mam_benchmark_spec(n_areas=4, n_per_area=64, k_intra=8, k_inter=12)
+    row: dict[str, Any] = {
+        "arch": SNN_ARCH, "shape": "table_bounds",
+        "mesh": f"{n_shards}x{subgroup}", "mode": "verify",
+    }
+    net = build_network(spec, seed=seed, size_multiple=8, outgoing=True)
+    sds = network_sds(spec, size_multiple=8, outgoing=True,
+                      inter_shards=n_shards, subgroup=subgroup)
+    cut = shard_inter_tables(net, n_shards, mode="group", subgroup=subgroup)
+    syn_b = net.bytes_per_synapse()
+    got = cut.tgt_inter_in
+    bound = sds.tgt_inter_in
+    if bound.shape[:2] != got.shape[:2]:
+        raise AssertionError(
+            f"SDS shard/lane axes {bound.shape[:2]} != instantiated "
+            f"{got.shape[:2]}")
+    if bound.shape[-1] < got.shape[-1]:
+        raise AssertionError(
+            f"SDS width bound {bound.shape[-1]} < instantiated "
+            f"{got.shape[-1]}: the production rows under-price the tables")
+    if cut.dout_inter_in.dtype != sds.dout_inter_in.dtype:
+        raise AssertionError(
+            f"SDS delay dtype {sds.dout_inter_in.dtype} != instantiated "
+            f"{cut.dout_inter_in.dtype}")
+    # Same bracket for the subgroup-sliced outgoing intra tables (the
+    # other table the production rows price via a width bound).
+    cut_i = slice_intra_tables(net, subgroup)
+    if sds.tgt_intra.shape[:2] != cut_i.tgt_intra.shape[:2]:
+        raise AssertionError(
+            f"SDS intra lane axis {sds.tgt_intra.shape[:2]} != "
+            f"instantiated {cut_i.tgt_intra.shape[:2]}")
+    if sds.tgt_intra.shape[-1] < cut_i.tgt_intra.shape[-1]:
+        raise AssertionError(
+            f"SDS intra width bound {sds.tgt_intra.shape[-1]} < "
+            f"instantiated {cut_i.tgt_intra.shape[-1]}: the production "
+            f"rows under-price the intra tables")
+    if cut_i.dout_intra.dtype != sds.dout_intra.dtype:
+        raise AssertionError(
+            f"SDS intra delay dtype {sds.dout_intra.dtype} != "
+            f"instantiated {cut_i.dout_intra.dtype}")
+    # Bytes of ONE device's slice, modelled vs instantiated.
+    per_dev_model = int(np.prod(bound.shape[2:])) * syn_b
+    per_dev_real = int(np.prod(got.shape[2:])) * syn_b
+    row["bytes_per_device_modelled"] = per_dev_model
+    row["bytes_per_device_instantiated"] = per_dev_real
+    row["bound_slack"] = round(per_dev_model / max(per_dev_real, 1), 3)
+    row["intra_bound_slack"] = round(
+        sds.tgt_intra.shape[-1] / max(cut_i.tgt_intra.shape[-1], 1), 3)
+    row["status"] = "OK"
+    return row
+
+
 def dryrun_snn_cell(
     schedule: str,
     multi_pod: bool,
@@ -259,6 +330,7 @@ def dryrun_snn_cell(
     backend: str = "",
     exchange: str = "",
     shard_tables: bool = True,
+    subgroup_tables: bool = True,
     adaptive: bool = False,
 ) -> dict:
     """Lower the distributed SNN engine window at production MAM scale.
@@ -292,6 +364,8 @@ def dryrun_snn_cell(
     label = "_".join(x for x in (schedule, backend, exchange) if x)
     if not shard_tables:
         label += "_reptables"
+    elif not subgroup_tables:
+        label += "_nosub"
     if adaptive:
         label += "_adaptive"
     row: dict[str, Any] = {
@@ -308,13 +382,19 @@ def dryrun_snn_cell(
     n_groups = n_devices // gsz
     n_shards = n_groups if schedule == "structure_aware" else n_devices
     shard_mode = "group" if schedule == "structure_aware" else "window"
+    # The subgroup (window-within-group) slice only exists under the
+    # structure-aware group cut; the conventional "window" cut is already
+    # per-device.
+    sub = (gsz if shard_tables and subgroup_tables
+           and schedule == "structure_aware" else 1)
     net_sds = network_sds(
         spec, size_multiple=mult, outgoing=needs_outgoing,
         inter_shards=(n_shards if needs_outgoing and shard_tables else 0),
-        inter_shard_mode=shard_mode)
+        inter_shard_mode=shard_mode, subgroup=sub)
     cfg = EngineConfig(neuron_model="lif", schedule=schedule,
                        delivery_backend=backend, exchange=exchange,
                        shard_inter_tables=shard_tables,
+                       subgroup_inter_tables=subgroup_tables,
                        adaptive_exchange=adaptive)
     eng = make_dist_engine(net_sds, spec, mesh, cfg)
     if needs_outgoing and spec.k_inter > 0:
@@ -329,7 +409,22 @@ def dryrun_snn_cell(
         row["inter_tables"] = exchange_lib.priced_inter_table_report(
             net_sds, n_groups=n_groups, gsz=gsz, schedule=schedule,
             headroom=cfg.s_max_headroom, floor=cfg.s_max_floor,
-            routing=routing)
+            routing=routing, subgroup=sub)
+    if needs_outgoing and net_sds.tgt_inter_in is not None:
+        # Mirror the engine's event-path drop of the dense incoming inter
+        # tensors (never read once the inbound slices are cut) in the
+        # lowering arguments, so memory_analysis().argument_bytes prices
+        # what a production run actually holds -- not both layouts at once.
+        k_e = net_sds.k_inter
+        net_sds = dataclasses.replace(
+            net_sds,
+            src_inter=jax.ShapeDtypeStruct(
+                (0, 0, k_e), net_sds.src_inter.dtype),
+            w_inter=jax.ShapeDtypeStruct(
+                (0, 0, k_e), net_sds.w_inter.dtype),
+            delay_inter=jax.ShapeDtypeStruct(
+                (0, 0, k_e), net_sds.delay_inter.dtype),
+        )
     A, n_pad = net_sds.alive.shape
     R = net_sds.ring_len
 
@@ -406,6 +501,10 @@ def main() -> None:
                     help="lower the legacy replicated inter receive tables "
                          "instead of the sharded inbound slices (the "
                          "before/after baseline of the sharded-table PR)")
+    ap.add_argument("--snn-no-subgroup-tables", action="store_true",
+                    help="keep the PR 4 per-group inbound slices instead of "
+                         "the subgroup-sliced [S, gsz, rows, K_in] layout "
+                         "(the before/after baseline of the memory-diet PR)")
     ap.add_argument("--snn-adaptive", action="store_true",
                     help="lower the adaptive two-phase exchange (phase-1 "
                          "count collective + bucket-ladder payloads via "
@@ -425,6 +524,18 @@ def main() -> None:
     meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
 
     rows = []
+    if SNN_ARCH in archs:
+        # Fail fast if the SDS width bounds the production rows are priced
+        # from do not bracket an instantiated laptop-scale shard.
+        try:
+            rows.append(verify_inter_table_bounds())
+        except Exception as e:
+            rows.append({
+                "arch": SNN_ARCH, "shape": "table_bounds",
+                "mesh": "2x2", "status": f"FAIL({type(e).__name__}: {e})",
+            })
+            traceback.print_exc()
+        _print_row(rows[-1])
     for multi_pod in meshes:
         for arch in archs:
             if arch == SNN_ARCH:
@@ -438,6 +549,7 @@ def main() -> None:
                             exchange=(args.snn_exchange
                                       if sched == "structure_aware" else ""),
                             shard_tables=not args.snn_replicated_tables,
+                            subgroup_tables=not args.snn_no_subgroup_tables,
                             adaptive=args.snn_adaptive), args.hbm_gib))
                     except Exception as e:
                         rows.append({
@@ -479,6 +591,11 @@ def _print_row(row: dict) -> None:
     base = f"[{row['mesh']}] {row['arch']:28s} {row['shape']:12s} "
     if status != "OK":
         print(base + status)
+        return
+    if "roofline" not in row:  # bounds-verify row: no lowering behind it
+        print(base + f"OK modelled={row['bytes_per_device_modelled']}B "
+              f"instantiated={row['bytes_per_device_instantiated']}B "
+              f"slack={row['bound_slack']}x")
         return
     r = row["roofline"]
     per_dev_gb = modelled_hbm_gib(row)

@@ -299,9 +299,11 @@ def print_wire_volume(net, spec, cfg: EngineConfig, n_groups: int, gsz: int):
               f"{ad['payload_bytes_expected']:12,d} "
               f"{ad['payload_bytes_worst']:12,d} {ad['saved_bytes']:12,d}")
     if net.tgt_inter is not None or net.tgt_inter_in is not None:
+        sub = gsz if getattr(cfg, "subgroup_inter_tables", True) else 1
         tbl = exchange_lib.priced_inter_table_report(
             net, n_groups=n_groups, gsz=gsz,
-            headroom=cfg.s_max_headroom, floor=cfg.s_max_floor)
+            headroom=cfg.s_max_headroom, floor=cfg.s_max_floor,
+            subgroup=sub)
         tb = tbl["table_bytes"]
         print(f"-- inter receive tables, per device: replicated "
               f"{tb['replicated']:,} B (K={tbl['k_out_replicated']}) vs "
@@ -451,6 +453,13 @@ def main() -> None:
                          "slices (the bit-identity baseline of the "
                          "sharded-table refactor; distributed event/routed "
                          "paths only)")
+    ap.add_argument("--no-subgroup-inter-tables", action="store_true",
+                    help="keep the per-group inbound slices (and the "
+                         "lane-replicated outgoing intra tables) instead of "
+                         "the subgroup-sliced [S, gsz, rows, K_in] / "
+                         "[gsz, A, n_pad, K] layouts (the bit-identity "
+                         "baseline of the memory-diet PR; structure-aware "
+                         "distributed paths only)")
     ap.add_argument("--seed", type=int, default=12,
                     help="paper seeds: 12, 654, 91856")
     ap.add_argument("--adaptive", action="store_true",
@@ -611,6 +620,7 @@ def main() -> None:
                 delivery_backend=backend,
                 exchange=exchange if mesh is not None else "", seed=42,
                 shard_inter_tables=not args.replicated_inter_tables,
+                subgroup_inter_tables=not args.no_subgroup_inter_tables,
                 adaptive_exchange=adaptive, overlap_exchange=overlap_on)
             if mesh is not None:
                 from repro.core.dist_engine import make_dist_engine

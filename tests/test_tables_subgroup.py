@@ -1,0 +1,336 @@
+"""Subgroup-sliced inbound inter tables: the memory-diet tentpole.
+
+The contract: slicing each group's inbound inter table over the subgroup
+(window-within-group) axis -- ``shard_inter_tables(..., subgroup=gsz)``
+emitting ``[S, gsz, A*n_pad, K_in]``, plus the same lane cut for the
+outgoing intra tables (``slice_intra_tables``) -- is a pure layout change.
+Every lane's
+receive scatter already masks targets outside its neuron window to -1, so
+dropping those rows from its slice changes no trajectory: spikes, rings and
+overflow counts stay bitwise-identical to both the per-group inbound slices
+(PR 4) and the replicated reference, across exchanges, adaptive/static
+packets and superstep/legacy windows, including forced per-edge overflow and
+mid-run checkpoint -> resume across layouts.
+
+Multi-device cases run in subprocesses with 8 forced host devices (per the
+launch contract, the main pytest process must keep seeing one device).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str, n_devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=540,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+def test_subgroup_cut_partitions_the_group_slice():
+    """Synapse-exact layout check, no devices: the union of a shard's gsz
+    lane slices is exactly its per-group inbound slice, every lane holds
+    only targets inside its own neuron window, the narrow delay dtype
+    survives the cut, and the SDS bound brackets the instantiated widths."""
+    from repro.core.areas import mam_benchmark_spec
+    from repro.core.connectivity import (
+        build_network, network_sds, shard_inter_tables)
+
+    spec = mam_benchmark_spec(n_areas=4, n_per_area=64, k_intra=8, k_inter=12)
+    net = build_network(spec, seed=12, size_multiple=8, outgoing=True)
+    assert net.delay_inter.dtype == np.int8  # narrow storage dtype
+    n_shards, gsz = 2, 2
+    cut3 = shard_inter_tables(net, n_shards, mode="group")
+    cut4 = shard_inter_tables(net, n_shards, mode="group", subgroup=gsz)
+    n_pad = net.n_pad
+    rows = net.n_areas * n_pad
+    assert cut4.tgt_inter_in.shape[:2] == (n_shards, gsz)
+    assert cut4.tgt_inter_in.shape[2] == rows
+    assert cut4.dout_inter_in.dtype == net.delay_inter.dtype
+    win = n_pad // gsz
+    for s in range(n_shards):
+        t3, w3, d3 = (np.asarray(x[s]) for x in
+                      (cut3.tgt_inter_in, cut3.wout_inter_in,
+                       cut3.dout_inter_in))
+        syn3 = {(r, int(t3[r, k]), float(w3[r, k]), int(d3[r, k]))
+                for r in range(rows) for k in range(t3.shape[1])
+                if t3[r, k] >= 0}
+        syn4 = set()
+        for lane in range(gsz):
+            t4, w4, d4 = (np.asarray(x[s, lane]) for x in
+                          (cut4.tgt_inter_in, cut4.wout_inter_in,
+                           cut4.dout_inter_in))
+            tloc = t4[t4 >= 0] % n_pad
+            assert ((tloc >= lane * win) & (tloc < (lane + 1) * win)).all()
+            syn4 |= {(r, int(t4[r, k]), float(w4[r, k]), int(d4[r, k]))
+                     for r in range(rows) for k in range(t4.shape[1])
+                     if t4[r, k] >= 0}
+        assert syn3 == syn4, f"shard {s} lost/invented synapses"
+    # K shrinks ~gsz x (plus per-slice jitter slack), never grows.
+    assert cut4.tgt_inter_in.shape[-1] < cut3.tgt_inter_in.shape[-1]
+    # The dry-run's SDS stand-in brackets the instantiated slice.
+    sds = network_sds(spec, size_multiple=8, outgoing=True,
+                      inter_shards=n_shards, subgroup=gsz)
+    assert sds.tgt_inter_in.shape[:3] == cut4.tgt_inter_in.shape[:3]
+    assert sds.tgt_inter_in.shape[-1] >= cut4.tgt_inter_in.shape[-1]
+    assert sds.dout_inter_in.dtype == cut4.dout_inter_in.dtype
+
+
+def test_intra_slice_partitions_the_outgoing_table():
+    """The outgoing intra tables get the same lane cut
+    (``slice_intra_tables``): per source row, the union of the gsz lane
+    slices is exactly the full row's live synapses, each lane holds only
+    targets inside its own window *in the original relative order* (the
+    ring-deposit order is what makes the cut bitwise-safe), dtypes
+    survive, and the SDS stand-in brackets the instantiated widths."""
+    from repro.core.areas import mam_benchmark_spec
+    from repro.core.connectivity import (
+        build_network, network_sds, slice_intra_tables)
+
+    spec = mam_benchmark_spec(n_areas=4, n_per_area=64, k_intra=8, k_inter=12)
+    net = build_network(spec, seed=12, size_multiple=8, outgoing=True)
+    gsz = 4
+    cut = slice_intra_tables(net, gsz)
+    A, n_pad, K = net.tgt_intra.shape
+    n_loc = n_pad // gsz
+    assert cut.tgt_intra.shape[:3] == (gsz, A, n_pad)
+    assert cut.tgt_intra.shape[-1] < K  # ~gsz x narrower
+    assert cut.dout_intra.dtype == net.dout_intra.dtype == np.int8
+    assert cut.wout_intra.dtype == np.float32
+    t3, w3, d3 = (np.asarray(x) for x in
+                  (net.tgt_intra, net.wout_intra, net.dout_intra))
+    t4, w4, d4 = (np.asarray(x) for x in
+                  (cut.tgt_intra, cut.wout_intra, cut.dout_intra))
+    for a in range(A):
+        for r in range(n_pad):
+            full = [(int(t3[a, r, k]), float(w3[a, r, k]), int(d3[a, r, k]))
+                    for k in range(K) if t3[a, r, k] >= 0]
+            union = []
+            for lane in range(gsz):
+                lo = lane * n_loc
+                ent = [(int(t4[lane, a, r, k]), float(w4[lane, a, r, k]),
+                        int(d4[lane, a, r, k]))
+                       for k in range(t4.shape[-1]) if t4[lane, a, r, k] >= 0]
+                assert all(lo <= e[0] < lo + n_loc for e in ent)
+                # order-preserving: the lane slice IS the full row filtered
+                assert ent == [e for e in full if lo <= e[0] < lo + n_loc]
+                union += ent
+            assert sorted(union) == sorted(full), f"row ({a},{r}) mismatch"
+    # Re-slicing an already-4D table is refused, as is a bad divisor.
+    with pytest.raises(ValueError):
+        slice_intra_tables(cut, gsz)
+    with pytest.raises(ValueError):
+        slice_intra_tables(net, 7)  # 7 does not divide n_pad
+    # The dry-run's SDS stand-in brackets the instantiated slice.
+    sds = network_sds(spec, size_multiple=8, outgoing=True,
+                      inter_shards=2, subgroup=gsz)
+    assert sds.tgt_intra.shape[:3] == cut.tgt_intra.shape[:3]
+    assert sds.tgt_intra.shape[-1] >= cut.tgt_intra.shape[-1]
+    assert sds.dout_intra.dtype == cut.dout_intra.dtype
+
+
+def test_subgroup_requires_group_mode_and_divisibility():
+    from repro.core.areas import mam_benchmark_spec
+    from repro.core.connectivity import build_network, shard_inter_tables
+
+    spec = mam_benchmark_spec(n_areas=4, n_per_area=32, k_intra=4, k_inter=4)
+    net = build_network(spec, seed=12, outgoing=True)
+    with pytest.raises(ValueError):
+        shard_inter_tables(net, 4, mode="window", subgroup=2)
+    with pytest.raises(ValueError):
+        shard_inter_tables(net, 2, mode="group", subgroup=7)  # 7 ∤ n_pad
+
+
+def test_lane_count_mismatch_rejected():
+    """Pre-cut 4D tables whose lane count does not match the mesh subgroup
+    must be refused at engine build, like the shard-count check."""
+    import jax
+
+    from repro.core.areas import mam_benchmark_spec
+    from repro.core.connectivity import build_network, shard_inter_tables
+    from repro.core.dist_engine import make_dist_engine
+    from repro.core.engine import EngineConfig
+
+    spec = mam_benchmark_spec(n_areas=2, n_per_area=32, k_intra=4, k_inter=4)
+    net = build_network(spec, seed=12, outgoing=True)
+    cut = shard_inter_tables(net, 1, mode="group", subgroup=2)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))  # gsz=1, but 2 lanes
+    with pytest.raises(ValueError, match="do not match the"):
+        make_dist_engine(net=cut, spec=spec, mesh=mesh,
+                         config=EngineConfig(neuron_model="ignore_and_fire",
+                                             delivery_backend="event"))
+
+
+@pytest.mark.parametrize("exchange", ["dense", "routed"])
+def test_subgroup_engine_bitwise_equivalence(exchange):
+    """Acceptance matrix: the subgroup-sliced engine reproduces the
+    single-host replicated reference bitwise -- spike blocks AND rings --
+    under {static,adaptive} x {superstep,legacy}, and matches the per-group
+    (non-subgroup) layout exactly, with zero overflow and ~gsz x narrower
+    local slices."""
+    print(_run(f"""
+        import numpy as np, jax
+        from repro.core.areas import mam_benchmark_spec
+        from repro.core.connectivity import build_network
+        from repro.core.engine import make_engine, EngineConfig
+        from repro.core.dist_engine import make_dist_engine
+
+        spec = mam_benchmark_spec(n_areas=4, n_per_area=32, k_intra=4,
+                                  k_inter=4, rate_hz=30.0)
+        net = build_network(spec, seed=12, size_multiple=8, outgoing=True)
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        ref = make_engine(net, spec, EngineConfig(
+            neuron_model="ignore_and_fire", schedule="conventional"))
+        s0 = ref.init()
+        blocks = []
+        for _ in range(5):
+            s0, b = ref.window(s0)
+            blocks.append(np.asarray(b))
+        ring_ref = np.asarray(s0.ring)
+        assert sum(b.sum() for b in blocks) > 0
+
+        def cfg(subgroup, adaptive=False, superstep=None):
+            return EngineConfig(
+                neuron_model="ignore_and_fire",
+                schedule="structure_aware", delivery_backend="event",
+                exchange={exchange!r}, s_max_floor=32,
+                subgroup_inter_tables=subgroup,
+                adaptive_exchange=adaptive, superstep=superstep)
+
+        for adaptive in (False, True):
+            for superstep in (None, False):
+                eng = make_dist_engine(net, spec, mesh,
+                                       cfg(True, adaptive, superstep))
+                st = eng.init()
+                for w in range(5):
+                    st, blk = eng.window(st)
+                    assert np.array_equal(
+                        np.asarray(blk).astype(bool), blocks[w]
+                    ), (adaptive, superstep, w)
+                assert np.array_equal(np.asarray(st.ring), ring_ref), (
+                    adaptive, superstep, "ring")
+                assert int(st.overflow) == 0, (adaptive, superstep)
+
+        # Layout A/B at identical config: subgroup vs per-group slices.
+        a = make_dist_engine(net, spec, mesh, cfg(True))
+        b = make_dist_engine(net, spec, mesh, cfg(False))
+        sa, sb = a.init(), b.init()
+        for w in range(5):
+            sa, ba = a.window(sa)
+            sb, bb = b.window(sb)
+            assert np.array_equal(np.asarray(ba), np.asarray(bb)), w
+        assert np.array_equal(np.asarray(sa.ring), np.asarray(sb.ring))
+        print("matrix OK:", {exchange!r})
+    """))
+
+
+def test_subgroup_forced_overflow_identical():
+    """Packets are formed on the *send* side, so starving the packet bound
+    drops the same spikes under either receive layout: overflow counts are
+    nonzero AND bitwise-equal between the subgroup-sliced and per-group
+    engines, and so are the (lossy) trajectories."""
+    print(_run("""
+        import numpy as np, jax
+        from repro.core.areas import mam_benchmark_spec
+        from repro.core.connectivity import build_network
+        from repro.core.engine import EngineConfig
+        from repro.core.dist_engine import make_dist_engine
+
+        spec = mam_benchmark_spec(n_areas=4, n_per_area=32, k_intra=4,
+                                  k_inter=4, rate_hz=2000.0)
+        net = build_network(spec, seed=12, size_multiple=8, outgoing=True)
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+
+        def engine(subgroup):
+            return make_dist_engine(net, spec, mesh, EngineConfig(
+                neuron_model="ignore_and_fire",
+                schedule="structure_aware", delivery_backend="event",
+                exchange="routed", s_max_headroom=0.0, s_max_floor=1,
+                subgroup_inter_tables=subgroup))
+
+        a, b = engine(True), engine(False)
+        sa, sb = a.init(), b.init()
+        for w in range(5):
+            sa, ba = a.window(sa)
+            sb, bb = b.window(sb)
+            assert np.array_equal(np.asarray(ba), np.asarray(bb)), w
+        assert int(sa.overflow) > 0, "bound was meant to starve"
+        assert int(sa.overflow) == int(sb.overflow)
+        assert np.array_equal(np.asarray(sa.ring), np.asarray(sb.ring))
+        print("overflow", int(sa.overflow), "identical under both layouts")
+    """))
+
+
+def test_resume_across_subgroup_layout_change(tmp_path):
+    """subgroup_inter_tables is a pure-layout key: it never enters the
+    resume-config hash, and a mid-run checkpoint taken under one layout
+    resumes bitwise under the other, both directions."""
+    from repro.core import schedule as schedule_lib
+    from repro.core.areas import mam_benchmark_spec
+    from repro.core.connectivity import build_network
+    from repro.core.engine import EngineConfig
+
+    spec = mam_benchmark_spec(n_areas=2, n_per_area=32, k_intra=4, k_inter=4)
+    net = build_network(spec, seed=12, outgoing=True)
+    cfg_a = EngineConfig(neuron_model="lif", delivery_backend="event",
+                         subgroup_inter_tables=True)
+    cfg_b = EngineConfig(neuron_model="lif", delivery_backend="event",
+                         subgroup_inter_tables=False)
+    h_a, pay_a = schedule_lib.resume_config_hash(cfg_a, net)
+    h_b, pay_b = schedule_lib.resume_config_hash(cfg_b, net)
+    assert h_a == h_b
+    assert pay_a["subgroup_inter_tables"] != pay_b["subgroup_inter_tables"]
+
+    print(_run(f"""
+        import numpy as np, jax
+        from repro.core import schedule as schedule_lib
+        from repro.core.areas import mam_benchmark_spec
+        from repro.core.connectivity import build_network
+        from repro.core.dist_engine import make_dist_engine
+        from repro.core.engine import EngineConfig
+
+        spec = mam_benchmark_spec(n_areas=4, n_per_area=32, k_intra=4,
+                                  k_inter=4, rate_hz=30.0)
+        net = build_network(spec, seed=12, size_multiple=8, outgoing=True)
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+
+        def engine(subgroup):
+            return make_dist_engine(net, spec, mesh, EngineConfig(
+                neuron_model="ignore_and_fire", delivery_backend="event",
+                exchange="routed", s_max_floor=32,
+                subgroup_inter_tables=subgroup))
+
+        for save_sub in (True, False):
+            tag = f"subgroup={{save_sub}}->{{not save_sub}}"
+            d = r"{tmp_path}/" + tag
+            saver = engine(save_sub)
+            ref = schedule_lib.run_windows(saver, saver.init(), 6)
+            ck = schedule_lib.SimCheckpointer(d, saver, net, every=0,
+                                              n_groups=4)
+            st = saver.init()
+            for _ in range(3):
+                st, _blk = saver.window(st)
+            ck.save(st)
+            ck.close()
+            resumer = engine(not save_sub)   # the OTHER table layout
+            st, info = schedule_lib.restore_sim(d, resumer, net, n_groups=4)
+            assert info["step"] == 3, tag
+            res = schedule_lib.run_windows(resumer, st, 3)
+            assert np.array_equal(res.spikes_per_window,
+                                  ref.spikes_per_window[3:]), tag
+            assert np.array_equal(np.asarray(res.state.ring),
+                                  np.asarray(ref.state.ring)), tag
+            print("resume OK", tag)
+    """))
