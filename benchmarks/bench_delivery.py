@@ -552,6 +552,111 @@ def bench_table_memory_production(results):
     ))
 
 
+def bench_build(name, spec, results, *, n_shards=4, subgroup=2):
+    """Construction wall + modelled host bytes, host vs sharded build
+    (phase=build).
+
+    Times the host path (``build_network(outgoing='intra')`` + both shard
+    cuts -- what one process pays to construct every device's tables)
+    against the sharded path (``sharded_build_plan`` + ONE shard-lane's
+    ``build_shard_tables``/``build_lane_intra_tables`` -- what each device
+    pays when all shards build their own tables concurrently). Shard 0's
+    regenerated tables are asserted bitwise-equal to the host cut, so the
+    benchmark is also an equivalence test. The modelled byte fields are
+    pure width-bound arithmetic (``construction_cost_model``) and
+    smoke-guarded against regression.
+    """
+    import numpy as np
+
+    from repro.core.connectivity import (
+        build_lane_intra_tables, build_network, build_shard_tables,
+        construction_cost_model, shard_inter_tables, sharded_build_plan,
+        slice_intra_tables)
+
+    A = spec.n_areas
+    S = min(n_shards, A)
+    mult = 2 * subgroup  # even padded size so the subgroup windows tile
+
+    def host():
+        net = build_network(spec, seed=12, size_multiple=mult,
+                            outgoing="intra")
+        cut = shard_inter_tables(net, S, mode="group", subgroup=subgroup)
+        return slice_intra_tables(cut, subgroup)
+
+    def shard0():
+        plan = sharded_build_plan(spec, 12, S, mode="group",
+                                  subgroup=subgroup, size_multiple=mult)
+        t, w, d = build_shard_tables(spec, 12, 0, plan=plan, lane=0)
+        ti = build_lane_intra_tables(
+            spec, 12, list(range(A // S)), 0, plan=plan)
+        return t, w, d, ti
+
+    wall_host = _time_best(host, repeats=2)
+    wall_shard = _time_best(shard0, repeats=2)
+    cut = host()
+    t, w, d, ti = shard0()
+    assert np.array_equal(np.asarray(cut.tgt_inter_in[0, 0]), t), (
+        "sharded build diverged from the host-built inbound slice")
+    assert np.array_equal(np.asarray(cut.wout_inter_in[0, 0]), w)
+    assert np.array_equal(np.asarray(cut.dout_inter_in[0, 0]), d)
+    assert np.array_equal(np.asarray(cut.tgt_intra[0][: A // S]), ti[0]), (
+        "sharded build diverged from the host-built lane intra tables")
+    cm = construction_cost_model(
+        spec, n_shards=S, subgroup=subgroup, size_multiple=mult)
+    print(f"\n-- {name} / construction ({S} shards x {subgroup} lanes) --")
+    print(f"host build     {wall_host:8.3f} s  "
+          f"(modelled {cm['build_bytes_host_modelled'] / 2**20:8.1f} MiB)")
+    print(f"per-shard build{wall_shard:8.3f} s  "
+          f"(modelled {cm['build_bytes_shard_modelled'] / 2**20:8.1f} MiB, "
+          f"{cm['reduction']:.1f}x)")
+    results.append(dict(
+        config=name, phase="build", backend="event",
+        wall_host_s=round(wall_host, 4),
+        wall_shard_s=round(wall_shard, 4),
+        build_bytes_host_modelled=cm["build_bytes_host_modelled"],
+        build_bytes_shard_modelled=cm["build_bytes_shard_modelled"],
+        reduction_modelled=round(cm["reduction"], 2),
+        n_shards=S, subgroup=subgroup, n_areas=A,
+        n_neurons=spec.n_total, k_total=spec.k_total,
+    ))
+
+
+def bench_build_production(results):
+    """Production construction row (MAM x1, 16x16 mesh, width bounds):
+    modelled host peak RSS of building the network, host path vs sharded.
+
+    The host path materialises the global incoming tensors of ~2.4e12
+    synapses plus all 256 inbound slices in one process -- construction,
+    not simulation, becomes the scaling wall once the run itself fits in
+    16 GiB devices. The sharded build's per-process peak (one shard-lane's
+    draws + output slice + the planning counts) must come in >= 4x under
+    it (the PR's acceptance bar; the real gap is ~65x). Asserted, so a
+    builder change can never silently re-grow the host footprint.
+    """
+    from repro.core.areas import mam_spec
+    from repro.core.connectivity import construction_cost_model
+
+    spec = mam_spec(scale=1.0)
+    cm = construction_cost_model(
+        spec, n_shards=16, subgroup=16, size_multiple=16)
+    print(f"\n-- mam_x1 production / construction (16 shards x 16 lanes, "
+          f"width bounds) --")
+    print(f"host build  {cm['build_bytes_host_modelled'] / 2**30:8.1f} GiB "
+          f"peak RSS")
+    print(f"sharded     {cm['build_bytes_shard_modelled'] / 2**30:8.1f} GiB "
+          f"peak RSS/process -> {cm['reduction']:.1f}x")
+    assert cm["reduction"] >= 4.0, (
+        f"sharded build must cut the production construction host RSS "
+        f">= 4x; got {cm['reduction']:.1f}x")
+    results.append(dict(
+        config="mam_x1_16x16", phase="build", backend="event",
+        build_bytes_host_modelled=cm["build_bytes_host_modelled"],
+        build_bytes_shard_modelled=cm["build_bytes_shard_modelled"],
+        reduction_modelled=round(cm["reduction"], 2),
+        n_shards=16, subgroup=16, sds_bounds=True,
+    ))
+
+
 def bench_resilience(name, spec, net, results, *, windows=300, cadence=50):
     """Checkpoint overhead + fault harness, end to end (phase=resilience).
 
@@ -826,6 +931,11 @@ _STATIC_GUARDED = {
     # seed and window count (fixed, --smoke included), so any increase is
     # a real loss of pipelining/absorption, never noise.
     "overlap": ("injected_overlap_s", "injected_sequential_s"),
+    # Construction rows: both modelled peaks are pure width-bound
+    # arithmetic -- a host-bytes increase means a builder re-grew what one
+    # process materialises; a shard-bytes increase means the per-device
+    # build lost its diet.
+    "build": ("build_bytes_host_modelled", "build_bytes_shard_modelled"),
 }
 
 
@@ -936,12 +1046,14 @@ def main(argv=None) -> None:
         bench_adaptive_wire(name, spec, net, results)
         bench_table_bytes(name, spec, net, results)
         bench_table_memory(name, spec, net, results)
+        bench_build(name, spec, results)
         if name == "quickstart":
             bench_resilience(name, spec, net, results)
             bench_overlap(name, spec, net, results)
     bench_table_bytes_production(results)
     bench_table_memory_production(results)
     bench_adaptive_wire_production(results)
+    bench_build_production(results)
 
     payload = dict(
         benchmark="delivery_backends",
@@ -987,6 +1099,12 @@ def main(argv=None) -> None:
         print(f"{r['config']} checkpoint overhead @ every-{r['cadence']} "
               f"windows: {r['overhead_frac'] * 100:+.2f}% (budget 5.00%), "
               f"{r['ckpt_retries']} transient writes retried")
+    bld = next(r for r in results if r["phase"] == "build"
+               and r.get("sds_bounds"))
+    print(f"mam_x1 construction host peak RSS: "
+          f"{bld['build_bytes_host_modelled'] / 2**30:.0f} GiB -> "
+          f"{bld['build_bytes_shard_modelled'] / 2**30:.1f} GiB/process "
+          f"sharded ({bld['reduction_modelled']:.0f}x, modelled)")
     for r in (r for r in results if r["phase"] == "overlap"):
         print(f"{r['config']} overlapped exchange hides "
               f"{r['hidden_frac'] * 100:.1f}% of the injected jitter wall "

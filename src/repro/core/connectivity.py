@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.areas import MultiAreaSpec
+from repro.core.partition import shard_pathway_rows
 
 __all__ = [
     "Network",
@@ -35,6 +36,13 @@ __all__ = [
     "network_sds",
     "area_adjacency",
     "shard_inter_tables",
+    "draw_pathway_rows",
+    "ShardedBuildPlan",
+    "sharded_build_plan",
+    "build_shard_tables",
+    "build_group_intra_tables",
+    "build_lane_intra_tables",
+    "construction_cost_model",
 ]
 
 
@@ -118,6 +126,14 @@ class Network:
     # Static so engine assembly can validate the tables match the mesh.
     inter_shard_mode: str = dataclasses.field(
         metadata=dict(static=True), default="")
+    # The *realised* area->area adjacency as nested tuples (hashable, so it
+    # can ride along as static metadata): ``area_adj[src][tgt]`` truthy iff
+    # any neuron of target area ``tgt`` drew a source from area ``src``.
+    # Set by the sharded (host-free) build path, where the dense incoming
+    # ``src_inter`` tensors :func:`area_adjacency` would otherwise inspect
+    # are zero-row stand-ins; ``None`` means "inspect the tensors/spec".
+    area_adj: tuple | None = dataclasses.field(
+        metadata=dict(static=True), default=None)
 
     @property
     def k_intra(self) -> int:
@@ -314,18 +330,213 @@ def _quantize_weights(w: np.ndarray, grid: float = 1.0 / 256.0) -> np.ndarray:
     return np.round(w / grid) * grid
 
 
-def _draw_delays(
-    rng: np.random.Generator,
-    shape: tuple[int, ...],
+# ---------------------------------------------------------------------------
+# Counter-based draws: every synapse attribute is a pure function of
+# (seed, pathway tag, flat synapse index), where the flat index is
+# ``global_target_row * K + k``. Any subset of target rows therefore
+# regenerates *exactly* the values the full build would have drawn for them
+# -- the init-sharding property the host-free construction path relies on
+# (each shard draws only its own rows; no sequential RNG stream to replay).
+# The mixer mirrors ``repro.core.neuron._splitmix32`` (the drive's
+# counter-based RNG) in numpy.
+# ---------------------------------------------------------------------------
+
+# Per-draw-site domain tags: each (tag, index) pair is hashed independently,
+# so e.g. a synapse's source pick and its weight magnitude are uncorrelated.
+_TAG_SRC_INTRA = 1
+_TAG_SRC_AREA = 2
+_TAG_SRC_IDX = 3
+_TAG_W_INTRA = 4
+_TAG_W_INTER = 5
+_TAG_D_INTRA_U1 = 6
+_TAG_D_INTRA_U2 = 7
+_TAG_D_INTER_U1 = 8
+_TAG_D_INTER_U2 = 9
+
+
+def _np_mix32(x: np.ndarray) -> np.ndarray:
+    """numpy mirror of ``neuron._splitmix32`` (uint32 wraparound arithmetic)."""
+    x = x.astype(np.uint32, copy=True)
+    x += np.uint32(0x9E3779B9)
+    x = (x ^ (x >> np.uint32(16))) * np.uint32(0x21F0AAAD)
+    x = (x ^ (x >> np.uint32(15))) * np.uint32(0x735A2D97)
+    return x ^ (x >> np.uint32(15))
+
+
+def _counter_hash(seed: int, tag: int, idx: np.ndarray) -> np.ndarray:
+    """uint32 hash of (seed, tag, flat synapse index).
+
+    ``idx`` may exceed 2^32 (production: 4.2M rows x 4200 K), so it is
+    folded in as two uint32 words through chained mixes.
+    """
+    idx = np.asarray(idx, dtype=np.uint64)
+    lo = (idx & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    hi = (idx >> np.uint64(32)).astype(np.uint32)
+    s0 = np.uint32((int(seed) + int(tag) * 0x85EBCA6B) & 0xFFFFFFFF)
+    return _np_mix32(_np_mix32(_np_mix32(lo + s0) + hi))
+
+
+def _counter_uniform(seed: int, tag: int, idx: np.ndarray) -> np.ndarray:
+    """Uniform draw strictly inside (0, 1) (Box-Muller-safe: log never sees 0)."""
+    h = _counter_hash(seed, tag, idx)
+    return (h.astype(np.float64) + 0.5) * (2.0 ** -32)
+
+
+def _flat_idx(rows: np.ndarray, k: int) -> np.ndarray:
+    """[R, k] uint64 flat synapse indices ``row * k + j`` for global rows."""
+    return (np.asarray(rows, dtype=np.uint64)[:, None] * np.uint64(k)
+            + np.arange(k, dtype=np.uint64)[None, :])
+
+
+def _counter_weights(
+    spec: MultiAreaSpec,
+    seed: int,
+    tag: int,
+    idx: np.ndarray,
+    src_idx_within_area: np.ndarray,
+    sizes_of_src: np.ndarray,
+) -> np.ndarray:
+    """80/20 excitatory/inhibitory by source index, on the 1/256 grid."""
+    exc = src_idx_within_area < np.maximum(
+        1, (spec.exc_fraction * sizes_of_src).astype(np.int64))
+    u = _counter_uniform(seed, tag, idx)
+    mag = _quantize_weights((0.5 + u) * spec.w_exc).astype(np.float32)
+    return np.where(exc, mag, -spec.g * mag).astype(np.float32)
+
+
+def _counter_delays(
+    seed: int,
+    tag_u1: int,
+    tag_u2: int,
+    idx: np.ndarray,
     mean_ms: float,
     std_ms: float,
     lo_steps: int,
     hi_steps: int,
     dt_ms: float,
 ) -> np.ndarray:
-    """Gaussian delays on the dt grid with [lo, hi] cutoffs (paper §4.2)."""
-    d = rng.normal(mean_ms, std_ms, size=shape) / dt_ms
+    """Gaussian delays on the dt grid with [lo, hi] cutoffs (paper §4.2),
+    via Box-Muller over two independent counter-uniform draws."""
+    u1 = _counter_uniform(seed, tag_u1, idx)
+    u2 = _counter_uniform(seed, tag_u2, idx)
+    z = np.sqrt(-2.0 * np.log(u1)) * np.cos(2.0 * np.pi * u2)
+    d = (mean_ms + std_ms * z) / dt_ms
     return np.clip(np.round(d), lo_steps, hi_steps).astype(_delay_dtype(hi_steps))
+
+
+def _allowed_source_areas(spec: MultiAreaSpec):
+    """Padded per-target-area source-area lists from the spec adjacency.
+
+    ``(allowed[A, max_deg] int64, n_allowed[A] int64)`` -- row ``a`` lists
+    the areas allowed to project into ``a`` (garbage past ``n_allowed[a]``).
+    """
+    adj = spec.adjacency_matrix()
+    A = spec.n_areas
+    n_allowed = adj.sum(axis=0).astype(np.int64)
+    allowed = np.zeros((A, max(int(n_allowed.max(initial=0)), 1)), np.int64)
+    for a in range(A):
+        srcs = np.flatnonzero(adj[:, a])
+        allowed[a, : len(srcs)] = srcs
+    return allowed, n_allowed
+
+
+def _intra_src_rows(spec, seed, rows, n_pad, sizes) -> np.ndarray:
+    """[R, K_i] int32 within-area source indices for global target rows."""
+    rows = np.asarray(rows, dtype=np.int64)
+    idx = _flat_idx(rows, spec.k_intra)
+    sz = sizes.astype(np.int64)[rows // n_pad][:, None]
+    h = _counter_hash(seed, _TAG_SRC_INTRA, idx)
+    return (h.astype(np.int64) % sz).astype(np.int32)
+
+
+def _intra_delay_rows(spec, seed, rows) -> np.ndarray:
+    idx = _flat_idx(np.asarray(rows, np.int64), spec.k_intra)
+    return _counter_delays(
+        seed, _TAG_D_INTRA_U1, _TAG_D_INTRA_U2, idx,
+        spec.delay_intra_mean_ms, spec.delay_intra_std_ms,
+        1, spec.steps_intra_max, spec.dt_ms)
+
+
+def _intra_rows(spec, seed, rows, n_pad, sizes):
+    """(src, w, delay) intra-area tables [R, K_i] for global target rows."""
+    rows = np.asarray(rows, dtype=np.int64)
+    R, K_i = len(rows), spec.k_intra
+    if K_i == 0:
+        return (np.zeros((R, 0), np.int32), np.zeros((R, 0), np.float32),
+                np.zeros((R, 0), _delay_dtype(spec.steps_intra_max)))
+    src = _intra_src_rows(spec, seed, rows, n_pad, sizes)
+    sz = sizes.astype(np.int64)[rows // n_pad][:, None]
+    w = _counter_weights(
+        spec, seed, _TAG_W_INTRA, _flat_idx(rows, K_i),
+        src.astype(np.int64), sz)
+    return src, w, _intra_delay_rows(spec, seed, rows)
+
+
+def _inter_src_rows(spec, seed, rows, n_pad, sizes, allowed, n_allowed):
+    """[R, K_e] int32 global source ids (``area * n_pad + idx``)."""
+    rows = np.asarray(rows, dtype=np.int64)
+    a_of = rows // n_pad
+    idx = _flat_idx(rows, spec.k_inter)
+    pick = (_counter_hash(seed, _TAG_SRC_AREA, idx).astype(np.int64)
+            % n_allowed[a_of][:, None])
+    src_area = np.take_along_axis(allowed[a_of], pick, axis=1)
+    src_idx = (_counter_hash(seed, _TAG_SRC_IDX, idx).astype(np.int64)
+               % sizes.astype(np.int64)[src_area])
+    return (src_area * n_pad + src_idx).astype(np.int32)
+
+
+def _inter_delay_rows(spec, seed, rows) -> np.ndarray:
+    idx = _flat_idx(np.asarray(rows, np.int64), spec.k_inter)
+    return _counter_delays(
+        seed, _TAG_D_INTER_U1, _TAG_D_INTER_U2, idx,
+        spec.delay_inter_mean_ms, spec.delay_inter_std_ms,
+        spec.steps_inter_min, spec.steps_inter_max, spec.dt_ms)
+
+
+def _inter_rows(spec, seed, rows, n_pad, sizes, allowed=None, n_allowed=None):
+    """(src, w, delay) inter-area tables [R, K_e] for global target rows."""
+    rows = np.asarray(rows, dtype=np.int64)
+    R, K_e = len(rows), spec.k_inter
+    if K_e == 0:
+        return (np.zeros((R, 0), np.int32), np.zeros((R, 0), np.float32),
+                np.zeros((R, 0), _delay_dtype(spec.steps_inter_max)))
+    if allowed is None:
+        allowed, n_allowed = _allowed_source_areas(spec)
+    src = _inter_src_rows(spec, seed, rows, n_pad, sizes, allowed, n_allowed)
+    src_area = src.astype(np.int64) // n_pad
+    src_idx = src.astype(np.int64) % n_pad
+    w = _counter_weights(
+        spec, seed, _TAG_W_INTER, _flat_idx(rows, K_e),
+        src_idx, sizes.astype(np.int64)[src_area])
+    return src, w, _inter_delay_rows(spec, seed, rows)
+
+
+def draw_pathway_rows(
+    spec: MultiAreaSpec,
+    seed: int,
+    rows: np.ndarray,
+    *,
+    pathway: str,
+    size_multiple: int = 1,
+):
+    """Counter-based (src, w, delay) draws for the given *global* target rows.
+
+    The row-subset identity that makes construction shardable: for any
+    subset (in any order) of ``arange(A * n_pad)``, the returned ``[R, K]``
+    tables equal the corresponding rows of :func:`build_network`'s global
+    tensors, bitwise -- each synapse is a pure function of
+    ``(seed, pathway, row, k)``, never of which other rows were drawn.
+    ``pathway`` is ``'intra'`` (src = index within the target's area) or
+    ``'inter'`` (src = global id ``area * n_pad + idx``).
+    """
+    n_pad = spec.padded_area_size(size_multiple)
+    sizes = spec.area_sizes()
+    rows = np.asarray(rows, dtype=np.int64)
+    if pathway == "intra":
+        return _intra_rows(spec, seed, rows, n_pad, sizes)
+    if pathway == "inter":
+        return _inter_rows(spec, seed, rows, n_pad, sizes)
+    raise ValueError(f"unknown pathway {pathway!r} ('intra' | 'inter')")
 
 
 def _invert_adjacency(
@@ -374,18 +585,27 @@ def build_network(
     *,
     seed: int = 12,
     size_multiple: int = 1,
-    outgoing: bool = False,
+    outgoing: bool | str = False,
 ) -> Network:
     """Instantiate the connectivity tensors for ``spec``.
 
     Connectivity generation is deterministic in ``seed`` (the paper runs seeds
-    {12, 654, 91856}); it uses numpy on the host -- network construction is a
-    separate phase from state propagation, exactly as in the reference code.
+    {12, 654, 91856}); every synapse attribute is a *counter-based* pure
+    function of ``(seed, pathway, global target row, k)`` (see
+    :func:`draw_pathway_rows`), so this host build is definitionally
+    bitwise-identical to generating any partition of the rows shard-locally
+    (:func:`build_shard_tables` and friends) -- construction is a separate
+    phase from state propagation, exactly as in the reference code.
 
     ``size_multiple`` rounds the padded per-area size up so that device
     sharding (e.g. 16-way model parallel) and VMEM tiling divide evenly.
+    ``outgoing`` builds the inverted target tables: ``True`` for both
+    pathways, ``'intra'`` for the intra tier only -- the cheap subset that
+    suffices when the inter receive path uses the *inbound* slices of
+    :func:`shard_inter_tables` (which never read the outgoing inter tables).
     """
-    rng = np.random.default_rng(seed)
+    if outgoing not in (False, True, "intra"):
+        raise ValueError(f"outgoing={outgoing!r} (expected bool or 'intra')")
     A = spec.n_areas
     n_pad = spec.padded_area_size(size_multiple)
     sizes = spec.area_sizes()  # [A]
@@ -400,54 +620,22 @@ def build_network(
         rate[a, : sizes[a]] = ar.rate_hz
 
     K_i, K_e = spec.k_intra, spec.k_inter
+    rows = np.arange(A * n_pad, dtype=np.int64)
 
-    # ---- intra-area: uniform sources within the (live part of the) same area.
-    src_intra = np.zeros((A, n_pad, K_i), dtype=np.int32)
-    for a in range(A):
-        src_intra[a] = rng.integers(0, sizes[a], size=(n_pad, K_i), dtype=np.int32)
-
-    # ---- inter-area: uniform source area over the allowed adjacency (the
-    # default all-to-all mask draws uniformly from the other A-1 areas, the
-    # original behaviour), then uniform neuron within the source area.
-    adj = spec.adjacency_matrix()  # [A_src, A_tgt] bool, diagonal-free
-    src_inter = np.zeros((A, n_pad, K_e), dtype=np.int32)
-    if K_e > 0:
-        for a in range(A):
-            allowed = np.flatnonzero(adj[:, a]).astype(np.int32)
-            pick = rng.integers(0, len(allowed), size=(n_pad, K_e),
-                                dtype=np.int32)
-            src_area = allowed[pick]
-            idx = rng.integers(0, 1 << 30, size=(n_pad, K_e)) % sizes[src_area]
-            src_inter[a] = src_area * n_pad + idx.astype(np.int32)
-
-    # ---- weights: 80/20 excitatory/inhibitory by source index, on 1/256 grid.
-    def draw_weights(src_idx_within_area: np.ndarray, sizes_of_src: np.ndarray):
-        exc = src_idx_within_area < np.maximum(
-            1, (spec.exc_fraction * sizes_of_src).astype(np.int64)
-        )
-        mag = _quantize_weights(
-            rng.uniform(0.5, 1.5, size=src_idx_within_area.shape) * spec.w_exc
-        ).astype(np.float32)
-        return np.where(exc, mag, -spec.g * mag).astype(np.float32)
-
-    w_intra = np.zeros((A, n_pad, K_i), dtype=np.float32)
-    for a in range(A):
-        w_intra[a] = draw_weights(src_intra[a], np.asarray(sizes[a]))
-    w_inter = np.zeros((A, n_pad, K_e), dtype=np.float32)
-    if K_e > 0:
-        src_area = src_inter // n_pad
-        src_idx = src_inter % n_pad
-        w_inter = draw_weights(src_idx, sizes[src_area])
-
-    # ---- delays on the dt grid, tiered cutoffs (eq. (1) and §4.2).
-    delay_intra = _draw_delays(
-        rng, (A, n_pad, K_i), spec.delay_intra_mean_ms, spec.delay_intra_std_ms,
-        1, spec.steps_intra_max, spec.dt_ms,
-    )
-    delay_inter = _draw_delays(
-        rng, (A, n_pad, K_e), spec.delay_inter_mean_ms, spec.delay_inter_std_ms,
-        spec.steps_inter_min, spec.steps_inter_max, spec.dt_ms,
-    )
+    # ---- intra-area: uniform sources within the same area; inter-area:
+    # uniform source area over the allowed adjacency (all-to-all by
+    # default), then uniform neuron within the source area. Weights 80/20
+    # excitatory/inhibitory by source index on the 1/256 grid; delays on
+    # the dt grid with tiered cutoffs (eq. (1) and §4.2). All draws are
+    # the shared counter-based row functions.
+    s_, w_, d_ = _intra_rows(spec, seed, rows, n_pad, sizes)
+    src_intra = s_.reshape(A, n_pad, K_i)
+    w_intra = w_.reshape(A, n_pad, K_i)
+    delay_intra = d_.reshape(A, n_pad, K_i)
+    s_, w_, d_ = _inter_rows(spec, seed, rows, n_pad, sizes)
+    src_inter = s_.reshape(A, n_pad, K_e)
+    w_inter = w_.reshape(A, n_pad, K_e)
+    delay_inter = d_.reshape(A, n_pad, K_e)
 
     out: dict = {}
     if outgoing:
@@ -469,7 +657,7 @@ def build_network(
             np.stack([padk(w, k_i, 0.0) for w in wi]))
         out["dout_intra"] = jnp.asarray(
             np.stack([padk(d, k_i, 1) for d in di]))
-        if K_e > 0:
+        if K_e > 0 and outgoing != "intra":
             # Global id space for both sources and targets.
             t_, w_, d_ = _invert_adjacency(
                 src_inter.reshape(A * n_pad, K_e),
@@ -516,28 +704,12 @@ def _inbound_target_rows(
 ) -> np.ndarray:
     """Global row ids of the targets shard ``shard`` (lane ``lane``) owns.
 
-    ``'group'`` -- the structure-aware placement: shards own ``A / S``
-    consecutive areas (row-major over the mesh's area axes, matching
-    ``dist_engine`` placement and ``exchange._group_index``). With
-    ``subgroup > 1``, lane ``lane`` of the shard additionally owns only its
-    ``n_pad / subgroup`` neuron window of each owned area (matching the
-    mesh's last-axis window split, ``exchange._axis_offset``).
-    ``'window'`` -- the conventional round-robin placement: shards own a
-    ``n_pad / S`` neuron window of *every* area (matching
-    ``exchange._axis_offset`` over all mesh axes).
+    Thin alias of :func:`repro.core.partition.shard_pathway_rows`, where the
+    shard -> pathway-row-range derivation now lives (the sharded build path
+    needs it without importing connectivity).
     """
-    if mode == "group":
-        a_loc = n_areas // n_shards
-        n_loc = n_pad // subgroup
-        areas = np.arange(shard * a_loc, (shard + 1) * a_loc, dtype=np.int64)
-        win = np.arange(lane * n_loc, (lane + 1) * n_loc, dtype=np.int64)
-        return (areas[:, None] * n_pad + win[None, :]).reshape(-1)
-    if mode == "window":
-        n_loc = n_pad // n_shards
-        win = np.arange(shard * n_loc, (shard + 1) * n_loc, dtype=np.int64)
-        return (np.arange(n_areas, dtype=np.int64)[:, None] * n_pad
-                + win[None, :]).reshape(-1)
-    raise ValueError(f"unknown inter_shard_mode {mode!r}")
+    return shard_pathway_rows(
+        mode, shard, n_shards, n_areas, n_pad, subgroup=subgroup, lane=lane)
 
 
 def shard_inter_tables(
@@ -747,6 +919,11 @@ def area_adjacency(
     A = net.n_areas
     if net.k_inter == 0:
         return np.zeros((A, A), dtype=bool)
+    if net.area_adj is not None:
+        # Sharded (host-free) build: the realised adjacency was computed at
+        # plan time and rides along as static metadata -- the dense incoming
+        # tensors below are zero-row stand-ins with nothing to inspect.
+        return np.asarray(net.area_adj, dtype=bool)
     if not hasattr(net.src_inter, "__array__"):  # ShapeDtypeStruct stand-in
         if spec is None:
             return ~np.eye(A, dtype=bool)
@@ -756,3 +933,343 @@ def area_adjacency(
     for tgt in range(A):
         adj[np.unique(src_area[tgt]), tgt] = True
     return adj
+
+
+# ---------------------------------------------------------------------------
+# Host-free sharded construction.
+#
+# The counter-based draws above make every synapse a pure function of
+# (seed, pathway, global target row, k) -- so a shard can regenerate exactly
+# its own rows and invert them locally, bitwise-identical to slicing the
+# host-built global network, without any process ever materialising the
+# global src_inter/w_inter/delay_inter tensors. The only *global* facts a
+# shard needs are the padded table widths (the stacked layouts pad every
+# shard/lane to the max width over all of them) and the delay-window
+# metadata -- both derivable from counts alone. sharded_build_plan computes
+# them in one streaming pass whose peak RSS is a single row chunk, and the
+# per-shard builders below consume the plan.
+# ---------------------------------------------------------------------------
+
+# Streaming chunk size for the planning pass, in synapses (rows x K): caps
+# the pass's peak RSS at a few hundred MB regardless of model scale.
+_PLAN_CHUNK_SYNAPSES = 4_000_000
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedBuildPlan:
+    """Global layout facts for host-free per-shard table construction.
+
+    Everything here is derived from *counts* of the counter-based draws
+    (one streaming pass, no global tensor): the padded widths every
+    shard/lane table must share, the realised delay windows, and the
+    realised area adjacency. Hashable (nested tuples only), so it can ride
+    into static Network metadata.
+    """
+
+    n_shards: int
+    subgroup: int
+    mode: str            # 'group' | 'window' (see shard_pathway_rows)
+    size_multiple: int
+    n_pad: int
+    # Padded widths (max over all shards/lanes -- identical to what
+    # shard_inter_tables / build_network(outgoing) / slice_intra_tables
+    # would compute from the global tensors).
+    k_in: int            # inbound inter slice width
+    k_out_intra: int     # outgoing intra width (subgroup == 1 layout)
+    k_lane_intra: int    # lane-cut outgoing intra width (subgroup > 1)
+    # Realised delay windows (build_network metadata).
+    steps_lo_intra: int
+    r_span_intra: int
+    steps_lo_inter: int
+    r_span_inter: int
+    # Realised area->area adjacency as nested tuples of 0/1.
+    area_adj: tuple
+
+
+def _plan_row_chunks(rows: np.ndarray, k: int):
+    step = max(1, _PLAN_CHUNK_SYNAPSES // max(k, 1))
+    for i in range(0, len(rows), step):
+        yield rows[i: i + step]
+
+
+def sharded_build_plan(
+    spec: MultiAreaSpec,
+    seed: int,
+    n_shards: int,
+    *,
+    mode: str = "group",
+    subgroup: int = 1,
+    size_multiple: int = 1,
+) -> ShardedBuildPlan:
+    """Pass 1 of the host-free build: global widths/windows/adjacency.
+
+    Streams over the counter-based draws in bounded chunks (peak RSS ~ one
+    chunk, independent of model size) and records exactly the global facts
+    the host path's ``max over shards`` padding and ``min/max over draws``
+    metadata would produce -- so pass-2 shard tables padded to these widths
+    are bitwise-identical to slicing the host-built network.
+    """
+    A = spec.n_areas
+    n_pad = spec.padded_area_size(size_multiple)
+    sizes = spec.area_sizes()
+    K_i, K_e = spec.k_intra, spec.k_inter
+    sub = max(subgroup, 1)
+    if sub > 1 and mode != "group":
+        raise ValueError(
+            "subgroup slicing applies to the 'group' mode only (the "
+            "'window' mode is already per-device)")
+    if mode == "group" and A % n_shards != 0:
+        raise ValueError(f"n_areas={A} not divisible by {n_shards} shards")
+    if mode == "window" and n_pad % n_shards != 0:
+        raise ValueError(f"n_pad={n_pad} not divisible by {n_shards} shards")
+    if sub > 1 and n_pad % sub != 0:
+        raise ValueError(f"n_pad={n_pad} not divisible by subgroup={sub}")
+    if mode not in ("group", "window"):
+        raise ValueError(f"unknown inter_shard_mode {mode!r}")
+
+    # ---- intra pathway: per-area outgoing widths + delay window.
+    k_out_intra = 0
+    k_lane_intra = 0
+    lo_i, hi_i = None, None
+    n_loc = n_pad // sub
+    if K_i > 0:
+        counts = np.zeros(n_pad, dtype=np.int64)
+        lane_counts = np.zeros(n_pad * sub, dtype=np.int64)
+        for a in range(A):
+            counts[:] = 0
+            lane_counts[:] = 0
+            area_rows = np.arange(a * n_pad, (a + 1) * n_pad, dtype=np.int64)
+            for rows in _plan_row_chunks(area_rows, K_i):
+                src = _intra_src_rows(spec, seed, rows, n_pad, sizes)
+                d = _intra_delay_rows(spec, seed, rows)
+                lo_c, hi_c = int(d.min()), int(d.max())
+                lo_i = lo_c if lo_i is None else min(lo_i, lo_c)
+                hi_i = hi_c if hi_i is None else max(hi_i, hi_c)
+                counts += np.bincount(src.reshape(-1), minlength=n_pad)
+                if sub > 1:
+                    lane_of_tgt = (rows % n_pad) // n_loc        # [R]
+                    key = (src.astype(np.int64) * sub
+                           + lane_of_tgt[:, None])
+                    lane_counts += np.bincount(
+                        key.reshape(-1), minlength=n_pad * sub)
+            k_out_intra = max(k_out_intra, int(counts.max(initial=0)))
+            if sub > 1:
+                k_lane_intra = max(
+                    k_lane_intra, int(lane_counts.max(initial=0)))
+
+    # ---- inter pathway: per-(shard, lane) inbound widths + window + adj.
+    k_in = 0
+    lo_e, hi_e = None, None
+    adj = np.zeros((A, A), dtype=bool)
+    if K_e > 0:
+        allowed, n_allowed = _allowed_source_areas(spec)
+        counts = np.zeros(A * n_pad, dtype=np.int64)
+        for shard in range(n_shards):
+            for lane in range(sub):
+                counts[:] = 0
+                own = shard_pathway_rows(
+                    mode, shard, n_shards, A, n_pad, subgroup=sub, lane=lane)
+                for rows in _plan_row_chunks(own, K_e):
+                    src = _inter_src_rows(
+                        spec, seed, rows, n_pad, sizes, allowed, n_allowed)
+                    d = _inter_delay_rows(spec, seed, rows)
+                    lo_c, hi_c = int(d.min()), int(d.max())
+                    lo_e = lo_c if lo_e is None else min(lo_e, lo_c)
+                    hi_e = hi_c if hi_e is None else max(hi_e, hi_c)
+                    counts += np.bincount(
+                        src.reshape(-1), minlength=A * n_pad)
+                    # Realised adjacency: flat (src_area, tgt_area) pairs.
+                    pairs = np.unique(
+                        (src.astype(np.int64) // n_pad) * A
+                        + (rows // n_pad)[:, None])
+                    adj.reshape(-1)[pairs] = True
+                k_in = max(k_in, int(counts.max(initial=0)))
+
+    return ShardedBuildPlan(
+        n_shards=n_shards,
+        subgroup=sub,
+        mode=mode,
+        size_multiple=size_multiple,
+        n_pad=n_pad,
+        k_in=k_in,
+        k_out_intra=k_out_intra,
+        k_lane_intra=k_lane_intra,
+        steps_lo_intra=lo_i if lo_i is not None else 1,
+        r_span_intra=(hi_i - lo_i + 1) if lo_i is not None else 0,
+        steps_lo_inter=lo_e if lo_e is not None else spec.delay_ratio,
+        r_span_inter=(hi_e - lo_e + 1) if lo_e is not None else 0,
+        area_adj=tuple(tuple(int(v) for v in row) for row in adj),
+    )
+
+
+def _padk_to(x: np.ndarray, k: int, fill) -> np.ndarray:
+    if x.shape[1] > k:
+        raise AssertionError(
+            f"shard table width {x.shape[1]} exceeds plan width {k}")
+    return np.pad(x, ((0, 0), (0, k - x.shape[1])), constant_values=fill)
+
+
+def build_shard_tables(
+    spec: MultiAreaSpec,
+    seed: int,
+    shard: int,
+    *,
+    plan: ShardedBuildPlan,
+    lane: int = 0,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pass 2, inter pathway: one shard's (lane's) inbound inter slice.
+
+    Returns ``(tgt, wout, dout)`` of shape ``[A * n_pad, plan.k_in]`` --
+    bitwise-identical to ``shard_inter_tables(...)``'s slice ``[shard]``
+    (or ``[shard, lane]`` under subgroup slicing) of the host-built
+    network, but generated from the shard's own rows only: peak RSS is the
+    shard's ~1/(S * subgroup) of the inter synapses, not the global table.
+    """
+    A = spec.n_areas
+    n_pad, K_e = plan.n_pad, spec.k_inter
+    n_rows = A * n_pad
+    if K_e == 0:
+        return (np.full((n_rows, 0), -1, np.int32),
+                np.zeros((n_rows, 0), np.float32),
+                np.ones((n_rows, 0), _delay_dtype(spec.steps_inter_max)))
+    rows = shard_pathway_rows(
+        plan.mode, shard, plan.n_shards, A, n_pad,
+        subgroup=plan.subgroup, lane=lane)
+    src, w, d = _inter_rows(spec, seed, rows, n_pad, spec.area_sizes())
+    t_, w_, d_ = _invert_adjacency(src, w, d, n_rows, tgt_ids=rows)
+    return (_padk_to(t_, plan.k_in, -1),
+            _padk_to(w_, plan.k_in, 0.0),
+            _padk_to(d_, plan.k_in, 1))
+
+
+def build_group_intra_tables(
+    spec: MultiAreaSpec,
+    seed: int,
+    areas: np.ndarray,
+    *,
+    plan: ShardedBuildPlan,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pass 2, intra pathway (subgroup == 1 layout): outgoing intra tables
+    for the given areas, ``[len(areas), n_pad, plan.k_out_intra]`` --
+    bitwise-identical to ``build_network(outgoing=...)``'s ``tgt_intra``
+    rows for those areas."""
+    n_pad, sizes = plan.n_pad, spec.area_sizes()
+    ts, ws, ds = [], [], []
+    for a in np.asarray(areas, dtype=np.int64):
+        rows = np.arange(a * n_pad, (a + 1) * n_pad, dtype=np.int64)
+        src, w, d = _intra_rows(spec, seed, rows, n_pad, sizes)
+        t_, w_, d_ = _invert_adjacency(src, w, d, n_pad)
+        ts.append(_padk_to(t_, plan.k_out_intra, -1))
+        ws.append(_padk_to(w_, plan.k_out_intra, 0.0))
+        ds.append(_padk_to(d_, plan.k_out_intra, 1))
+    return np.stack(ts), np.stack(ws), np.stack(ds)
+
+
+def build_lane_intra_tables(
+    spec: MultiAreaSpec,
+    seed: int,
+    areas: np.ndarray,
+    lane: int,
+    *,
+    plan: ShardedBuildPlan,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pass 2, intra pathway (subgroup > 1 layout): lane ``lane``'s cut of
+    the outgoing intra tables for the given areas,
+    ``[len(areas), n_pad, plan.k_lane_intra]`` -- bitwise-identical to
+    ``slice_intra_tables(...)``'s ``[lane, areas]`` rows of the host-built
+    network.
+
+    The compaction is padded-width-invariant (a ``-1`` pad target is never
+    inside a lane's window, and the stable compaction preserves the kept
+    entries' relative order), so compacting each area's *own* inversion
+    (its natural width) equals compacting the globally-padded table.
+    """
+    n_pad, sizes = plan.n_pad, spec.area_sizes()
+    n_loc = n_pad // plan.subgroup
+    lo = lane * n_loc
+    k_lane = plan.k_lane_intra
+    ts, ws, ds = [], [], []
+    for a in np.asarray(areas, dtype=np.int64):
+        rows = np.arange(a * n_pad, (a + 1) * n_pad, dtype=np.int64)
+        src, w, d = _intra_rows(spec, seed, rows, n_pad, sizes)
+        t_, w_, d_ = _invert_adjacency(src, w, d, n_pad)
+        keep = (t_ >= lo) & (t_ < lo + n_loc)        # -1 padding never kept
+        order = np.argsort(~keep, axis=1, kind="stable")
+        cnt = keep.sum(axis=1)
+        cols = np.arange(t_.shape[1], dtype=np.int64)[None, :]
+        valid = cols < cnt[:, None]
+        ts.append(_padk_to(
+            np.where(valid, np.take_along_axis(t_, order, axis=1),
+                     t_.dtype.type(-1))[:, :k_lane], k_lane, -1))
+        ws.append(_padk_to(
+            np.where(valid, np.take_along_axis(w_, order, axis=1),
+                     w_.dtype.type(0))[:, :k_lane], k_lane, 0.0))
+        ds.append(_padk_to(
+            np.where(valid, np.take_along_axis(d_, order, axis=1),
+                     d_.dtype.type(1))[:, :k_lane], k_lane, 1))
+    return np.stack(ts), np.stack(ws), np.stack(ds)
+
+
+def construction_cost_model(
+    spec: MultiAreaSpec,
+    *,
+    n_shards: int,
+    subgroup: int = 1,
+    size_multiple: int = 1,
+) -> dict:
+    """Modelled host peak RSS of network construction, host-build vs sharded.
+
+    Deterministic byte arithmetic (no allocation), mirroring what each path
+    actually materialises:
+
+    * **host build** (``build_network(outgoing=True)`` +
+      ``shard_inter_tables`` + ``slice_intra_tables``): the global incoming
+      tensors of both pathways, the outgoing intra inversion, the
+      accumulated per-shard inbound inter slices (all S x subgroup of them
+      live on the host before stacking) plus the stack copy, and the lane
+      intra cuts likewise.
+    * **sharded build** (plan + per-shard builders): one (shard, lane)'s
+      own draws and inversion temporaries, the global counts array of the
+      planning pass, and that shard's single output slice.
+
+    Width estimates use the same deterministic bounds as the dry-run's SDS
+    stand-ins (:func:`_outgoing_k_bound` / :func:`_inbound_k_bound`).
+    """
+    A = spec.n_areas
+    n_pad = spec.padded_area_size(size_multiple)
+    K_i, K_e = spec.k_intra, spec.k_inter
+    sub = max(subgroup, 1)
+    n_rows = A * n_pad
+    by_i = 8 + np.dtype(_delay_dtype(spec.steps_intra_max)).itemsize
+    by_e = 8 + np.dtype(_delay_dtype(spec.steps_inter_max)).itemsize
+
+    k_oi = _outgoing_k_bound(K_i)
+    k_ie = _inbound_k_bound(K_e, n_shards * sub)
+    k_li = _inbound_k_bound(K_i, sub) if sub > 1 else k_oi
+
+    incoming = n_rows * (K_i * by_i + K_e * by_e)
+    outgoing_intra = n_rows * k_oi * by_i
+    inbound_slices = n_shards * sub * n_rows * k_ie * by_e
+    lane_intra = sub * n_rows * k_li * by_i if sub > 1 else 0
+    # Slices accumulate, then np.stack copies them once more (x2 transient).
+    host_peak = incoming + outgoing_intra + 2 * inbound_slices + 2 * lane_intra
+
+    rows_loc = n_rows // (n_shards * sub) if spec.k_inter else 0
+    # One shard's draws (src int32 + w f32 + d) + inversion temporaries
+    # (int64 flat order/sort/repeat ~ 3 x 8 B per synapse) + the planning
+    # pass's global counts array + the single output slice.
+    shard_draws = rows_loc * K_e * (by_e + 24)
+    shard_intra = n_pad * K_i * (by_i + 24)
+    shard_out = n_rows * k_ie * by_e + n_pad * max(k_li, k_oi) * by_i
+    counts_arr = n_rows * 8
+    shard_peak = max(shard_draws, shard_intra) + shard_out + counts_arr
+
+    return dict(
+        n_shards=n_shards,
+        subgroup=sub,
+        build_bytes_host_modelled=int(host_peak),
+        build_bytes_shard_modelled=int(shard_peak),
+        host_incoming_bytes=int(incoming),
+        host_inbound_slice_bytes=int(inbound_slices),
+        reduction=float(host_peak) / float(max(shard_peak, 1)),
+    )

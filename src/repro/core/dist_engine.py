@@ -74,6 +74,7 @@ from repro.core.engine import (
 
 __all__ = [
     "make_dist_engine",
+    "build_network_sharded",
     "network_pspecs",
     "state_pspecs",
     "shard_network",
@@ -216,16 +217,230 @@ def _make_exchange(
     return exchange_lib.DenseMeshExchange(net, cfg, mesh)
 
 
+def build_network_sharded(
+    spec: MultiAreaSpec,
+    mesh: Mesh,
+    config: EngineConfig,
+    *,
+    seed: int = 12,
+    size_multiple: int = 1,
+) -> Network:
+    """Host-free construction: each device's tables straight from the rules.
+
+    The counter-based draws (:func:`repro.core.connectivity.draw_pathway_rows`)
+    make every synapse a pure function of ``(seed, pathway, row, k)``, so a
+    shard can regenerate exactly its own inbound inter slice and lane-cut
+    intra tables -- bitwise-identical to slicing the host-built global
+    network -- without any process materialising the global
+    ``src_inter/w_inter/delay_inter`` tensors. This assembles that Network:
+
+    * a streaming planning pass (:func:`~repro.core.connectivity.
+      sharded_build_plan`, peak RSS ~ one row chunk) fixes the global padded
+      widths, delay windows and realised area adjacency;
+    * every synapse-table leaf is a ``jax.make_array_from_callback`` whose
+      callback generates one shard's slice on demand (memoised per shard
+      index, shared across the src/w/delay sibling leaves), so host memory
+      holds at most the addressable shards' own tables;
+    * the O(N) ``alive``/``rate_hz`` masks are built host-side (they are
+      the model's *state* scale, not its synapse scale) and placed sharded;
+    * the dense incoming inter tensors become the zero-row stand-ins the
+      event engine would have dropped at build anyway, and the realised
+      adjacency rides along as static ``area_adj`` metadata for the routed
+      exchange.
+
+    Structure-aware placement only (``config.sharded_build`` semantics):
+    groups own consecutive areas, lanes own ``n_pad / gsz`` windows.
+    """
+    import numpy as np
+
+    cfg = config
+    if cfg.schedule != STRUCTURE_AWARE:
+        raise ValueError(
+            "build_network_sharded targets the structure-aware placement")
+    if cfg.backend != "event":
+        raise ValueError("build_network_sharded builds the event-path tables")
+    area_axes = _area_axes(mesh)
+    sg_axis = _subgroup_axis(mesh)
+    n_groups = math.prod(mesh.shape[a] for a in area_axes)
+    gsz = mesh.shape[sg_axis]
+    A = spec.n_areas
+    n_pad = spec.padded_area_size(size_multiple)
+    if A % n_groups != 0:
+        raise ValueError(
+            f"n_areas={A} not divisible by area shards={n_groups} "
+            f"(mesh {dict(mesh.shape)})")
+    if n_pad % gsz != 0:
+        raise ValueError(
+            f"padded area size {n_pad} not divisible by subgroup {gsz}")
+    sub = gsz if (cfg.subgroup_inter_tables and gsz > 1) else 1
+    K_i, K_e = spec.k_intra, spec.k_inter
+
+    plan = connectivity_lib.sharded_build_plan(
+        spec, seed, n_groups, mode="group", subgroup=sub,
+        size_multiple=size_multiple)
+
+    sizes = spec.area_sizes()
+    alive = np.zeros((A, n_pad), dtype=bool)
+    rate = np.zeros((A, n_pad), dtype=np.float32)
+    for a, ar in enumerate(spec.areas):
+        alive[a, : sizes[a]] = True
+        rate[a, : sizes[a]] = ar.rate_hz
+
+    area_sh = NamedSharding(mesh, P(area_axes, sg_axis))
+    syn_sh = NamedSharding(mesh, P(area_axes, sg_axis, None))
+
+    def _rng(sl, n: int) -> tuple[int, int]:
+        # Callback indices arrive as slices; replicated dims come as
+        # slice(None), so normalise both ends against the dim size.
+        return (sl.start or 0, n if sl.stop is None else sl.stop)
+
+    def from_cb(shape, sharding, cb):
+        return jax.make_array_from_callback(shape, sharding, cb)
+
+    # ---- incoming intra tables: each device draws its own rows.
+    intra_cache: dict = {}
+
+    def intra_slices(index):
+        key = _rng(index[0], A) + _rng(index[1], n_pad)
+        if key not in intra_cache:
+            a0, a1, n0, n1 = key
+            rows = (np.arange(a0, a1, dtype=np.int64)[:, None] * n_pad
+                    + np.arange(n0, n1, dtype=np.int64)[None, :]).reshape(-1)
+            s_, w_, d_ = connectivity_lib.draw_pathway_rows(
+                spec, seed, rows, pathway="intra",
+                size_multiple=size_multiple)
+            shp = (a1 - a0, n1 - n0, K_i)
+            intra_cache[key] = (s_.reshape(shp), w_.reshape(shp),
+                                d_.reshape(shp))
+        return intra_cache[key]
+
+    shp_syn = (A, n_pad, K_i)
+    src_intra = from_cb(shp_syn, syn_sh, lambda i: intra_slices(i)[0])
+    w_intra = from_cb(shp_syn, syn_sh, lambda i: intra_slices(i)[1])
+    delay_intra = from_cb(shp_syn, syn_sh, lambda i: intra_slices(i)[2])
+
+    # ---- outgoing intra tables: lane-cut [gsz, A, n_pad, K_lane] when the
+    # subgroup slicing is on, replicated [A, n_pad, K_out] otherwise.
+    out_cache: dict = {}
+    if sub > 1:
+        out_sh = NamedSharding(mesh, P(sg_axis, area_axes, None, None))
+        shp_out = (gsz, A, n_pad, plan.k_lane_intra)
+
+        def out_slices(index):
+            key = _rng(index[0], gsz) + _rng(index[1], A)
+            if key not in out_cache:
+                l0, l1, a0, a1 = key
+                areas = np.arange(a0, a1, dtype=np.int64)
+                parts = [connectivity_lib.build_lane_intra_tables(
+                    spec, seed, areas, lane, plan=plan)
+                    for lane in range(l0, l1)]
+                out_cache[key] = tuple(
+                    np.stack([p[j] for p in parts]) for j in range(3))
+            return out_cache[key]
+    else:
+        out_sh = NamedSharding(mesh, P(area_axes, None, None))
+        shp_out = (A, n_pad, plan.k_out_intra)
+
+        def out_slices(index):
+            key = _rng(index[0], A)
+            if key not in out_cache:
+                a0, a1 = key
+                out_cache[key] = connectivity_lib.build_group_intra_tables(
+                    spec, seed, np.arange(a0, a1, dtype=np.int64), plan=plan)
+            return out_cache[key]
+
+    tgt_intra = from_cb(shp_out, out_sh, lambda i: out_slices(i)[0])
+    wout_intra = from_cb(shp_out, out_sh, lambda i: out_slices(i)[1])
+    dout_intra = from_cb(shp_out, out_sh, lambda i: out_slices(i)[2])
+
+    # ---- inbound inter slices: [S(, sub), A * n_pad, K_in].
+    inter: dict = {}
+    if K_e > 0:
+        in_cache: dict = {}
+        n_rows = A * n_pad
+        if sub > 1:
+            in_sh = NamedSharding(mesh, P(area_axes, sg_axis, None, None))
+            shp_in = (n_groups, sub, n_rows, plan.k_in)
+
+            def in_slices(index):
+                key = _rng(index[0], n_groups) + _rng(index[1], sub)
+                if key not in in_cache:
+                    s0, s1, l0, l1 = key
+                    rows = [[connectivity_lib.build_shard_tables(
+                        spec, seed, s, plan=plan, lane=l)
+                        for l in range(l0, l1)] for s in range(s0, s1)]
+                    in_cache[key] = tuple(
+                        np.stack([[b[j] for b in r] for r in rows])
+                        for j in range(3))
+                return in_cache[key]
+        else:
+            in_sh = NamedSharding(mesh, P(area_axes, None, None))
+            shp_in = (n_groups, n_rows, plan.k_in)
+
+            def in_slices(index):
+                key = _rng(index[0], n_groups)
+                if key not in in_cache:
+                    s0, s1 = key
+                    parts = [connectivity_lib.build_shard_tables(
+                        spec, seed, s, plan=plan) for s in range(s0, s1)]
+                    in_cache[key] = tuple(
+                        np.stack([p[j] for p in parts]) for j in range(3))
+                return in_cache[key]
+
+        inter = dict(
+            tgt_inter_in=from_cb(shp_in, in_sh, lambda i: in_slices(i)[0]),
+            wout_inter_in=from_cb(shp_in, in_sh, lambda i: in_slices(i)[1]),
+            dout_inter_in=from_cb(shp_in, in_sh, lambda i: in_slices(i)[2]),
+            inter_shard_mode="group",
+        )
+
+    # Dense incoming inter tensors: the zero-row stand-ins the event engine
+    # drops at build anyway (K_e axis preserved -- `k_inter` reads it).
+    d_e = connectivity_lib._delay_dtype(spec.steps_inter_max)
+    return Network(
+        alive=jax.device_put(alive, area_sh),
+        rate_hz=jax.device_put(rate, area_sh),
+        src_intra=src_intra, w_intra=w_intra, delay_intra=delay_intra,
+        src_inter=jnp.zeros((0, 0, K_e), jnp.int32),
+        w_inter=jnp.zeros((0, 0, K_e), jnp.float32),
+        delay_inter=jnp.zeros((0, 0, K_e), d_e),
+        tgt_intra=tgt_intra, wout_intra=wout_intra, dout_intra=dout_intra,
+        n_pad=n_pad,
+        n_areas=A,
+        ring_len=spec.ring_len,
+        delay_ratio=spec.delay_ratio,
+        dt_ms=spec.dt_ms,
+        steps_lo_intra=plan.steps_lo_intra,
+        r_span_intra=plan.r_span_intra,
+        steps_lo_inter=plan.steps_lo_inter,
+        r_span_inter=plan.r_span_inter,
+        area_adj=plan.area_adj,
+        **inter,
+    )
+
+
 def make_dist_engine(
-    net: Network,
+    net: Network | None,
     spec: MultiAreaSpec,
     mesh: Mesh,
     config: EngineConfig = EngineConfig(),
+    *,
+    build_seed: int = 12,
 ) -> Engine:
     """Build the distributed engine. ``net`` may be host-resident; callers on
-    real hardware should pass ``shard_network(net, mesh, schedule)``."""
+    real hardware should pass ``shard_network(net, mesh, schedule)``.
+
+    ``net=None`` requires ``config.sharded_build`` and constructs the
+    connectivity host-free on this mesh (:func:`build_network_sharded`,
+    seeded by ``build_seed``) -- no global tensors ever exist."""
     cfg = config
     backend = cfg.backend
+    if net is None:
+        if not cfg.sharded_build:
+            raise ValueError(
+                "net=None needs config.sharded_build=True (otherwise pass "
+                "a build_network(...) network)")
+        net = build_network_sharded(spec, mesh, cfg, seed=build_seed)
     _validate(net, mesh, cfg.schedule)
     if backend == "event" and net.tgt_intra is None:
         raise ValueError("event delivery needs build_network(outgoing=True)")

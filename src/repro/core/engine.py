@@ -154,6 +154,20 @@ class EngineConfig:
     # saved states ARE sequential states (resume_config_hash treats the
     # flag as layout, not trajectory). Structure-aware schedule only.
     overlap_exchange: bool = False
+    # Host-free sharded construction (connectivity.sharded_build_plan /
+    # build_shard_tables): the distributed engine generates each device's
+    # inbound inter slices and lane-cut intra tables directly from the
+    # seeded counter-based connectivity rules
+    # (dist_engine.build_network_sharded) instead of slicing a host-built
+    # global network -- no process ever materialises the global
+    # src_inter/w_inter/delay_inter tensors, so host peak RSS scales with
+    # ONE shard's tables, not the model. Bitwise-identical trajectories to
+    # the host-build path by the counter-draw row identity
+    # (connectivity.draw_pathway_rows); pure layout, not trajectory
+    # (resume_config_hash excludes it). Requires the event backend +
+    # sharded inbound tables + the structure-aware schedule (the layouts
+    # the sharded builders emit); distributed engines only.
+    sharded_build: bool = False
     # Host-side fault-injection plan (repro.core.faults.FaultConfig): per-
     # device compute jitter slept at window boundaries, transient
     # checkpoint-write failures, simulated preemption. Consumed by the
@@ -204,6 +218,25 @@ class EngineConfig:
                 "window-end exchange; the conventional schedule has no "
                 "lumped exchange to overlap"
             )
+        if self.sharded_build:
+            if self.backend != "event":
+                raise ValueError(
+                    "sharded_build generates the event path's inbound/"
+                    "outgoing tables; dense backends read the global "
+                    "incoming tensors it never materialises"
+                )
+            if not self.shard_inter_tables:
+                raise ValueError(
+                    "sharded_build emits per-shard inbound inter slices; "
+                    "shard_inter_tables=False asks for the replicated "
+                    "layout it exists to avoid"
+                )
+            if self.schedule != STRUCTURE_AWARE:
+                raise ValueError(
+                    "sharded_build targets the structure-aware placement "
+                    "(area groups x subgroup lanes); the conventional "
+                    "schedule slices a host-built network"
+                )
 
     @property
     def backend(self) -> str:
@@ -379,6 +412,12 @@ def make_engine(
         raise ValueError(
             f"exchange={cfg.exchange!r} needs a device mesh; the single-host "
             "engine is exchange-free (use make_dist_engine)"
+        )
+    if cfg.sharded_build:
+        raise ValueError(
+            "sharded_build is a distributed construction mode; the "
+            "single-host engine holds the whole network anyway "
+            "(use make_dist_engine)"
         )
     backend = cfg.backend
     if backend == "event" and net.tgt_intra is None:

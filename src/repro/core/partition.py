@@ -34,7 +34,45 @@ __all__ = [
     "placement_from_sizes",
     "reshard_area_order",
     "reshard_moves",
+    "shard_pathway_rows",
 ]
+
+
+def shard_pathway_rows(
+    mode: str, shard: int, n_shards: int, n_areas: int, n_pad: int,
+    *, subgroup: int = 1, lane: int = 0,
+) -> np.ndarray:
+    """Global row ids of the targets shard ``shard`` (lane ``lane``) owns.
+
+    The shard -> pathway-row-range derivation shared by the inbound
+    inter-table cut (``connectivity.shard_inter_tables``) and the host-free
+    sharded build (``connectivity.build_shard_tables``): a shard's table is
+    exactly the inversion of these rows' incoming draws. Rows are returned
+    ascending (area-major), matching how the host path slices the global
+    tensors -- which is what makes the per-shard inversion bitwise-equal.
+
+    ``'group'`` -- the structure-aware placement: shards own ``A / S``
+    consecutive areas (row-major over the mesh's area axes, matching
+    ``dist_engine`` placement and ``exchange._group_index``). With
+    ``subgroup > 1``, lane ``lane`` of the shard additionally owns only its
+    ``n_pad / subgroup`` neuron window of each owned area (matching the
+    mesh's last-axis window split, ``exchange._axis_offset``).
+    ``'window'`` -- the conventional round-robin placement: shards own a
+    ``n_pad / S`` neuron window of *every* area (matching
+    ``exchange._axis_offset`` over all mesh axes).
+    """
+    if mode == "group":
+        a_loc = n_areas // n_shards
+        n_loc = n_pad // subgroup
+        areas = np.arange(shard * a_loc, (shard + 1) * a_loc, dtype=np.int64)
+        win = np.arange(lane * n_loc, (lane + 1) * n_loc, dtype=np.int64)
+        return (areas[:, None] * n_pad + win[None, :]).reshape(-1)
+    if mode == "window":
+        n_loc = n_pad // n_shards
+        win = np.arange(shard * n_loc, (shard + 1) * n_loc, dtype=np.int64)
+        return (np.arange(n_areas, dtype=np.int64)[:, None] * n_pad
+                + win[None, :]).reshape(-1)
+    raise ValueError(f"unknown inter_shard_mode {mode!r}")
 
 
 @dataclasses.dataclass(frozen=True)

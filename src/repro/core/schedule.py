@@ -347,11 +347,14 @@ def make_overlap_window_fn(
 # Config fields that are *layout*, not *trajectory*: every value produces
 # bit-identical spike trains (sharded inter tables are re-cut by
 # make_dist_engine for whatever mesh the resume runs on; a drained overlap
-# pipeline IS the sequential trajectory), so checkpoints must stay
-# exchangeable across them. Recorded in the manifest payload for forensics,
-# excluded from the compatibility hash and the mismatch diff.
+# pipeline IS the sequential trajectory; a sharded build regenerates the
+# exact same tables from the counter-based rules a host build draws), so
+# checkpoints must stay exchangeable across them. Recorded in the manifest
+# payload for forensics, excluded from the compatibility hash and the
+# mismatch diff.
 _LAYOUT_KEYS = frozenset(
-    {"shard_inter_tables", "subgroup_inter_tables", "overlap_exchange"})
+    {"shard_inter_tables", "subgroup_inter_tables", "overlap_exchange",
+     "sharded_build"})
 
 
 def resume_config_hash(cfg, net, *, exchange: str | None = None):
@@ -386,6 +389,7 @@ def resume_config_hash(cfg, net, *, exchange: str | None = None):
         "subgroup_inter_tables": bool(
             getattr(cfg, "subgroup_inter_tables", True)),
         "overlap_exchange": bool(getattr(cfg, "overlap_exchange", False)),
+        "sharded_build": bool(getattr(cfg, "sharded_build", False)),
     }
     hashed = {k: v for k, v in payload.items() if k not in _LAYOUT_KEYS}
     digest = hashlib.sha256(

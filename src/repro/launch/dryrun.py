@@ -276,7 +276,11 @@ def verify_inter_table_bounds(
         "arch": SNN_ARCH, "shape": "table_bounds",
         "mesh": f"{n_shards}x{subgroup}", "mode": "verify",
     }
-    net = build_network(spec, seed=seed, size_multiple=8, outgoing=True)
+    # outgoing="intra" skips the outgoing *inter* inversion: the inbound
+    # slices are cut from the incoming tensors (shard_inter_tables) and the
+    # intra check only needs tgt_intra, so the dense [A, n_pad, K_out_e]
+    # tables would be built, held, and never read.
+    net = build_network(spec, seed=seed, size_multiple=8, outgoing="intra")
     sds = network_sds(spec, size_multiple=8, outgoing=True,
                       inter_shards=n_shards, subgroup=subgroup)
     cut = shard_inter_tables(net, n_shards, mode="group", subgroup=subgroup)
@@ -320,6 +324,128 @@ def verify_inter_table_bounds(
     row["intra_bound_slack"] = round(
         sds.tgt_intra.shape[-1] / max(cut_i.tgt_intra.shape[-1], 1), 3)
     row["status"] = "OK"
+    return row
+
+
+def construction_cost_row(
+    scale: float = 1.0, min_reduction: float = 4.0
+) -> dict:
+    """Modelled host peak RSS of constructing the production network.
+
+    Prices the host-build path (``build_network(outgoing=True)`` + the two
+    shard cuts: every global tensor plus all S x subgroup inbound slices
+    resident in one process) against the sharded build (plan pass + one
+    shard's draws, temporaries and output slice). Pure byte arithmetic from
+    the same deterministic width bounds as the SDS rows -- nothing is
+    allocated. At ``scale=1`` the reduction must clear ``min_reduction``
+    (the PR's acceptance bar) or the row FAILs the dry run.
+    """
+    from repro.core.areas import mam_spec
+    from repro.core.connectivity import construction_cost_model
+
+    row: dict[str, Any] = {
+        "arch": SNN_ARCH, "shape": f"mam_x{scale:g}_build",
+        "mesh": "16x16", "mode": "construction",
+    }
+    spec = mam_spec(scale=scale)
+    # Production structure-aware cut: 16 area groups x 16-lane subgroups.
+    cm = construction_cost_model(spec, n_shards=16, subgroup=16,
+                                 size_multiple=16)
+    row["build_bytes_host_modelled"] = cm["build_bytes_host_modelled"]
+    row["build_bytes_shard_modelled"] = cm["build_bytes_shard_modelled"]
+    row["build_gib_host_modelled"] = round(
+        cm["build_bytes_host_modelled"] / 2**30, 2)
+    row["build_gib_shard_modelled"] = round(
+        cm["build_bytes_shard_modelled"] / 2**30, 2)
+    row["build_reduction"] = round(cm["reduction"], 1)
+    if cm["reduction"] < min_reduction:
+        row["status"] = (
+            f"FAIL(construction: modelled host-RSS reduction "
+            f"{cm['reduction']:.1f}x below the {min_reduction:g}x bar)")
+    else:
+        row["status"] = "OK"
+    return row
+
+
+def measure_build_rss(
+    n_areas: int = 8, n_per_area: int = 4096,
+    k_intra: int = 256, k_inter: int = 256,
+    n_shards: int = 4, subgroup: int = 2, seed: int = 12,
+) -> dict:
+    """Measured host peak RSS: host build vs sharded build, real processes.
+
+    Forks two fresh interpreters (so each path's ``ru_maxrss`` is its own,
+    not inherited from this process's jax arena) over a mid-size network
+    chosen large enough that table bytes dominate the ~quarter-GiB import
+    baseline. Child A runs the host path -- global build + both shard cuts;
+    child B runs the sharded path -- plan pass, then every (shard, lane)'s
+    tables built one at a time (the per-process peak a real shard pays).
+    The sharded peak must come in under the host peak or the row FAILs.
+    """
+    import subprocess
+    import sys
+
+    row: dict[str, Any] = {
+        "arch": SNN_ARCH, "shape": "build_rss",
+        "mesh": f"{n_shards}x{subgroup}", "mode": "construction",
+    }
+    common = (
+        "import resource, sys\n"
+        "from repro.core.areas import mam_benchmark_spec\n"
+        "spec = mam_benchmark_spec(n_areas=%d, n_per_area=%d, k_intra=%d, "
+        "k_inter=%d)\n" % (n_areas, n_per_area, k_intra, k_inter)
+    )
+    host_src = common + (
+        "from repro.core.connectivity import (\n"
+        "    build_network, shard_inter_tables, slice_intra_tables)\n"
+        "net = build_network(spec, seed=%d, outgoing='intra')\n"
+        "cut = shard_inter_tables(net, %d, mode='group', subgroup=%d)\n"
+        "cut = slice_intra_tables(cut, %d)\n"
+        "print(resource.getrusage(resource.RUSAGE_SELF).ru_maxrss)\n"
+        % (seed, n_shards, subgroup, subgroup)
+    )
+    a_loc = n_areas // n_shards
+    shard_src = common + (
+        "from repro.core.connectivity import (\n"
+        "    sharded_build_plan, build_shard_tables, build_lane_intra_tables)\n"
+        "plan = sharded_build_plan(spec, %d, %d, mode='group', subgroup=%d)\n"
+        "for s in range(%d):\n"
+        "    areas = list(range(s * %d, (s + 1) * %d))\n"
+        "    for lane in range(%d):\n"
+        "        t = build_shard_tables(spec, %d, s, plan=plan, lane=lane)\n"
+        "        del t\n"
+        "        ti = build_lane_intra_tables(spec, %d, areas, lane, "
+        "plan=plan)\n"
+        "        del ti\n"
+        "print(resource.getrusage(resource.RUSAGE_SELF).ru_maxrss)\n"
+        % (seed, n_shards, subgroup, n_shards, a_loc, a_loc, subgroup,
+           seed, seed)
+    )
+
+    def _peak_kib(src: str) -> int:
+        env = dict(os.environ)
+        env.pop("XLA_FLAGS", None)  # no forced 512-device init in children
+        out = subprocess.run(
+            [sys.executable, "-c", src], capture_output=True, text=True,
+            env=env, check=True)
+        return int(out.stdout.strip().splitlines()[-1])
+
+    t0 = time.time()
+    host_kib = _peak_kib(host_src)
+    t1 = time.time()
+    shard_kib = _peak_kib(shard_src)
+    t2 = time.time()
+    row["host_peak_rss_mib"] = round(host_kib / 1024, 1)
+    row["sharded_peak_rss_mib"] = round(shard_kib / 1024, 1)
+    row["rss_reduction"] = round(host_kib / max(shard_kib, 1), 2)
+    row["host_build_s"] = round(t1 - t0, 1)
+    row["sharded_build_s"] = round(t2 - t1, 1)
+    if shard_kib >= host_kib:
+        row["status"] = (
+            f"FAIL(build RSS: sharded peak {shard_kib} KiB >= host peak "
+            f"{host_kib} KiB -- the host-free build saved nothing)")
+    else:
+        row["status"] = "OK"
     return row
 
 
@@ -516,6 +642,13 @@ def main() -> None:
                          "exceeds this FAILs the dry run instead of just "
                          "printing the number (default 16, the v5e chip; "
                          "0 disables the gate)")
+    ap.add_argument("--build-rss", action="store_true",
+                    help="also *measure* construction host peak RSS: fork "
+                         "one fresh interpreter per build path (host build "
+                         "+ shard cuts vs plan + per-shard builders) over a "
+                         "mid-size network and FAIL unless the sharded "
+                         "build's ru_maxrss comes in under the host "
+                         "build's")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -536,10 +669,34 @@ def main() -> None:
             })
             traceback.print_exc()
         _print_row(rows[-1])
+        # Construction rows: what building the production network costs the
+        # host, before any window runs -- the host-free build's claim.
+        try:
+            rows.append(construction_cost_row(args.snn_scale))
+        except Exception as e:
+            rows.append({
+                "arch": SNN_ARCH, "shape": "build",
+                "mesh": "16x16", "status": f"FAIL({type(e).__name__}: {e})",
+            })
+            traceback.print_exc()
+        _print_row(rows[-1])
+        if args.build_rss:
+            try:
+                rows.append(measure_build_rss())
+            except Exception as e:
+                rows.append({
+                    "arch": SNN_ARCH, "shape": "build_rss",
+                    "mesh": "4x2",
+                    "status": f"FAIL({type(e).__name__}: {e})",
+                })
+                traceback.print_exc()
+            _print_row(rows[-1])
     for multi_pod in meshes:
         for arch in archs:
             if arch == SNN_ARCH:
-                for sched in args.snn_schedule.split(","):
+                # --snn-schedule "" runs only the verify/construction rows
+                # (no production lowering) -- the CI construction gate.
+                for sched in filter(None, args.snn_schedule.split(",")):
                     try:
                         rows.append(enforce_hbm_budget(dryrun_snn_cell(
                             sched, multi_pod, args.snn_scale,
@@ -591,6 +748,17 @@ def _print_row(row: dict) -> None:
     base = f"[{row['mesh']}] {row['arch']:28s} {row['shape']:12s} "
     if status != "OK":
         print(base + status)
+        return
+    if "build_reduction" in row:  # modelled construction row
+        print(base + f"OK build host={row['build_gib_host_modelled']}GiB "
+              f"sharded={row['build_gib_shard_modelled']}GiB "
+              f"({row['build_reduction']}x)")
+        return
+    if "rss_reduction" in row:  # measured construction row
+        print(base + f"OK build-rss host={row['host_peak_rss_mib']}MiB/"
+              f"{row['host_build_s']}s "
+              f"sharded={row['sharded_peak_rss_mib']}MiB/"
+              f"{row['sharded_build_s']}s ({row['rss_reduction']}x)")
         return
     if "roofline" not in row:  # bounds-verify row: no lowering behind it
         print(base + f"OK modelled={row['bytes_per_device_modelled']}B "

@@ -460,6 +460,17 @@ def main() -> None:
                          "[gsz, A, n_pad, K] layouts (the bit-identity "
                          "baseline of the memory-diet PR; structure-aware "
                          "distributed paths only)")
+    ap.add_argument("--sharded-build", action="store_true",
+                    help="host-free construction "
+                         "(EngineConfig.sharded_build): each device's "
+                         "inbound inter slices and lane-cut intra tables "
+                         "are generated directly from the seeded "
+                         "counter-based connectivity rules "
+                         "(dist_engine.build_network_sharded) -- no process "
+                         "materialises the global synapse tensors. "
+                         "Bitwise-identical trajectories to the host build; "
+                         "structure-aware event-backend legs on a "
+                         "multi-device mesh only")
     ap.add_argument("--seed", type=int, default=12,
                     help="paper seeds: 12, 654, 91856")
     ap.add_argument("--adaptive", action="store_true",
@@ -571,19 +582,44 @@ def main() -> None:
           f"backend={backend}, exchange={args.exchange}, seed={args.seed}, "
           f"devices={n_dev}")
 
-    net = build_network(spec, seed=args.seed, outgoing=needs_outgoing)
-    mesh = None
+    n_pad_spec = spec.padded_area_size(1)
+    if args.sharded_build:
+        if backend != "event":
+            raise SystemExit(
+                "--sharded-build generates the event path's tables; run "
+                "with --backend event")
+        if args.replicated_inter_tables:
+            raise SystemExit(
+                "--sharded-build emits per-shard inbound slices; it cannot "
+                "combine with --replicated-inter-tables")
+        if n_dev <= 1:
+            raise SystemExit(
+                "--sharded-build needs a multi-device mesh (the single-host "
+                "engine holds the whole network anyway)")
+        if args.schedule == "conventional" and not args.compare:
+            raise SystemExit(
+                "--sharded-build targets the structure-aware placement; "
+                "the conventional schedule slices a host-built network")
+
+    # The host-built global network: skipped entirely when every leg builds
+    # sharded (the whole point -- its host RSS is the construction wall).
+    # The conventional --compare legs and the profiler still need it.
     runs_conventional = args.compare or args.schedule == "conventional"
+    needs_host_net = ((not args.sharded_build) or runs_conventional
+                      or args.profile)
+    net = (build_network(spec, seed=args.seed, outgoing=needs_outgoing)
+           if needs_host_net else None)
+    mesh = None
     if n_dev > 1:
-        shape = _pick_mesh(n_dev, net.n_areas, net.n_pad)
+        shape = _pick_mesh(n_dev, spec.n_areas, n_pad_spec)
         if shape is None:
             raise SystemExit(
                 f"no (data, model) mesh over {n_dev} devices fits "
-                f"A={net.n_areas}, n_pad={net.n_pad}")
-        if runs_conventional and net.n_pad % n_dev != 0:
+                f"A={spec.n_areas}, n_pad={n_pad_spec}")
+        if runs_conventional and n_pad_spec % n_dev != 0:
             # The round-robin placement slices every area over all devices.
             raise SystemExit(
-                f"the conventional schedule needs n_pad={net.n_pad} "
+                f"the conventional schedule needs n_pad={n_pad_spec} "
                 f"divisible by {n_dev} devices (pick --n-per-area "
                 "accordingly, or run --schedule structure_aware)")
         mesh = jax.make_mesh(shape, ("data", "model"))
@@ -615,23 +651,36 @@ def main() -> None:
             # global pathway; the conventional schedule always runs dense.
             exchange = (args.exchange if sched == "structure_aware"
                         else "dense")
+            sharded_leg = (args.sharded_build and mesh is not None
+                           and sched == "structure_aware")
             cfg = EngineConfig(
                 neuron_model=neuron, schedule=sched,
                 delivery_backend=backend,
                 exchange=exchange if mesh is not None else "", seed=42,
                 shard_inter_tables=not args.replicated_inter_tables,
                 subgroup_inter_tables=not args.no_subgroup_inter_tables,
-                adaptive_exchange=adaptive, overlap_exchange=overlap_on)
+                adaptive_exchange=adaptive, overlap_exchange=overlap_on,
+                sharded_build=sharded_leg)
+            leg_net = net
             if mesh is not None:
-                from repro.core.dist_engine import make_dist_engine
+                from repro.core.dist_engine import (
+                    build_network_sharded, make_dist_engine)
 
-                eng = make_dist_engine(net, spec, mesh, cfg)
+                if sharded_leg:
+                    t0 = time.perf_counter()
+                    leg_net = build_network_sharded(
+                        spec, mesh, cfg, seed=args.seed)
+                    jax.block_until_ready(leg_net.tgt_intra)
+                    print(f"  sharded build: tables generated host-free in "
+                          f"{time.perf_counter() - t0:.2f} s "
+                          f"(no global tensors materialised)")
+                eng = make_dist_engine(leg_net, spec, mesh, cfg)
             else:
                 eng = make_engine(net, spec, cfg)
             n_windows = spec.steps_for(args.t_ms) // spec.delay_ratio
             if resilient:
                 st, wall, windows_run = _run_resilient(
-                    args, eng, net, mesh, exchange, n_windows)
+                    args, eng, leg_net, mesh, exchange, n_windows)
             elif inject_compare:
                 # Same deterministic draws for every leg (injector state is
                 # keyed by (seed, window)), so the injected walls realize

@@ -133,6 +133,50 @@ def test_counter_uniform_shard_invariance(seed, t, n, split):
 
 @settings(**SETTINGS)
 @given(
+    seed=st.integers(0, 100000),
+    pathway=st.sampled_from(["intra", "inter"]),
+    perm_seed=st.integers(0, 2**31 - 1),
+)
+def test_counter_draws_row_order_and_shard_invariance(
+        seed, pathway, perm_seed):
+    """The connectivity draws are pure functions of (seed, pathway, row):
+    any row subset in any order reproduces the host-built global tensors'
+    rows exactly, and a shard's row range under 4 groups equals the union
+    of its matching row ranges under 8 groups -- the property that makes
+    the host-free sharded build bitwise-independent of the shard count."""
+    from repro.core.connectivity import draw_pathway_rows
+    from repro.core.partition import shard_pathway_rows
+
+    spec = mam_benchmark_spec(
+        n_areas=8, n_per_area=16, k_intra=4, k_inter=4)
+    n_pad = spec.padded_area_size(1)
+    full = np.arange(8 * n_pad, dtype=np.int64)
+    s_f, w_f, d_f = draw_pathway_rows(spec, seed, full, pathway=pathway)
+    rng = np.random.default_rng(perm_seed)
+    rows = rng.permutation(full)[: 3 * n_pad]
+    s, w, d = draw_pathway_rows(spec, seed, rows, pathway=pathway)
+    assert np.array_equal(s, s_f[rows])
+    assert np.array_equal(w, w_f[rows])
+    assert np.array_equal(d, d_f[rows])
+    # Shard g of 4 groups == its two matching shards of 8 groups.
+    g = int(rng.integers(4))
+    coarse = shard_pathway_rows("group", g, 4, 8, n_pad)
+    fine = np.concatenate([
+        shard_pathway_rows("group", 2 * g, 8, 8, n_pad),
+        shard_pathway_rows("group", 2 * g + 1, 8, 8, n_pad)])
+    assert np.array_equal(coarse, fine)
+    s4, w4, d4 = draw_pathway_rows(spec, seed, coarse, pathway=pathway)
+    s8 = np.concatenate([
+        draw_pathway_rows(spec, seed, r, pathway=pathway)[0]
+        for r in (coarse[: len(coarse) // 2], coarse[len(coarse) // 2:])])
+    assert np.array_equal(s4, s8)
+    assert np.array_equal(s4, s_f[coarse])
+    assert np.array_equal(w4, w_f[coarse])
+    assert np.array_equal(d4, d_f[coarse])
+
+
+@settings(**SETTINGS)
+@given(
     shape=st.sampled_from([(8,), (16, 4), (3, 5, 7)]),
     scale=st.floats(1e-3, 1e3),
     seed=st.integers(0, 2**31 - 1),

@@ -473,6 +473,71 @@ def test_resume_across_table_layout_change(tmp_path):
     """))
 
 
+def test_resume_across_sharded_build_change(tmp_path):
+    """sharded_build is a pure-layout key: it regenerates the exact same
+    tables from the counter-based rules a host build draws, so it never
+    enters the resume-config hash, and a mid-run checkpoint taken under a
+    host-built engine resumes bitwise under a sharded-built one (and the
+    reverse) on a distributed event/routed engine."""
+    cfg_a = EngineConfig(neuron_model="lif", delivery_backend="event",
+                         s_max_floor=4)
+    cfg_b = EngineConfig(neuron_model="lif", delivery_backend="event",
+                         s_max_floor=4, sharded_build=True)
+    spec = mam_benchmark_spec(n_areas=2, n_per_area=32, k_intra=4, k_inter=4)
+    net = build_network(spec, seed=12, outgoing=True)
+    h_a, pay_a = schedule_lib.resume_config_hash(cfg_a, net)
+    h_b, pay_b = schedule_lib.resume_config_hash(cfg_b, net)
+    assert h_a == h_b  # layout key, never hashed ...
+    assert pay_a["sharded_build"] != pay_b["sharded_build"]  # ... but logged
+
+    print(_run(f"""
+        import numpy as np, jax
+        from repro.core import schedule as schedule_lib
+        from repro.core.areas import mam_benchmark_spec
+        from repro.core.connectivity import build_network
+        from repro.core.dist_engine import make_dist_engine
+        from repro.core.engine import EngineConfig
+
+        spec = mam_benchmark_spec(n_areas=4, n_per_area=32, k_intra=4,
+                                  k_inter=4, rate_hz=30.0)
+        net = build_network(spec, seed=12, size_multiple=8, outgoing=True)
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+
+        def engine(sharded_build):
+            cfg = EngineConfig(
+                neuron_model="ignore_and_fire", delivery_backend="event",
+                exchange="routed", s_max_floor=4,
+                sharded_build=sharded_build)
+            return make_dist_engine(None if sharded_build else net,
+                                    spec, mesh, cfg, build_seed=12)
+
+        for save_sharded in (False, True):
+            tag = f"sharded_build={{save_sharded}}->{{not save_sharded}}"
+            d = r"{tmp_path}/" + tag
+            saver = engine(save_sharded)
+            ref = schedule_lib.run_windows(saver, saver.init(), 6)
+            ck = schedule_lib.SimCheckpointer(d, saver, net, every=0,
+                                              n_groups=4)
+            st = saver.init()
+            for _ in range(3):
+                st, _blk = saver.window(st)
+            ck.save(st)
+            ck.close()
+            resumer = engine(not save_sharded)   # the OTHER build path
+            st, info = schedule_lib.restore_sim(d, resumer, net, n_groups=4)
+            assert info["step"] == 3, tag
+            res = schedule_lib.run_windows(resumer, st, 3)
+            assert np.array_equal(res.spikes_per_window,
+                                  ref.spikes_per_window[3:]), tag
+            assert np.array_equal(np.asarray(res.state.ring),
+                                  np.asarray(ref.state.ring)), tag
+            assert np.array_equal(np.asarray(res.state.spike_count),
+                                  np.asarray(ref.state.spike_count)), tag
+            print("OK", tag)
+        print("SHARDED-BUILD RESUME DONE")
+    """))
+
+
 def test_sigterm_checkpoints_at_window_boundary(tmp_path):
     """Satellite contract: a real SIGTERM delivered mid-run lands a graceful
     grace checkpoint at the next window boundary (exit 0, resume hint), and
