@@ -163,14 +163,15 @@ def measured_engine_walltime() -> Iterator[Row]:
 
     from repro.core.areas import mam_benchmark_spec
     from repro.core.connectivity import build_network
-    from repro.core.engine import EngineConfig, make_engine
+    from repro.core.engine import EngineConfig
+    from repro.core.factory import make_simulation
 
     spec = mam_benchmark_spec(n_areas=8, n_per_area=128, k_intra=32, k_inter=32)
     net = build_network(spec, seed=12)
     for sched in ("conventional", "structure_aware"):
-        eng = make_engine(net, spec, EngineConfig(
+        eng = make_simulation(spec, EngineConfig(
             neuron_model="ignore_and_fire", schedule=sched,
-            delivery_backend="scatter"))
+            delivery_backend="scatter"), net=net)
         st = eng.init()
         st, _ = eng.run(st, 5)  # warm up + compile
         jax.block_until_ready(st.ring)

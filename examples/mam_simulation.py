@@ -15,7 +15,7 @@ import time
 import jax
 import numpy as np
 
-from repro.core import EngineConfig, build_network, make_engine, mam_spec
+from repro.core import EngineConfig, build_network, make_simulation, mam_spec
 from repro.core.areas import MAM_AREA_NAMES
 
 
@@ -36,9 +36,9 @@ def main() -> None:
     ghost = float((~np.asarray(net.alive)).mean())
     print(f"ghost-neuron padding (heterogeneous areas -> N_max): {ghost:.1%}")
 
-    eng = make_engine(net, spec, EngineConfig(
+    eng = make_simulation(spec, EngineConfig(
         neuron_model="lif", schedule=args.schedule,
-        delivery_backend="scatter"))
+        delivery_backend="scatter"), net=net)
     st = eng.init()
     n_windows = spec.steps_for(args.t_ms) // spec.delay_ratio
     st, _ = eng.window(st)

@@ -13,7 +13,7 @@ import jax
 import numpy as np
 
 from repro.core import (
-    EngineConfig, build_network, make_engine, mam_benchmark_spec,
+    EngineConfig, build_network, make_simulation, mam_benchmark_spec,
 )
 
 
@@ -25,8 +25,8 @@ def main() -> None:
     net = build_network(spec, seed=12)
 
     engines = {
-        sched: make_engine(net, spec, EngineConfig(
-            neuron_model="lif", schedule=sched, delivery_backend="scatter"))
+        sched: make_simulation(spec, EngineConfig(
+            neuron_model="lif", schedule=sched, delivery_backend="scatter"), net=net)
         for sched in ("conventional", "structure_aware")
     }
     states = {k: e.init() for k, e in engines.items()}

@@ -1,0 +1,68 @@
+"""Structure-aware brain-scale SNN simulation in JAX -- public surface.
+
+The stable API, re-exported from the subpackages:
+
+* :func:`make_simulation` -- the one engine constructor (single-host or
+  distributed, dispatching on ``mesh``); :class:`EngineConfig` configures
+  it and :class:`ConfigError` reports every broken config rule at once.
+* :func:`run_windows` / :class:`SimCheckpointer` -- the windowed run loop
+  with checkpoint/resume and the serving layer's per-block streaming hook.
+* ``SimServer`` / ``serve_simulation`` (:mod:`repro.launch.serve`) -- the
+  batched multi-tenant serving layer; loaded lazily so ``import repro``
+  stays light.
+
+Everything else (``repro.core.*``, ``repro.launch.*``, ...) remains
+importable but is not part of the stability contract; the legacy
+``make_engine`` / ``make_dist_engine`` constructors are deprecated shims.
+"""
+
+from __future__ import annotations
+
+from repro.core import (
+    AreaSpec,
+    ConfigError,
+    ConfigViolation,
+    Engine,
+    EngineConfig,
+    MultiAreaSpec,
+    Network,
+    SimCheckpointer,
+    SimState,
+    build_network,
+    make_simulation,
+    mam_benchmark_spec,
+    mam_spec,
+    run_windows,
+)
+
+__all__ = [
+    "AreaSpec",
+    "ConfigError",
+    "ConfigViolation",
+    "Engine",
+    "EngineConfig",
+    "MultiAreaSpec",
+    "Network",
+    "SimCheckpointer",
+    "SimState",
+    "build_network",
+    "make_simulation",
+    "mam_benchmark_spec",
+    "mam_spec",
+    "run_windows",
+    "SimServer",
+    "TrialRequest",
+    "serve_simulation",
+]
+
+_LAZY = {"SimServer", "TrialRequest", "serve_simulation"}
+
+
+def __getattr__(name: str):
+    # The serving layer pulls in threading/signal machinery; load it only
+    # when asked for so `import repro` stays a core-only import.
+    if name in _LAZY:
+        from repro.launch import serve as _serve
+
+        return getattr(_serve, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

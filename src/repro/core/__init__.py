@@ -6,11 +6,27 @@ from repro.core.areas import (
     mam_benchmark_spec,
     mam_spec,
     ring_area_adjacency,
+    tile_spec,
 )
-from repro.core.connectivity import Network, build_network, shard_inter_tables
+from repro.core.connectivity import (
+    Network,
+    build_network,
+    shard_inter_tables,
+    tile_gids,
+    tile_network,
+)
 from repro.core.delivery import BACKENDS as DELIVERY_BACKENDS
 from repro.core.exchange import EXCHANGES
-from repro.core.engine import Engine, EngineConfig, SimState, make_engine
+from repro.core.engine import (
+    ConfigError,
+    ConfigViolation,
+    Engine,
+    EngineConfig,
+    SimState,
+    make_engine,
+)
+from repro.core.factory import make_simulation
+from repro.core.schedule import SimCheckpointer, run_windows
 from repro.core.dist_engine import (
     make_dist_engine,
     network_pspecs,
@@ -31,14 +47,22 @@ __all__ = [
     "mam_benchmark_spec",
     "mam_spec",
     "ring_area_adjacency",
+    "tile_spec",
     "Network",
     "build_network",
     "shard_inter_tables",
+    "tile_gids",
+    "tile_network",
     "DELIVERY_BACKENDS",
     "EXCHANGES",
+    "ConfigError",
+    "ConfigViolation",
     "Engine",
     "EngineConfig",
     "SimState",
+    "SimCheckpointer",
+    "run_windows",
+    "make_simulation",
     "make_engine",
     "make_dist_engine",
     "network_pspecs",

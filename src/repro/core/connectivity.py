@@ -39,10 +39,14 @@ __all__ = [
     "draw_pathway_rows",
     "ShardedBuildPlan",
     "sharded_build_plan",
+    "cached_sharded_build_plan",
+    "plan_cache_key",
     "build_shard_tables",
     "build_group_intra_tables",
     "build_lane_intra_tables",
     "construction_cost_model",
+    "tile_network",
+    "tile_gids",
 ]
 
 
@@ -1102,6 +1106,136 @@ def sharded_build_plan(
     )
 
 
+# ---------------------------------------------------------------------------
+# Plan de-duplication. The planning pass is deterministic in
+# (spec, seed, shard layout) but costs a full streaming sweep over every
+# synapse draw -- and in a multi-process run each process used to repeat it
+# identically. The keyed cache below computes it ONCE (process 0, or
+# whichever process first takes the key) and shares it: in-memory memo for
+# repeat builds in one process, an atomic JSON file for the other processes
+# (ShardedBuildPlan is counts-only -- ints and a 0/1 adjacency -- so JSON
+# round-trips it exactly).
+# ---------------------------------------------------------------------------
+
+_PLAN_MEMO: "dict[str, ShardedBuildPlan]" = {}
+
+# Seconds a non-computing process waits for the computing one's file.
+_PLAN_CACHE_WAIT_S = 600.0
+
+
+def plan_cache_key(
+    spec: MultiAreaSpec,
+    seed: int,
+    n_shards: int,
+    *,
+    mode: str = "group",
+    subgroup: int = 1,
+    size_multiple: int = 1,
+) -> str:
+    """Content digest keying one planning pass (spec + draw + layout)."""
+    import hashlib
+    import json
+
+    payload = json.dumps(
+        {
+            "spec": dataclasses.asdict(spec),
+            "seed": int(seed),
+            "n_shards": int(n_shards),
+            "mode": mode,
+            "subgroup": int(subgroup),
+            "size_multiple": int(size_multiple),
+        },
+        sort_keys=True,
+        default=repr,
+    )
+    return hashlib.sha256(payload.encode()).hexdigest()[:24]
+
+
+def _plan_to_json(plan: ShardedBuildPlan) -> dict:
+    return dataclasses.asdict(plan)
+
+
+def _plan_from_json(d: dict) -> ShardedBuildPlan:
+    d = dict(d)
+    d["area_adj"] = tuple(tuple(int(v) for v in row) for row in d["area_adj"])
+    return ShardedBuildPlan(**d)
+
+
+def cached_sharded_build_plan(
+    spec: MultiAreaSpec,
+    seed: int,
+    n_shards: int,
+    *,
+    mode: str = "group",
+    subgroup: int = 1,
+    size_multiple: int = 1,
+    cache_dir: str | None = None,
+    process_index: int | None = None,
+    wait_s: float = _PLAN_CACHE_WAIT_S,
+) -> ShardedBuildPlan:
+    """:func:`sharded_build_plan`, computed once per key instead of per call.
+
+    Resolution order: in-memory memo -> ``cache_dir`` JSON file -> compute.
+    ``cache_dir`` defaults to ``$REPRO_PLAN_CACHE``; with it set in a
+    multi-process run, process 0 computes and atomically publishes the
+    plan while every other process polls for the file instead of repeating
+    the sweep (``process_index`` defaults to :func:`jax.process_index`).
+    Without a cache_dir every process computes its own -- correct, just
+    duplicated -- so launchers should set one on shared storage.
+    """
+    import json
+    import os
+    import time
+
+    key = plan_cache_key(
+        spec, seed, n_shards, mode=mode, subgroup=subgroup,
+        size_multiple=size_multiple)
+    if key in _PLAN_MEMO:
+        return _PLAN_MEMO[key]
+
+    if cache_dir is None:
+        cache_dir = os.environ.get("REPRO_PLAN_CACHE") or None
+    path = (os.path.join(cache_dir, f"plan_{key}.json")
+            if cache_dir else None)
+
+    def _read() -> "ShardedBuildPlan | None":
+        if path is None or not os.path.exists(path):
+            return None
+        with open(path) as f:
+            return _plan_from_json(json.load(f))
+
+    plan = _read()
+    if plan is None:
+        if process_index is None:
+            process_index = jax.process_index()
+        multi = jax.process_count() > 1
+        if path is not None and multi and process_index != 0:
+            # Another process owns the compute; wait for its publish.
+            deadline = time.monotonic() + wait_s
+            while plan is None and time.monotonic() < deadline:
+                time.sleep(0.2)
+                plan = _read()
+            if plan is None:
+                raise TimeoutError(
+                    f"process {process_index} waited {wait_s:.0f}s for "
+                    f"{path} (is process 0 running with the same "
+                    "REPRO_PLAN_CACHE?)")
+        else:
+            plan = sharded_build_plan(
+                spec, seed, n_shards, mode=mode, subgroup=subgroup,
+                size_multiple=size_multiple)
+            if path is not None:
+                # Atomic publish: readers only ever see a complete file.
+                os.makedirs(cache_dir, exist_ok=True)
+                tmp = f"{path}.tmp.{os.getpid()}"
+                with open(tmp, "w") as f:
+                    json.dump(_plan_to_json(plan), f)
+                os.replace(tmp, path)
+
+    _PLAN_MEMO[key] = plan
+    return plan
+
+
 def _padk_to(x: np.ndarray, k: int, fill) -> np.ndarray:
     if x.shape[1] > k:
         raise AssertionError(
@@ -1273,3 +1407,110 @@ def construction_cost_model(
         host_inbound_slice_bytes=int(inbound_slices),
         reduction=float(host_peak) / float(max(shard_peak, 1)),
     )
+
+
+def tile_gids(n_areas: int, n_pad: int, copies: int) -> jax.Array:
+    """The folded batch's gid table: the single-trial ids, tiled per copy.
+
+    ``[copies * n_areas, n_pad]`` where every copy repeats
+    ``arange(n_areas * n_pad)``. Fed to the engines' ``gids`` override so
+    each block of a :func:`tile_network` super-network draws the
+    single-trial counter noise stream bit-for-bit -- the per-*trial*
+    distinction comes from the per-trial ``seed`` SimState leaf, not the
+    gid table.
+    """
+    one = jnp.arange(n_areas * n_pad, dtype=jnp.int32).reshape(n_areas, n_pad)
+    return jnp.tile(one, (copies, 1))
+
+
+def tile_network(net: Network, copies: int) -> Network:
+    """``copies`` disjoint replicas of ``net`` as one block-diagonal network.
+
+    The serving layer's folded trial batching: the area axis is tiled
+    ``B = copies`` times (``[A, n_pad, ...]`` -> ``[B * A, n_pad, ...]``)
+    and every *global* neuron id is offset by ``b * A * n_pad`` in copy
+    ``b``, so no synapse crosses a copy boundary. Within-area indices
+    (``src_intra``, ``tgt_intra``) are copy-local already and tile
+    unchanged. Each block then reproduces the single-trial trajectory
+    bit-for-bit: delivery weights live on the 1/256 grid (accumulation is
+    associative-exact) and the per-copy scatter order is the single-trial
+    scatter order.
+
+    Sentinel conventions, load-bearing for the id offsets:
+
+    * outgoing ``tgt_inter`` pads with ``-1`` / weight 0 -- offsets apply
+      only to non-negative entries (a shifted sentinel would become a
+      *valid* id in another copy);
+    * incoming ``src_inter`` has no sentinels (ghost rows carry valid
+      draws nullified by the alive mask / zero weights) -- offsets apply
+      unconditionally.
+
+    Sharded inbound tables don't tile (their leading axis is a device
+    placement, not a network axis): tile the host-built network first,
+    then re-cut with :func:`shard_inter_tables` if needed.
+    """
+    if copies < 1:
+        raise ValueError(f"copies must be >= 1, got {copies}")
+    if copies == 1:
+        return net
+    if net.tgt_inter_in is not None:
+        raise ValueError(
+            "tile_network needs the unsharded network (sharded inbound "
+            "inter tables slice a device layout, not a network axis); "
+            "tile first, then shard_inter_tables")
+    A, n_pad = net.alive.shape
+    B = copies
+    block = A * n_pad
+    if B * block > jnp.iinfo(jnp.int32).max:
+        raise ValueError(
+            f"{B} copies x {block} padded neurons overflows the int32 "
+            "global-id space")
+
+    def rep(x):
+        return jnp.tile(x, (B,) + (1,) * (x.ndim - 1))
+
+    # Per-row copy offset, broadcast against [B * A, n_pad, K] tables.
+    offs = jnp.repeat(
+        jnp.arange(B, dtype=jnp.int32) * jnp.int32(block), A
+    )[:, None, None]
+
+    def rep_global(x, sentinel: bool):
+        t = rep(x)
+        if sentinel:
+            return jnp.where(t < 0, t, t + offs)
+        return t + offs
+
+    arrays = dict(
+        alive=rep(net.alive),
+        rate_hz=rep(net.rate_hz),
+        src_intra=rep(net.src_intra),
+        w_intra=rep(net.w_intra),
+        delay_intra=rep(net.delay_intra),
+        src_inter=(
+            rep_global(net.src_inter, sentinel=False)
+            if net.src_inter.size else rep(net.src_inter)
+        ),
+        w_inter=rep(net.w_inter),
+        delay_inter=rep(net.delay_inter),
+    )
+    if net.tgt_intra is not None:
+        arrays.update(
+            tgt_intra=rep(net.tgt_intra),
+            wout_intra=rep(net.wout_intra),
+            dout_intra=rep(net.dout_intra),
+        )
+    if net.tgt_inter is not None:
+        arrays.update(
+            tgt_inter=rep_global(net.tgt_inter, sentinel=True),
+            wout_inter=rep(net.wout_inter),
+            dout_inter=rep(net.dout_inter),
+        )
+    area_adj = None
+    if net.area_adj is not None:
+        base = np.asarray(net.area_adj, dtype=bool)
+        big = np.zeros((B * A, B * A), dtype=bool)
+        for b in range(B):
+            big[b * A:(b + 1) * A, b * A:(b + 1) * A] = base
+        area_adj = tuple(tuple(int(x) for x in row) for row in big)
+    return dataclasses.replace(
+        net, n_areas=B * A, area_adj=area_adj, **arrays)

@@ -99,7 +99,7 @@ def expected_area_spikes(net: Network) -> float:
 
 
 def event_bounds(
-    net: Network, *, headroom: float, floor: int
+    net: Network, *, headroom: float, floor: int, burst_factor: int = 1
 ) -> tuple[int, int]:
     """Static event-buffer bounds ``(s_max_area, s_max_all)``.
 
@@ -109,11 +109,21 @@ def event_bounds(
     :func:`expected_area_spikes`. The event path's cost is s_max-bound, so
     ``floor`` is the knob that trades burst tolerance against wasted
     scatter width.
+
+    ``burst_factor`` multiplies only the whole-network bound's constant
+    burst slack (the ``4 x floor`` term). The proportional part of
+    ``s_max_all`` scales with the area count, but the slack does not -- so
+    a network holding ``B`` independent copies (``launch.serve``'s folded
+    trial batch) would run strictly tighter per-copy headroom than its
+    ``B`` sequential references. Passing ``burst_factor=B`` restores
+    parity without touching the per-area bound (widening that instead
+    costs ~``B x`` scatter width in *every* area).
     """
     a = net.alive.shape[0]
     exp_area = expected_area_spikes(net)
     s_max_area = int(headroom * exp_area) + max(floor, 1)
-    s_max_all = int(headroom * exp_area * a) + 4 * max(floor, 1)
+    s_max_all = (int(headroom * exp_area * a)
+                 + 4 * max(floor, 1) * max(int(burst_factor), 1))
     return s_max_area, s_max_all
 
 

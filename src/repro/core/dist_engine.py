@@ -152,8 +152,19 @@ def network_pspecs(mesh: Mesh, schedule: str, like: Network | None = None) -> Ne
     )
 
 
-def state_pspecs(mesh: Mesh, schedule: str, neuron_model: str) -> SimState:
-    """A SimState-shaped pytree of PartitionSpecs."""
+def state_pspecs(
+    mesh: Mesh,
+    schedule: str,
+    neuron_model: str,
+    trial_leaves: bool = False,
+) -> SimState:
+    """A SimState-shaped pytree of PartitionSpecs.
+
+    ``trial_leaves=True`` adds specs for the optional per-trial ``seed``/
+    ``stim`` drive leaves (same ``[A, n_pad]`` placement as the neuron
+    state); the default matches the classic leafless state exactly, so
+    every existing state tree, checkpoint and shard_map spec is unchanged.
+    """
     if schedule == STRUCTURE_AWARE:
         area = P(_area_axes(mesh), _subgroup_axis(mesh))
         ring = P(_area_axes(mesh), _subgroup_axis(mesh), None)
@@ -165,7 +176,9 @@ def state_pspecs(mesh: Mesh, schedule: str, neuron_model: str) -> SimState:
     else:
         nstate = neuron_lib.IafState(countdown=area)
     return SimState(neuron=nstate, ring=ring, t=P(), spike_count=area,
-                    overflow=P(), shipped_bytes=P())
+                    overflow=P(), shipped_bytes=P(),
+                    seed=area if trial_leaves else None,
+                    stim=area if trial_leaves else None)
 
 
 def shard_network(net: Network, mesh: Mesh, schedule: str) -> Network:
@@ -275,7 +288,10 @@ def build_network_sharded(
     sub = gsz if (cfg.subgroup_inter_tables and gsz > 1) else 1
     K_i, K_e = spec.k_intra, spec.k_inter
 
-    plan = connectivity_lib.sharded_build_plan(
+    # De-duplicated planning: the memo/keyed-file cache computes the
+    # streaming sweep once per (spec, seed, layout) -- in multi-process
+    # runs process 0 publishes and the rest read ($REPRO_PLAN_CACHE).
+    plan = connectivity_lib.cached_sharded_build_plan(
         spec, seed, n_groups, mode="group", subgroup=sub,
         size_multiple=size_multiple)
 
@@ -419,21 +435,29 @@ def build_network_sharded(
     )
 
 
-def make_dist_engine(
+def _make_dist_engine(
     net: Network | None,
     spec: MultiAreaSpec,
     mesh: Mesh,
     config: EngineConfig = EngineConfig(),
     *,
     build_seed: int = 12,
+    gids: jax.Array | None = None,
+    trial_leaves: bool = False,
 ) -> Engine:
     """Build the distributed engine. ``net`` may be host-resident; callers on
     real hardware should pass ``shard_network(net, mesh, schedule)``.
 
     ``net=None`` requires ``config.sharded_build`` and constructs the
     connectivity host-free on this mesh (:func:`build_network_sharded`,
-    seeded by ``build_seed``) -- no global tensors ever exist."""
+    seeded by ``build_seed``) -- no global tensors ever exist.
+
+    ``gids`` overrides the global-id table (see the single-host engine).
+    ``trial_leaves=True`` sizes the shard_map state specs for the optional
+    per-trial ``seed``/``stim`` drive leaves; ``init()`` then always
+    materialises them (defaulting to the engine-wide seed / unit stimulus)."""
     cfg = config
+    cfg.check(distributed=True)
     backend = cfg.backend
     if net is None:
         if not cfg.sharded_build:
@@ -502,11 +526,6 @@ def make_dist_engine(
           and cfg.shard_inter_tables and cfg.subgroup_inter_tables):
         net = connectivity_lib.slice_intra_tables(
             net, mesh.shape[_subgroup_axis(mesh)])
-    if cfg.superstep_kernel:
-        raise ValueError(
-            "superstep_kernel is single-host only; the distributed engine "
-            "fuses the window at the jnp level (use_superstep)"
-        )
     D = net.delay_ratio
     A, n_pad = net.alive.shape
     R = net.ring_len
@@ -539,7 +558,8 @@ def make_dist_engine(
 
     # ---------------- assemble jitted entry points ---------------------------
 
-    st_specs = state_pspecs(mesh, cfg.schedule, cfg.neuron_model)
+    st_specs = state_pspecs(
+        mesh, cfg.schedule, cfg.neuron_model, trial_leaves=trial_leaves)
     nt_specs = network_pspecs(mesh, cfg.schedule, like=net)
     gid_spec = (
         P(area_axes, subgroup)
@@ -559,7 +579,10 @@ def make_dist_engine(
         check_vma=False,
     )
 
-    gids_global = jnp.arange(A * n_pad, dtype=jnp.int32).reshape(A, n_pad)
+    gids_global = (
+        jnp.arange(A * n_pad, dtype=jnp.int32).reshape(A, n_pad)
+        if gids is None else gids
+    )
 
     overlap_jit = drain_jit = init_inflight = None
     if cfg.overlap_exchange:
@@ -629,13 +652,36 @@ def make_dist_engine(
         plus the re-cut inter tables above)."""
         return jax.device_put(state, state_shardings)
 
-    def init() -> SimState:
+    def init(seed=None, stim=None) -> SimState:
+        if seed is not None or stim is not None:
+            if not trial_leaves:
+                raise ValueError(
+                    "per-trial seed/stim need make_simulation(..., "
+                    "trial_leaves=True) -- the shard_map state specs are "
+                    "sized at engine build"
+                )
+            if cfg.neuron_model != "lif":
+                raise ValueError(
+                    "per-trial seed/stim drive the LIF Poisson input; "
+                    "ignore_and_fire has no seed or input dependence"
+                )
         if cfg.neuron_model == "lif":
             nstate = neuron_lib.lif_init((A, n_pad))
         else:
             nstate = neuron_lib.ignore_and_fire_init(
                 net.alive, net.rate_hz, net.dt_ms, gids_global
             )
+        if trial_leaves:
+            # The spec'd leaves always exist; absent overrides fall back to
+            # the engine-wide seed / unit stimulus (bit-identical drive).
+            seed_leaf = jnp.broadcast_to(
+                jnp.asarray(cfg.seed if seed is None else seed, jnp.uint32),
+                (A, n_pad))
+            stim_leaf = jnp.broadcast_to(
+                jnp.asarray(1.0 if stim is None else stim, jnp.float32),
+                (A, n_pad))
+        else:
+            seed_leaf = stim_leaf = None
         state = SimState(
             neuron=nstate,
             ring=jnp.zeros((A, n_pad, R), jnp.float32),
@@ -643,6 +689,8 @@ def make_dist_engine(
             spike_count=jnp.zeros((A, n_pad), jnp.int32),
             overflow=jnp.int32(0),
             shipped_bytes=jnp.float32(0),
+            seed=seed_leaf,
+            stim=stim_leaf,
         )
         return shard_state(state)
 
@@ -673,3 +721,33 @@ def make_dist_engine(
                   shard_state=shard_state,
                   window_overlap=overlap_jit, drain=drain_jit,
                   init_inflight=init_inflight)
+
+
+def make_dist_engine(
+    net: Network | None,
+    spec: MultiAreaSpec,
+    mesh: Mesh,
+    config: EngineConfig = EngineConfig(),
+    *,
+    build_seed: int = 12,
+    gids: jax.Array | None = None,
+    trial_leaves: bool = False,
+) -> Engine:
+    """Deprecated alias for :func:`repro.core.make_simulation`.
+
+    Same engine, same trajectories -- only the entry point moved: the
+    unified factory dispatches to this distributed assembly when a mesh is
+    given.
+    """
+    import warnings
+
+    warnings.warn(
+        "make_dist_engine is deprecated; use repro.core.make_simulation"
+        "(spec, config, net=net, mesh=mesh) -- it builds the identical "
+        "distributed engine when a mesh is given",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return _make_dist_engine(
+        net, spec, mesh, config,
+        build_seed=build_seed, gids=gids, trial_leaves=trial_leaves)

@@ -40,6 +40,8 @@ from repro.core import schedule as schedule_lib
 from repro.core.schedule import CONVENTIONAL, STRUCTURE_AWARE, SimState
 
 __all__ = [
+    "ConfigError",
+    "ConfigViolation",
     "EngineConfig",
     "SimState",
     "Engine",
@@ -47,6 +49,38 @@ __all__ = [
     "CONVENTIONAL",
     "STRUCTURE_AWARE",
 ]
+
+
+@dataclasses.dataclass(frozen=True)
+class ConfigViolation:
+    """One broken EngineConfig rule: which field, what's wrong, how to fix."""
+
+    field: str
+    problem: str
+    remedy: str
+
+    def __str__(self) -> str:
+        return f"{self.field}: {self.problem} [remedy: {self.remedy}]"
+
+
+class ConfigError(ValueError):
+    """All of a config's rule violations in one structured error.
+
+    ``EngineConfig`` used to refuse invalid combinations one raise at a
+    time, scattered between ``__post_init__``, ``make_engine`` and
+    ``make_dist_engine`` -- fixing a config meant replaying the constructor
+    until it stopped throwing. ``EngineConfig.validate()`` now evaluates
+    *every* rule and this error carries the full list (``.violations``),
+    each with a remedy.
+    """
+
+    def __init__(self, violations):
+        self.violations: tuple[ConfigViolation, ...] = tuple(violations)
+        n = len(self.violations)
+        lines = "\n".join(f"  - {v}" for v in self.violations)
+        super().__init__(
+            f"invalid EngineConfig ({n} rule"
+            f"{'s' if n != 1 else ''} violated):\n{lines}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,6 +133,12 @@ class EngineConfig:
     # overruns are counted in SimState.overflow.
     s_max_headroom: float = 8.0
     s_max_floor: int = 16
+    # Multiplies only the whole-network event bound's constant burst slack
+    # (delivery.event_bounds' `4 x floor` term), leaving the per-area bound
+    # alone. launch.serve sets this to its fold factor B so a B-copy folded
+    # batch keeps the same per-copy burst headroom as B sequential runs --
+    # scaling s_max_floor instead would widen every per-area packet B x.
+    s_max_burst: int = 1
     # Adaptive two-phase exchange (repro.core.exchange): phase 1 moves a
     # tiny int32 count collective, phase 2 ships packets sized by the
     # smallest power-of-two bucket (>= s_max_floor, pre-compiled ladder) that
@@ -177,66 +217,134 @@ class EngineConfig:
     faults: faults_lib.FaultConfig | None = None
 
     def __post_init__(self) -> None:
+        self.check()
+
+    def validate(
+        self, *, distributed: bool | None = None
+    ) -> "list[ConfigViolation]":
+        """Evaluate *every* config rule and return the full violation list.
+
+        ``distributed=None`` checks the construction-time rules only (the
+        set ``__post_init__`` enforces). ``distributed=False`` adds the
+        single-host engine's context rules; ``distributed=True`` the
+        distributed engine's. The factories pass the dispatch target so a
+        bad config surfaces its complete rule list in one structured
+        :class:`ConfigError` instead of one raise per constructor replay.
+        """
+        v: list[ConfigViolation] = []
         if self.neuron_model not in ("lif", "ignore_and_fire"):
-            raise ValueError(f"unknown neuron model {self.neuron_model!r}")
+            v.append(ConfigViolation(
+                "neuron_model",
+                f"unknown neuron model {self.neuron_model!r}",
+                "use 'lif' or 'ignore_and_fire'"))
         if self.schedule not in (CONVENTIONAL, STRUCTURE_AWARE):
-            raise ValueError(f"unknown schedule {self.schedule!r}")
+            v.append(ConfigViolation(
+                "schedule",
+                f"unknown schedule {self.schedule!r}",
+                f"use {CONVENTIONAL!r} or {STRUCTURE_AWARE!r}"))
         if self.delivery_backend not in ("",) + delivery_lib.BACKENDS:
-            raise ValueError(
+            v.append(ConfigViolation(
+                "delivery_backend",
                 f"unknown delivery_backend {self.delivery_backend!r} "
-                f"(expected one of {delivery_lib.BACKENDS})"
-            )
+                f"(expected one of {delivery_lib.BACKENDS})",
+                "pick a listed backend, or '' for the default"))
         if self.exchange not in ("",) + exchange_lib.EXCHANGES:
-            raise ValueError(
+            v.append(ConfigViolation(
+                "exchange",
                 f"unknown exchange {self.exchange!r} "
-                f"(expected one of {exchange_lib.EXCHANGES})"
-            )
+                f"(expected one of {exchange_lib.EXCHANGES})",
+                "pick a listed exchange, or '' for the default"))
+        if self.s_max_burst < 1:
+            v.append(ConfigViolation(
+                "s_max_burst",
+                f"s_max_burst={self.s_max_burst} would shrink the "
+                "whole-network event bound's burst slack below its floor",
+                "use an integer >= 1 (B for a B-trial folded batch)"))
         if self.exchange == "routed" and self.schedule != STRUCTURE_AWARE:
-            raise ValueError(
+            v.append(ConfigViolation(
+                "exchange",
                 "exchange='routed' routes the structure-aware window's "
-                "lumped global pathway; the conventional schedule has none"
-            )
+                "lumped global pathway; the conventional schedule has none",
+                "use schedule='structure_aware', or exchange='dense'"))
         if self.superstep is True and self.schedule != STRUCTURE_AWARE:
-            raise ValueError(
+            v.append(ConfigViolation(
+                "superstep",
                 "superstep=True requires the structure-aware schedule; "
                 "the conventional schedule exchanges every cycle and has "
-                "no window to fuse"
-            )
+                "no window to fuse",
+                "use schedule='structure_aware', or superstep=None"))
         if self.superstep_kernel:
             if self.schedule != STRUCTURE_AWARE:
-                raise ValueError(
+                v.append(ConfigViolation(
+                    "superstep_kernel",
                     "superstep_kernel fuses the structure-aware window; "
-                    "the conventional schedule has no window to fuse"
-                )
+                    "the conventional schedule has no window to fuse",
+                    "use schedule='structure_aware'"))
             if self.superstep is False:
-                raise ValueError(
-                    "superstep_kernel=True conflicts with superstep=False"
-                )
+                v.append(ConfigViolation(
+                    "superstep_kernel",
+                    "superstep_kernel=True conflicts with superstep=False",
+                    "drop one of the two flags"))
         if self.overlap_exchange and self.schedule != STRUCTURE_AWARE:
-            raise ValueError(
+            v.append(ConfigViolation(
+                "overlap_exchange",
                 "overlap_exchange double-buffers the structure-aware "
                 "window-end exchange; the conventional schedule has no "
-                "lumped exchange to overlap"
-            )
+                "lumped exchange to overlap",
+                "use schedule='structure_aware', or drop overlap_exchange"))
         if self.sharded_build:
             if self.backend != "event":
-                raise ValueError(
+                v.append(ConfigViolation(
+                    "sharded_build",
                     "sharded_build generates the event path's inbound/"
                     "outgoing tables; dense backends read the global "
-                    "incoming tensors it never materialises"
-                )
+                    "incoming tensors it never materialises",
+                    "use delivery_backend='event'"))
             if not self.shard_inter_tables:
-                raise ValueError(
+                v.append(ConfigViolation(
+                    "sharded_build",
                     "sharded_build emits per-shard inbound inter slices; "
                     "shard_inter_tables=False asks for the replicated "
-                    "layout it exists to avoid"
-                )
+                    "layout it exists to avoid",
+                    "keep shard_inter_tables=True"))
             if self.schedule != STRUCTURE_AWARE:
-                raise ValueError(
+                v.append(ConfigViolation(
+                    "sharded_build",
                     "sharded_build targets the structure-aware placement "
                     "(area groups x subgroup lanes); the conventional "
-                    "schedule slices a host-built network"
-                )
+                    "schedule slices a host-built network",
+                    "use schedule='structure_aware'"))
+        if distributed is False:
+            if self.exchange not in ("", "local"):
+                v.append(ConfigViolation(
+                    "exchange",
+                    f"exchange={self.exchange!r} needs a device mesh; the "
+                    "single-host engine is exchange-free "
+                    "(use make_dist_engine)",
+                    "pass mesh=... to make_simulation, or use exchange=''"))
+            if self.sharded_build:
+                v.append(ConfigViolation(
+                    "sharded_build",
+                    "sharded_build is a distributed construction mode; the "
+                    "single-host engine holds the whole network anyway "
+                    "(use make_dist_engine)",
+                    "pass mesh=... to make_simulation"))
+        if distributed is True:
+            if self.superstep_kernel:
+                v.append(ConfigViolation(
+                    "superstep_kernel",
+                    "superstep_kernel is single-host only; the distributed "
+                    "engine fuses the window at the jnp level "
+                    "(use_superstep)",
+                    "drop superstep_kernel (the jnp superstep fusion is "
+                    "the distributed default)"))
+        return v
+
+    def check(self, *, distributed: bool | None = None) -> None:
+        """Raise :class:`ConfigError` listing every violated rule, if any."""
+        violations = self.validate(distributed=distributed)
+        if violations:
+            raise ConfigError(violations)
 
     @property
     def backend(self) -> str:
@@ -394,37 +502,36 @@ def make_fused_superstep(
     return run_iaf
 
 
-def make_engine(
+def _make_engine(
     net: Network,
     spec: MultiAreaSpec,
     config: EngineConfig = EngineConfig(),
+    *,
+    gids: jax.Array | None = None,
 ) -> Engine:
     """Build a jitted reference engine for ``net``.
 
     The returned callables close over the (host-resident) connectivity; the
     distributed engine in ``dist_engine.py`` shards the same window body
     (:mod:`repro.core.schedule`) over a device mesh.
+
+    ``gids`` overrides the global-id table fed to the counter-based drive
+    and the iaf phase rule (default ``arange(A * n_pad)``). The serving
+    layer's folded trial batches pass the single-trial ids tiled per copy so
+    every copy of the block-diagonal super-network draws the single-trial
+    noise stream bit-for-bit.
     """
     D = net.delay_ratio
     A, n_pad = net.alive.shape
     cfg = config
-    if cfg.exchange not in ("", "local"):
-        raise ValueError(
-            f"exchange={cfg.exchange!r} needs a device mesh; the single-host "
-            "engine is exchange-free (use make_dist_engine)"
-        )
-    if cfg.sharded_build:
-        raise ValueError(
-            "sharded_build is a distributed construction mode; the "
-            "single-host engine holds the whole network anyway "
-            "(use make_dist_engine)"
-        )
+    cfg.check(distributed=False)
     backend = cfg.backend
     if backend == "event" and net.tgt_intra is None:
         raise ValueError("event delivery needs build_network(outgoing=True)")
     lif_params, drive_rate = resolve_params(net, spec, cfg)
     fused_lif = make_fused_lif_update(lif_params) if cfg.fused else None
-    gids = jnp.arange(A * n_pad, dtype=jnp.int32).reshape(A, n_pad)
+    if gids is None:
+        gids = jnp.arange(A * n_pad, dtype=jnp.int32).reshape(A, n_pad)
 
     exchange = exchange_lib.LocalExchange(net, cfg)
     update_fn = schedule_lib.make_update_fn(
@@ -466,7 +573,27 @@ def make_engine(
         def window(state: SimState) -> tuple[SimState, jax.Array]:
             return window_body(state, net, gids)
 
-    def init() -> SimState:
+    def init(seed=None, stim=None) -> SimState:
+        """Fresh state; optional per-neuron drive overrides (serving trials).
+
+        ``seed``/``stim`` become ``[A, n_pad]`` SimState leaves consumed by
+        the drive in place of / on top of ``cfg.seed`` and the network rate
+        (see :class:`repro.core.schedule.SimState`). Scalars broadcast; a
+        broadcast scalar seed is bit-identical to the int-seed path. ``None``
+        (the default) adds no pytree leaves, so existing state trees,
+        checkpoints and shard specs are structurally unchanged.
+        """
+        if seed is not None or stim is not None:
+            if cfg.neuron_model != "lif":
+                raise ValueError(
+                    "per-trial seed/stim drive the LIF Poisson input; "
+                    "ignore_and_fire has no seed or input dependence"
+                )
+            if cfg.superstep_kernel:
+                raise ValueError(
+                    "per-trial seed/stim are not supported under "
+                    "superstep_kernel (the fused kernel bakes cfg.seed in)"
+                )
         if cfg.neuron_model == "lif":
             nstate = neuron_lib.lif_init((A, n_pad))
         else:
@@ -480,6 +607,16 @@ def make_engine(
             spike_count=jnp.zeros((A, n_pad), jnp.int32),
             overflow=jnp.int32(0),
             shipped_bytes=jnp.float32(0),
+            seed=(
+                None if seed is None
+                else jnp.broadcast_to(
+                    jnp.asarray(seed, jnp.uint32), (A, n_pad))
+            ),
+            stim=(
+                None if stim is None
+                else jnp.broadcast_to(
+                    jnp.asarray(stim, jnp.float32), (A, n_pad))
+            ),
         )
 
     if cfg.overlap_exchange:
@@ -513,3 +650,28 @@ def make_engine(
         window_overlap=overlap_jit, drain=drain_jit,
         init_inflight=init_inflight,
     )
+
+
+def make_engine(
+    net: Network,
+    spec: MultiAreaSpec,
+    config: EngineConfig = EngineConfig(),
+    *,
+    gids: jax.Array | None = None,
+) -> Engine:
+    """Deprecated alias for :func:`repro.core.make_simulation`.
+
+    Same engine, same trajectories -- only the entry point moved: the
+    unified factory dispatches to this single-host assembly when no mesh is
+    given.
+    """
+    import warnings
+
+    warnings.warn(
+        "make_engine is deprecated; use repro.core.make_simulation"
+        "(spec, config, net=net) -- it builds the identical single-host "
+        "engine when no mesh is given",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return _make_engine(net, spec, config, gids=gids)

@@ -19,8 +19,9 @@ worst-case -- bytes per window.
 Three implementations:
 
 * :class:`LocalExchange` -- single-host identity: no collectives, delivery
-  goes straight through :mod:`repro.core.delivery`. ``make_engine`` is a thin
-  assembly over the shared core with this exchange.
+  goes straight through :mod:`repro.core.delivery`. The single-host engine
+  (``repro.core.make_simulation`` without a mesh) is a thin assembly over
+  the shared core with this exchange.
 * :class:`DenseMeshExchange` -- the mesh collectives of the original
   distributed engine: bit-packed spike vectors (``comm.gather_*``) for the
   dense backends, compacted id packets over ``all_gather`` for the event
@@ -322,7 +323,8 @@ class LocalExchange(Exchange):
         self.backend = cfg.backend
         self.adaptive = cfg.adaptive_exchange
         self.s_max_area, self.s_max_all = delivery_lib.event_bounds(
-            net, headroom=cfg.s_max_headroom, floor=cfg.s_max_floor)
+            net, headroom=cfg.s_max_headroom, floor=cfg.s_max_floor,
+            burst_factor=cfg.s_max_burst)
         # Adaptive bucket ladders: no wire on a single host, but the event
         # path's packet bound still caps the scatter -- the ladder sizes it
         # to the cycle's true count instead, with the hard population cap

@@ -1,0 +1,77 @@
+"""The unified engine factory: one public constructor, two assemblies.
+
+``make_simulation`` is the single non-deprecated way to build an engine.
+It dispatches on mesh availability -- no mesh means the single-host
+reference assembly (:mod:`repro.core.engine`), a mesh means the
+``shard_map``'d distributed assembly (:mod:`repro.core.dist_engine`) --
+and validates the config against the chosen target in one shot
+(:meth:`EngineConfig.check`), so an invalid config reports *every*
+broken rule with a remedy instead of one raise per constructor replay.
+
+The legacy entry points ``make_engine`` / ``make_dist_engine`` remain as
+thin :class:`DeprecationWarning` shims over the same assemblies; both
+build bit-identical engines to this factory.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+from repro.core.areas import MultiAreaSpec
+from repro.core import connectivity as connectivity_lib
+from repro.core.connectivity import Network
+from repro.core.engine import Engine, EngineConfig, _make_engine
+from repro.core import dist_engine as dist_engine_lib
+
+__all__ = ["make_simulation"]
+
+
+def make_simulation(
+    spec: MultiAreaSpec,
+    config: EngineConfig = EngineConfig(),
+    *,
+    net: Network | None = None,
+    mesh: Mesh | None = None,
+    build_seed: int = 12,
+    gids: jax.Array | None = None,
+    trial_leaves: bool = False,
+) -> Engine:
+    """Build a simulation engine for ``spec``, dispatching on ``mesh``.
+
+    * ``mesh=None``: the single-host reference engine. ``net=None`` builds
+      the connectivity host-side (``build_network``, seeded by
+      ``build_seed``, with outgoing tables exactly when the event backend
+      needs them).
+    * ``mesh=...``: the distributed engine on that mesh. ``net=None``
+      requires ``config.sharded_build`` (host-free construction); a
+      host-resident ``net`` is accepted as before (callers on real
+      hardware should pass ``shard_network(net, mesh, schedule)``).
+
+    ``gids`` overrides the global-id table fed to the counter-based drive
+    and the iaf phase rule -- the serving layer's folded trial batches
+    pass :func:`repro.core.connectivity.tile_gids` so every copy of a
+    tiled super-network draws the single-trial noise stream bit-for-bit.
+    ``trial_leaves`` (distributed only) sizes the shard_map state specs
+    for the optional per-trial ``seed``/``stim`` drive leaves; the
+    single-host engine takes them directly via ``engine.init(seed, stim)``.
+
+    The config is validated against the dispatch target in one shot: a
+    bad config raises :class:`repro.core.engine.ConfigError` carrying the
+    complete violation list, each entry with a remedy.
+    """
+    cfg = config
+    cfg.check(distributed=mesh is not None)
+    if mesh is not None:
+        return dist_engine_lib._make_dist_engine(
+            net, spec, mesh, cfg,
+            build_seed=build_seed, gids=gids, trial_leaves=trial_leaves)
+    if trial_leaves:
+        raise ValueError(
+            "trial_leaves sizes the distributed engine's shard_map state "
+            "specs; the single-host engine takes per-trial seed/stim "
+            "directly via engine.init(seed=..., stim=...)")
+    if net is None:
+        net = connectivity_lib.build_network(
+            spec, seed=build_seed, outgoing=cfg.backend == "event")
+    return _make_engine(net, spec, cfg, gids=gids)

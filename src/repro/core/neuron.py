@@ -102,22 +102,29 @@ def _splitmix32(x: jax.Array) -> jax.Array:
     return x ^ (x >> 15)
 
 
-def counter_uniform(seed: int, t: jax.Array, gids: jax.Array) -> jax.Array:
+def counter_uniform(seed, t: jax.Array, gids: jax.Array) -> jax.Array:
     """Shard-invariant uniform(0,1) as a pure function of (seed, t, gid).
 
     Counter-based: each neuron's draw depends only on its *global* id and the
     absolute step, so any partitioning of the network (round-robin,
     structure-aware, single device, 512 devices) sees bit-identical noise.
+
+    ``seed`` may be a Python int (the classic engine-wide seed) or an array
+    broadcastable against ``gids`` -- the serving layer's per-trial seeds
+    ride through as a per-neuron uint32 leaf, and a broadcast scalar is
+    bit-identical to the int path.
     """
     h = _splitmix32(
-        _splitmix32(_splitmix32(jnp.uint32(seed)) + gids.astype(jnp.uint32))
+        _splitmix32(
+            _splitmix32(jnp.asarray(seed, jnp.uint32)) + gids.astype(jnp.uint32)
+        )
         + jnp.asarray(t, jnp.uint32)
     )
     return h.astype(jnp.float32) * jnp.float32(1.0 / 4294967296.0)
 
 
 def poisson_drive(
-    seed: int,
+    seed,
     t: jax.Array,
     gids: jax.Array,
     rate_hz: jax.Array,

@@ -85,6 +85,19 @@ class SimState:
     # (f32: byte totals overflow int32 long before they lose f32 precision
     # that matters for reporting).
     shipped_bytes: Any = None
+    # Optional per-neuron drive seed ([A, n_pad] uint32) -- the serving
+    # layer's trial axis: a folded batch of trials carries each trial's seed
+    # on its own block of neurons, and the counter-based drive reads it
+    # instead of the engine-wide EngineConfig.seed. None (the default)
+    # contributes no pytree leaf, so every pre-serving state, checkpoint
+    # manifest and shard_map spec tree is structurally unchanged; a
+    # broadcast scalar equal to cfg.seed is bit-identical to None.
+    seed: Any = None
+    # Optional per-neuron stimulus scale ([A, n_pad] f32) multiplying the
+    # external drive rate -- the per-trial stimulus knob of a serving
+    # request. None contributes no leaf; an all-ones array is bit-identical
+    # to None (x * 1.0f is exact).
+    stim: Any = None
 
 
 def make_update_fn(
@@ -96,21 +109,30 @@ def make_update_fn(
 ) -> Callable:
     """The neuron-update closure shared by both engines.
 
-    ``update(neuron_state, i_in, t, net_view, gids) -> (state', spikes)``
-    where ``net_view`` may be the full network (single host) or a shard_map
-    view -- the drive uses the view's ``rate_hz``/``alive`` and the *global*
-    ids in ``gids``, so any sharding sees bit-identical noise. The drive rate
-    is ``rate_hz * (ext_rate_hz / 2.5)`` -- one expression everywhere (the
+    ``update(neuron_state, i_in, t, net_view, gids, seed=None, stim=None) ->
+    (state', spikes)`` where ``net_view`` may be the full network (single
+    host) or a shard_map view -- the drive uses the view's
+    ``rate_hz``/``alive`` and the *global* ids in ``gids``, so any sharding
+    sees bit-identical noise. The drive rate is
+    ``rate_hz * (ext_rate_hz / 2.5)`` -- one expression everywhere (the
     engines previously used two algebraically-equal-but-ULP-different forms;
     the shared core makes the cross-engine bit-equality structural instead
     of coincidental).
+
+    ``seed``/``stim`` are the per-trial drive leaves of ``SimState`` (the
+    serving layer's trial axis): ``seed`` replaces ``cfg.seed`` in the
+    counter-based drive and ``stim`` scales the drive rate. ``None`` (every
+    pre-serving caller) keeps the classic expressions verbatim.
     """
     drive_scale = spec.ext_rate_hz / 2.5
 
-    def update(neuron_state, i_in, t, net, gids):
+    def update(neuron_state, i_in, t, net, gids, seed=None, stim=None):
         if cfg.neuron_model == "lif":
+            rate = net.rate_hz * drive_scale
+            if stim is not None:
+                rate = rate * stim
             drive = neuron_lib.poisson_drive(
-                cfg.seed, t, gids, net.rate_hz * drive_scale, dt_ms,
+                cfg.seed if seed is None else seed, t, gids, rate, dt_ms,
                 spec.w_ext,
             )
             if fused_lif is not None:
@@ -191,10 +213,12 @@ def _make_compute_window(cfg, exchange, update_fn, fused_superstep):
         def cycle_state(st: SimState, inter_now: bool):
             """One deliver -> update -> collocate cycle on full SimState."""
             i_in, ring = ring_buffer.read_and_clear(st.ring, st.t)
-            nstate, spikes = update_fn(st.neuron, i_in, st.t, net, gids)
+            nstate, spikes = update_fn(
+                st.neuron, i_in, st.t, net, gids, seed=st.seed, stim=st.stim)
             ring, over, shipped = exchange.cycle(
                 ring, spikes, st.t, net, gids, inter_now=inter_now)
-            return SimState(
+            return dataclasses.replace(
+                st,
                 neuron=nstate,
                 ring=ring,
                 t=st.t + 1,
@@ -225,7 +249,8 @@ def _make_compute_window(cfg, exchange, update_fn, fused_superstep):
                 cols = []
                 for s in range(D):  # unrolled: s static, slot math vanishes
                     neuron, spikes = update_fn(
-                        neuron, fut[..., s], t0 + s, net, gids)
+                        neuron, fut[..., s], t0 + s, net, gids,
+                        seed=state.seed, stim=state.stim)
                     fut, d_over, d_ship = exchange.cycle(
                         fut, spikes, s, net, gids, inter_now=False)
                     over = over + d_over
@@ -238,7 +263,8 @@ def _make_compute_window(cfg, exchange, update_fn, fused_superstep):
                 def body(carry, s):
                     neuron, fut, over, shipped = carry
                     neuron, spikes = update_fn(
-                        neuron, fut[..., s], t0 + s, net, gids)
+                        neuron, fut[..., s], t0 + s, net, gids,
+                        seed=state.seed, stim=state.stim)
                     fut, d_over, d_ship = exchange.cycle(
                         fut, spikes, s, net, gids, inter_now=False)
                     return (neuron, fut, over + d_over,
@@ -248,7 +274,8 @@ def _make_compute_window(cfg, exchange, update_fn, fused_superstep):
                     body, (neuron, fut, over, shipped),
                     jnp.arange(D, dtype=jnp.int32))
             ring = ring_buffer.merge_window_tail(ring, fut[..., D:], t0 + D)
-            return SimState(
+            return dataclasses.replace(
+                state,
                 neuron=neuron,
                 ring=ring,
                 t=t0 + D,
@@ -340,13 +367,14 @@ def make_overlap_window_fn(
 # checkpoint gathered to host memory is mesh-independent: restoring onto a
 # different group count is gather -> (re-order per the elastic reshard plan,
 # the identity for contiguous plans) -> re-scatter through the new engine's
-# shardings, while make_dist_engine re-cuts the inter receive tables for the
-# new mesh via connectivity.shard_inter_tables.
+# shardings, while the distributed factory (make_simulation with a mesh)
+# re-cuts the inter receive tables for the new mesh via
+# connectivity.shard_inter_tables.
 
 
 # Config fields that are *layout*, not *trajectory*: every value produces
-# bit-identical spike trains (sharded inter tables are re-cut by
-# make_dist_engine for whatever mesh the resume runs on; a drained overlap
+# bit-identical spike trains (sharded inter tables are re-cut by the
+# distributed factory for whatever mesh the resume runs on; a drained overlap
 # pipeline IS the sequential trajectory; a sharded build regenerates the
 # exact same tables from the counter-based rules a host build draws), so
 # checkpoints must stay exchangeable across them. Recorded in the manifest
@@ -601,6 +629,7 @@ def run_windows(
     checkpointer: SimCheckpointer | None = None,
     faults: "faults_lib.FaultConfig | faults_lib.FaultInjector | None" = None,
     on_window: Callable[[int, SimState], None] | None = None,
+    on_block: Callable[[int, Any], None] | None = None,
     stop_requested: Callable[[], bool] | None = None,
 ) -> RunResult:
     """The engines' resilient run loop: windowed, checkpointed, fault-aware.
@@ -635,6 +664,14 @@ def run_windows(
     pipeline ``state`` may still have an undrained in-flight window (its
     ``spike_count``/``t`` are exact, the ring is missing the last window's
     inter deposits).
+
+    ``on_block(w, block)`` is the per-request streaming cadence hook the
+    serving layer hangs its result plumbing on: it fires after every window
+    with the window's raw ``[D, A, n_pad]`` bool spike block (exact even
+    when the overlap pipeline has an undrained exchange in flight -- the
+    block is this window's own emissions). A multi-tenant batch slices each
+    trial's rows out of the block and finalises a request the moment its
+    own duration is reached, independent of the batch's longest trial.
     """
     fault_arg = faults if faults is not None else getattr(
         engine.config, "faults", None)
@@ -706,6 +743,8 @@ def run_windows(
                 slept += injector.inject(comp + comm)
         times.append(time.perf_counter() - t0)
         spikes.append(int(np.asarray(jnp.sum(block.astype(jnp.int32)))))
+        if on_block is not None:
+            on_block(w_done, block)
         if checkpointer is not None and checkpointer.due(w_done):
             drain_pipeline()
             checkpointer.maybe_save(state, window=w_done)

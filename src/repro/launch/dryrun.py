@@ -480,8 +480,8 @@ def dryrun_snn_cell(
     """
     from repro.core.areas import mam_spec
     from repro.core.connectivity import area_adjacency, network_sds
-    from repro.core.dist_engine import (
-        make_dist_engine, network_pspecs, state_pspecs)
+    from repro.core.dist_engine import network_pspecs, state_pspecs
+    from repro.core.factory import make_simulation
     from repro.core.engine import EngineConfig
     from repro.core import delivery as delivery_lib
     from repro.core import exchange as exchange_lib
@@ -522,7 +522,7 @@ def dryrun_snn_cell(
                        shard_inter_tables=shard_tables,
                        subgroup_inter_tables=subgroup_tables,
                        adaptive_exchange=adaptive)
-    eng = make_dist_engine(net_sds, spec, mesh, cfg)
+    eng = make_simulation(spec, cfg, net=net_sds, mesh=mesh)
     if needs_outgoing and spec.k_inter > 0:
         # Static per-device receive-table accounting, replicated vs sharded
         # (the tentpole's memory claim, independent of XLA's analysis).

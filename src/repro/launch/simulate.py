@@ -32,7 +32,8 @@ import numpy as np
 
 from repro.core.areas import mam_benchmark_spec, mam_spec
 from repro.core.connectivity import area_adjacency, build_network
-from repro.core.engine import EngineConfig, make_engine
+from repro.core.engine import EngineConfig
+from repro.core.factory import make_simulation
 from repro.core import exchange as exchange_lib
 from repro.core import faults as faults_lib
 from repro.core import schedule as schedule_lib
@@ -159,7 +160,7 @@ def profile_phases(net, spec, cfg: EngineConfig, cycles: int = 200) -> None:
     # The engines' own param/drive derivation -- the profiler must time the
     # same math Engine.run executes.
     lif_params, drive_rate = resolve_params(net, spec, cfg)
-    eng = make_engine(net, spec, cfg)
+    eng = make_simulation(spec, cfg, net=net)
     st = eng.init()
     st, blk = eng.window(st)  # warmed-up state + a real spike raster
     ring0 = st.ring
@@ -241,8 +242,7 @@ def profile_phases(net, spec, cfg: EngineConfig, cycles: int = 200) -> None:
         # the pipelined run finishes window w's exchange while computing
         # w+1, so the gap is the per-window comm wall the overlap absorbs
         # (bit-identical trajectory either way).
-        eng_o = make_engine(
-            net, spec, dataclasses.replace(cfg, overlap_exchange=True))
+        eng_o = make_simulation(spec, dataclasses.replace(cfg, overlap_exchange=True), net=net)
         k = max(cycles // D, 1)
         seq = _time_loop(lambda s: eng.run(s, k), st)
         pipe = _time_loop(lambda s: eng_o.run(s, k), st)
@@ -663,8 +663,7 @@ def main() -> None:
                 sharded_build=sharded_leg)
             leg_net = net
             if mesh is not None:
-                from repro.core.dist_engine import (
-                    build_network_sharded, make_dist_engine)
+                from repro.core.dist_engine import build_network_sharded
 
                 if sharded_leg:
                     t0 = time.perf_counter()
@@ -674,9 +673,9 @@ def main() -> None:
                     print(f"  sharded build: tables generated host-free in "
                           f"{time.perf_counter() - t0:.2f} s "
                           f"(no global tensors materialised)")
-                eng = make_dist_engine(leg_net, spec, mesh, cfg)
+                eng = make_simulation(spec, cfg, net=leg_net, mesh=mesh)
             else:
-                eng = make_engine(net, spec, cfg)
+                eng = make_simulation(spec, cfg, net=net)
             n_windows = spec.steps_for(args.t_ms) // spec.delay_ratio
             if resilient:
                 st, wall, windows_run = _run_resilient(

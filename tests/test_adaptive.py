@@ -85,13 +85,14 @@ def test_adaptive_local_engine_bitwise_and_bucket_edge():
 
     from repro.core.areas import mam_benchmark_spec
     from repro.core.connectivity import build_network
-    from repro.core.engine import EngineConfig, make_engine
+    from repro.core.engine import EngineConfig
+    from repro.core.factory import make_simulation
 
     spec = mam_benchmark_spec(n_areas=4, n_per_area=32, k_intra=4, k_inter=4,
                               rate_hz=1000.0)
     net = build_network(spec, seed=12, size_multiple=8, outgoing=True)
-    ref = make_engine(net, spec, EngineConfig(
-        neuron_model="ignore_and_fire", schedule="structure_aware"))
+    ref = make_simulation(spec, EngineConfig(
+        neuron_model="ignore_and_fire", schedule="structure_aware"), net=net)
     s0 = ref.init()
     blocks = []
     for _ in range(4):
@@ -105,10 +106,10 @@ def test_adaptive_local_engine_bitwise_and_bucket_edge():
     assert max_cycle > 1, "workload must spike"
 
     for floor in (max_cycle, max_cycle - 1, 1):
-        eng = make_engine(net, spec, EngineConfig(
+        eng = make_simulation(spec, EngineConfig(
             neuron_model="ignore_and_fire", schedule="structure_aware",
             delivery_backend="event", adaptive_exchange=True,
-            s_max_headroom=0.0, s_max_floor=floor))
+            s_max_headroom=0.0, s_max_floor=floor), net=net)
         st = eng.init()
         for w in range(4):
             st, blk = eng.window(st)
@@ -126,23 +127,24 @@ def test_adaptive_eliminates_forced_overflow_single_host():
     reproduces the unconstrained reference ring bitwise."""
     from repro.core.areas import mam_benchmark_spec
     from repro.core.connectivity import build_network
-    from repro.core.engine import EngineConfig, make_engine
+    from repro.core.engine import EngineConfig
+    from repro.core.factory import make_simulation
 
     spec = mam_benchmark_spec(n_areas=4, n_per_area=32, k_intra=4, k_inter=4,
                               rate_hz=1000.0)
     net = build_network(spec, seed=12, size_multiple=8, outgoing=True)
-    ref = make_engine(net, spec, EngineConfig(
-        neuron_model="ignore_and_fire", schedule="structure_aware"))
+    ref = make_simulation(spec, EngineConfig(
+        neuron_model="ignore_and_fire", schedule="structure_aware"), net=net)
     s_ref = ref.init()
     for _ in range(4):
         s_ref, _ = ref.window(s_ref)
 
     got = {}
     for adaptive in (False, True):
-        eng = make_engine(net, spec, EngineConfig(
+        eng = make_simulation(spec, EngineConfig(
             neuron_model="ignore_and_fire", schedule="structure_aware",
             delivery_backend="event", adaptive_exchange=adaptive,
-            s_max_headroom=0.0, s_max_floor=1))
+            s_max_headroom=0.0, s_max_floor=1), net=net)
         st = eng.init()
         for _ in range(4):
             st, _ = eng.window(st)
@@ -168,16 +170,16 @@ def test_adaptive_distributed_equivalence_and_byte_savings():
         import numpy as np, jax
         from repro.core.areas import mam_benchmark_spec, ring_area_adjacency
         from repro.core.connectivity import build_network
-        from repro.core.engine import make_engine, EngineConfig
-        from repro.core.dist_engine import make_dist_engine
+        from repro.core.engine import EngineConfig
+        from repro.core.factory import make_simulation
 
         spec = mam_benchmark_spec(
             n_areas=8, n_per_area=32, k_intra=4, k_inter=4, rate_hz=30.0,
             area_adjacency=ring_area_adjacency(8, width=2))
         net = build_network(spec, seed=12, size_multiple=8, outgoing=True)
         mesh = jax.make_mesh((4, 2), ("data", "model"))
-        ref = make_engine(net, spec, EngineConfig(
-            neuron_model="ignore_and_fire", schedule="conventional"))
+        ref = make_simulation(spec, EngineConfig(
+            neuron_model="ignore_and_fire", schedule="conventional"), net=net)
         s0 = ref.init()
         blocks = []
         for _ in range(6):
@@ -191,11 +193,11 @@ def test_adaptive_distributed_equivalence_and_byte_savings():
                  ("routed", "event", False), ("routed", "scatter", None)]
         for exch, backend, superstep in cells:
             for adaptive in (False, True):
-                eng = make_dist_engine(net, spec, mesh, EngineConfig(
+                eng = make_simulation(spec, EngineConfig(
                     neuron_model="ignore_and_fire",
                     schedule="structure_aware", delivery_backend=backend,
                     exchange=exch, s_max_floor=8, superstep=superstep,
-                    adaptive_exchange=adaptive))
+                    adaptive_exchange=adaptive), net=net, mesh=mesh)
                 st = eng.init()
                 for w in range(6):
                     st, blk = eng.window(st)
@@ -216,10 +218,10 @@ def test_adaptive_distributed_equivalence_and_byte_savings():
                         exch, backend, got, want)
 
         # Conventional adaptive path (per-cycle two-phase exchange).
-        eng = make_dist_engine(net, spec, mesh, EngineConfig(
+        eng = make_simulation(spec, EngineConfig(
             neuron_model="ignore_and_fire", schedule="conventional",
             delivery_backend="event", s_max_floor=8,
-            adaptive_exchange=True))
+            adaptive_exchange=True), net=net, mesh=mesh)
         st = eng.init()
         for w in range(6):
             st, blk = eng.window(st)
@@ -246,8 +248,8 @@ def test_adaptive_eliminates_forced_overflow_distributed():
         import numpy as np, jax
         from repro.core.areas import mam_benchmark_spec, ring_area_adjacency
         from repro.core.connectivity import build_network
-        from repro.core.engine import make_engine, EngineConfig
-        from repro.core.dist_engine import make_dist_engine
+        from repro.core.engine import EngineConfig
+        from repro.core.factory import make_simulation
 
         adj = ring_area_adjacency(8, width=1)
         spec = mam_benchmark_spec(n_areas=8, n_per_area=32, k_intra=4,
@@ -255,19 +257,19 @@ def test_adaptive_eliminates_forced_overflow_distributed():
                                   area_adjacency=adj)
         net = build_network(spec, seed=12, size_multiple=8, outgoing=True)
         mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
-        ref = make_engine(net, spec, EngineConfig(
-            neuron_model="ignore_and_fire", schedule="structure_aware"))
+        ref = make_simulation(spec, EngineConfig(
+            neuron_model="ignore_and_fire", schedule="structure_aware"), net=net)
         s_ref = ref.init()
         for _ in range(5):
             s_ref, _ = ref.window(s_ref)
 
         got = {}
         for adaptive in (False, True):
-            eng = make_dist_engine(net, spec, mesh, EngineConfig(
+            eng = make_simulation(spec, EngineConfig(
                 neuron_model="ignore_and_fire",
                 schedule="structure_aware", exchange="routed",
                 delivery_backend="event", s_max_headroom=0.0,
-                s_max_floor=1, adaptive_exchange=adaptive))
+                s_max_floor=1, adaptive_exchange=adaptive), net=net, mesh=mesh)
             st = eng.init()
             for _ in range(5):
                 st, _ = eng.window(st)
@@ -294,21 +296,21 @@ def test_adaptive_single_group_mesh_runs_inprocess():
 
     from repro.core.areas import mam_benchmark_spec
     from repro.core.connectivity import build_network
-    from repro.core.dist_engine import make_dist_engine
-    from repro.core.engine import EngineConfig, make_engine
+    from repro.core.engine import EngineConfig
+    from repro.core.factory import make_simulation
 
     spec = mam_benchmark_spec(n_areas=4, n_per_area=32, k_intra=4, k_inter=4,
                               rate_hz=30.0)
     net = build_network(spec, seed=12, size_multiple=8, outgoing=True)
     mesh = jax.make_mesh((1, 1), ("data", "model"))
-    ref = make_engine(net, spec, EngineConfig(
-        neuron_model="ignore_and_fire", schedule="conventional"))
+    ref = make_simulation(spec, EngineConfig(
+        neuron_model="ignore_and_fire", schedule="conventional"), net=net)
     s0 = ref.init()
     for exch in ("dense", "routed"):
-        eng = make_dist_engine(net, spec, mesh, EngineConfig(
+        eng = make_simulation(spec, EngineConfig(
             neuron_model="ignore_and_fire", schedule="structure_aware",
             delivery_backend="event", exchange=exch,
-            adaptive_exchange=True, s_max_floor=4))
+            adaptive_exchange=True, s_max_floor=4), net=net, mesh=mesh)
         assert eng.wire_bytes["adaptive_on"] is True
         assert eng.wire_bytes["adaptive"]["applies"] is True
         st = eng.init()

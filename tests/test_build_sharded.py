@@ -204,7 +204,8 @@ def test_plan_and_config_validation():
     tables, and by the single-host engine (which holds the whole network
     anyway)."""
     from repro.core.connectivity import build_network, sharded_build_plan
-    from repro.core.engine import EngineConfig, make_engine
+    from repro.core.engine import EngineConfig
+    from repro.core.factory import make_simulation
 
     spec = _spec()
     with pytest.raises(ValueError):
@@ -225,7 +226,7 @@ def test_plan_and_config_validation():
                        neuron_model="ignore_and_fire")
     net = build_network(spec, seed=12, outgoing=True)
     with pytest.raises(ValueError, match="single-host"):
-        make_engine(net, spec, cfg)
+        make_simulation(spec, cfg, net=net)
 
 
 @pytest.mark.parametrize("exchange", ["dense", "routed"])
@@ -242,15 +243,15 @@ def test_sharded_built_engine_bitwise_vs_host(exchange):
         from repro.core.areas import mam_benchmark_spec
         from repro.core.connectivity import (
             build_network, shard_inter_tables, slice_intra_tables)
-        from repro.core.engine import make_engine, EngineConfig
-        from repro.core.dist_engine import (
-            build_network_sharded, make_dist_engine)
+        from repro.core.engine import EngineConfig
+        from repro.core.factory import make_simulation
+        from repro.core.dist_engine import build_network_sharded
 
         spec = mam_benchmark_spec(n_areas=4, n_per_area=32, k_intra=4,
                                   k_inter=4, rate_hz=30.0)
         net = build_network(spec, seed=12, size_multiple=8)
-        ref = make_engine(net, spec, EngineConfig(
-            neuron_model="ignore_and_fire", schedule="conventional"))
+        ref = make_simulation(spec, EngineConfig(
+            neuron_model="ignore_and_fire", schedule="conventional"), net=net)
         s0 = ref.init()
         blocks = []
         for _ in range(4):
@@ -289,9 +290,7 @@ def test_sharded_built_engine_bitwise_vs_host(exchange):
         # net=None: the engine builds its own tables host-free.
         for adaptive in (False, True):
             for superstep in (None, False):
-                eng = make_dist_engine(None, spec, mesh,
-                                       cfg(adaptive, superstep),
-                                       build_seed=12)
+                eng = make_simulation(spec, cfg(adaptive, superstep), net=None, mesh=mesh, build_seed=12)
                 st = eng.init()
                 for w in range(4):
                     st, blk = eng.window(st)

@@ -142,11 +142,12 @@ def test_snn_state_checkpoint_resume(tmp_path):
 
     from repro.core.areas import mam_benchmark_spec
     from repro.core.connectivity import build_network
-    from repro.core.engine import EngineConfig, make_engine
+    from repro.core.engine import EngineConfig
+    from repro.core.factory import make_simulation
 
     spec = mam_benchmark_spec(n_areas=2, n_per_area=32, k_intra=4, k_inter=4)
     net = build_network(spec, seed=12)
-    eng = make_engine(net, spec, EngineConfig(neuron_model="lif"))
+    eng = make_simulation(spec, EngineConfig(neuron_model="lif"), net=net)
 
     # uninterrupted reference: 10 windows
     st = eng.init()

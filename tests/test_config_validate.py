@@ -1,0 +1,203 @@
+"""Per-rule tests for EngineConfig.validate()/check().
+
+Every constructor-time refusal now lives in one place: ``validate()``
+returns the FULL list of violated rules (field, problem, remedy) and
+``check()`` raises one structured :class:`ConfigError` aggregating them,
+instead of the old one-raise-per-constructor-replay loop. The factories
+pass the dispatch context (``distributed=True/False``) so context rules
+ride the same error.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.core.engine import ConfigError, ConfigViolation, EngineConfig
+from repro.core.factory import make_simulation
+
+
+def _violations(**kw) -> list[ConfigViolation]:
+    """Violations a constructor call with these fields would raise."""
+    with pytest.raises(ConfigError) as exc:
+        EngineConfig(**kw)
+    return list(exc.value.violations)
+
+
+def _single(field: str, problem_frag: str, **kw) -> ConfigViolation:
+    vs = _violations(**kw)
+    assert len(vs) == 1, vs
+    (v,) = vs
+    assert v.field == field
+    assert problem_frag in v.problem, v.problem
+    assert v.remedy
+    return v
+
+
+# ---------------------------------------------------------------------------
+# construction-time rules, one test per rule
+
+
+def test_unknown_neuron_model():
+    v = _single("neuron_model", "unknown neuron model",
+                neuron_model="hodgkin_huxley")
+    assert "'lif'" in v.remedy
+
+
+def test_unknown_schedule():
+    _single("schedule", "unknown schedule", schedule="round_robin")
+
+
+def test_unknown_delivery_backend():
+    _single("delivery_backend", "unknown delivery_backend",
+            delivery_backend="smoke_signals")
+
+
+def test_unknown_exchange():
+    _single("exchange", "unknown exchange", exchange="carrier_pigeon")
+
+
+def test_s_max_burst_must_be_positive():
+    v = _single("s_max_burst", "burst slack", s_max_burst=0)
+    assert ">= 1" in v.remedy
+
+
+def test_routed_requires_structure_aware():
+    v = _single("exchange", "structure-aware",
+                exchange="routed", schedule="conventional")
+    assert "structure_aware" in v.remedy
+
+
+def test_superstep_requires_structure_aware():
+    _single("superstep", "no window to fuse",
+            superstep=True, schedule="conventional")
+
+
+def test_superstep_kernel_requires_structure_aware():
+    _single("superstep_kernel", "no window to fuse",
+            superstep_kernel=True, schedule="conventional")
+
+
+def test_superstep_kernel_conflicts_with_superstep_false():
+    _single("superstep_kernel", "conflicts with superstep=False",
+            superstep_kernel=True, superstep=False)
+
+
+def test_overlap_exchange_requires_structure_aware():
+    _single("overlap_exchange", "no", schedule="conventional",
+            overlap_exchange=True)
+
+
+def test_sharded_build_requires_event_backend():
+    _single("sharded_build", "event", sharded_build=True,
+            delivery_backend="onehot")
+
+
+def test_sharded_build_requires_sharded_tables():
+    _single("sharded_build", "replicated", sharded_build=True,
+            delivery_backend="event", shard_inter_tables=False)
+
+
+def test_sharded_build_requires_structure_aware():
+    _single("sharded_build", "structure-aware", sharded_build=True,
+            delivery_backend="event", schedule="conventional")
+
+
+# ---------------------------------------------------------------------------
+# aggregation: one error reports ALL violations
+
+
+def test_all_violations_reported_at_once():
+    vs = _violations(neuron_model="nope", schedule="nope",
+                     delivery_backend="nope", exchange="nope")
+    fields = {v.field for v in vs}
+    assert fields == {"neuron_model", "schedule", "delivery_backend",
+                      "exchange"}
+
+
+def test_error_message_lists_every_rule_with_remedy():
+    with pytest.raises(ConfigError) as exc:
+        EngineConfig(neuron_model="nope", schedule="conventional",
+                     superstep=True)
+    msg = str(exc.value)
+    assert "2 rules violated" in msg
+    assert "neuron_model" in msg and "superstep" in msg
+    assert "remedy" in msg
+
+
+def test_violation_str_has_field_problem_remedy():
+    v = ConfigViolation("f", "broken", "fix it")
+    assert str(v) == "f: broken [remedy: fix it]"
+
+
+# ---------------------------------------------------------------------------
+# context rules (validate(distributed=...) on construction-valid configs)
+
+
+def test_valid_config_has_no_violations():
+    cfg = EngineConfig(delivery_backend="event")
+    assert cfg.validate() == []
+    assert cfg.validate(distributed=False) == []
+    assert cfg.validate(distributed=True) == []
+    cfg.check(distributed=False)  # must not raise
+
+
+def test_single_host_rejects_mesh_exchange():
+    cfg = EngineConfig(exchange="dense")
+    assert cfg.validate() == []  # construction-valid
+    vs = cfg.validate(distributed=False)
+    assert len(vs) == 1 and vs[0].field == "exchange"
+    assert "needs a device mesh" in vs[0].problem
+    assert "mesh=" in vs[0].remedy
+
+
+def test_single_host_rejects_sharded_build():
+    cfg = EngineConfig(delivery_backend="event", sharded_build=True)
+    assert cfg.validate() == []
+    vs = cfg.validate(distributed=False)
+    assert len(vs) == 1 and vs[0].field == "sharded_build"
+    assert "distributed construction mode" in vs[0].problem
+
+
+def test_distributed_rejects_superstep_kernel():
+    cfg = EngineConfig(superstep_kernel=True)
+    assert cfg.validate() == []
+    vs = cfg.validate(distributed=True)
+    assert len(vs) == 1 and vs[0].field == "superstep_kernel"
+    assert "single-host only" in vs[0].problem
+
+
+def test_factory_surfaces_context_violations():
+    """make_simulation reports the single-host context rules up front."""
+    from repro.core.areas import mam_benchmark_spec
+
+    spec = mam_benchmark_spec(n_areas=4, n_per_area=32, k_intra=4, k_inter=4)
+    with pytest.raises(ConfigError, match="needs a device mesh"):
+        make_simulation(spec, EngineConfig(exchange="dense"))
+
+
+def test_config_error_is_value_error():
+    """Pre-refactor callers caught ValueError; that contract holds."""
+    with pytest.raises(ValueError):
+        EngineConfig(neuron_model="nope")
+
+
+# ---------------------------------------------------------------------------
+# deprecated entry points still construct working engines (with a warning)
+
+
+def test_old_entry_points_warn_and_work():
+    import numpy as np
+
+    from repro.core.areas import mam_benchmark_spec
+    from repro.core.connectivity import build_network
+    from repro.core.engine import make_engine
+
+    spec = mam_benchmark_spec(n_areas=4, n_per_area=32, k_intra=4, k_inter=4)
+    net = build_network(spec, seed=12)
+    cfg = EngineConfig()
+    with pytest.warns(DeprecationWarning, match="make_simulation"):
+        old = make_engine(net, spec, cfg)
+    new = make_simulation(spec, cfg, net=net)
+    st_o, blk_o = old.window(old.init())
+    st_n, blk_n = new.window(new.init())
+    assert np.array_equal(np.asarray(blk_o), np.asarray(blk_n))

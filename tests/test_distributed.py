@@ -33,19 +33,18 @@ def test_dist_engine_equivalence_both_schedules():
         import numpy as np, jax
         from repro.core.areas import mam_benchmark_spec
         from repro.core.connectivity import build_network
-        from repro.core.engine import make_engine, EngineConfig
-        from repro.core.dist_engine import make_dist_engine
+        from repro.core.engine import EngineConfig
+        from repro.core.factory import make_simulation
 
         spec = mam_benchmark_spec(n_areas=4, n_per_area=32, k_intra=4, k_inter=4)
         net = build_network(spec, seed=12, size_multiple=8)
         mesh = jax.make_mesh((4, 2), ("data", "model"))
         for model in ("ignore_and_fire", "lif"):
-            ref = make_engine(net, spec, EngineConfig(neuron_model=model,
-                                                      schedule="conventional"))
+            ref = make_simulation(spec, EngineConfig(neuron_model=model,
+                                                      schedule="conventional"), net=net)
             for sched in ("structure_aware", "conventional"):
-                eng = make_dist_engine(net, spec, mesh,
-                                       EngineConfig(neuron_model=model,
-                                                    schedule=sched))
+                eng = make_simulation(spec, EngineConfig(neuron_model=model,
+                                                    schedule=sched), net=net, mesh=mesh)
                 st, s0 = eng.init(), ref.init()
                 for w in range(8):
                     s0, blk_ref = ref.window(s0)
@@ -67,15 +66,15 @@ def test_dist_engine_delivery_backend_equivalence():
         import numpy as np, jax
         from repro.core.areas import mam_benchmark_spec
         from repro.core.connectivity import build_network
-        from repro.core.engine import make_engine, EngineConfig
-        from repro.core.dist_engine import make_dist_engine
+        from repro.core.engine import EngineConfig
+        from repro.core.factory import make_simulation
 
         spec = mam_benchmark_spec(n_areas=4, n_per_area=32, k_intra=4,
                                   k_inter=4, rate_hz=30.0)
         net = build_network(spec, seed=12, size_multiple=8, outgoing=True)
         mesh = jax.make_mesh((4, 2), ("data", "model"))
-        ref = make_engine(net, spec, EngineConfig(
-            neuron_model="ignore_and_fire", schedule="conventional"))
+        ref = make_simulation(spec, EngineConfig(
+            neuron_model="ignore_and_fire", schedule="conventional"), net=net)
         s0 = ref.init()
         blocks = []
         for _ in range(6):
@@ -88,13 +87,12 @@ def test_dist_engine_delivery_backend_equivalence():
         cases += [("event", "structure_aware", False),
                   ("scatter", "structure_aware", False)]
         for backend, sched, superstep in cases:
-            eng = make_dist_engine(net, spec, mesh,
-                                   EngineConfig(
+            eng = make_simulation(spec, EngineConfig(
                                        neuron_model="ignore_and_fire",
                                        schedule=sched,
                                        delivery_backend=backend,
                                        s_max_floor=32,
-                                       superstep=superstep))
+                                       superstep=superstep), net=net, mesh=mesh)
             st = eng.init()
             for w in range(6):
                 st, blk = eng.window(st)
@@ -111,17 +109,16 @@ def test_dist_engine_multi_pod_mesh():
         import numpy as np, jax
         from repro.core.areas import mam_benchmark_spec
         from repro.core.connectivity import build_network
-        from repro.core.engine import make_engine, EngineConfig
-        from repro.core.dist_engine import make_dist_engine
+        from repro.core.engine import EngineConfig
+        from repro.core.factory import make_simulation
 
         spec = mam_benchmark_spec(n_areas=4, n_per_area=32, k_intra=4, k_inter=4)
         net = build_network(spec, seed=654, size_multiple=8)
         mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
-        ref = make_engine(net, spec, EngineConfig(schedule="conventional",
-                                                  neuron_model="lif"))
-        eng = make_dist_engine(net, spec, mesh,
-                               EngineConfig(schedule="structure_aware",
-                                            neuron_model="lif"))
+        ref = make_simulation(spec, EngineConfig(schedule="conventional",
+                                                  neuron_model="lif"), net=net)
+        eng = make_simulation(spec, EngineConfig(schedule="structure_aware",
+                                            neuron_model="lif"), net=net, mesh=mesh)
         st, s0 = eng.init(), ref.init()
         for w in range(6):
             s0, blk_ref = ref.window(s0)

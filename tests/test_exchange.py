@@ -46,8 +46,8 @@ def test_routed_exchange_equivalence_sparse_graph():
         import numpy as np, jax
         from repro.core.areas import mam_benchmark_spec, ring_area_adjacency
         from repro.core.connectivity import build_network, area_adjacency
-        from repro.core.engine import make_engine, EngineConfig
-        from repro.core.dist_engine import make_dist_engine
+        from repro.core.engine import EngineConfig
+        from repro.core.factory import make_simulation
         from repro.core import exchange as exchange_lib
 
         spec = mam_benchmark_spec(
@@ -57,8 +57,8 @@ def test_routed_exchange_equivalence_sparse_graph():
         adj = area_adjacency(net, spec)
         assert adj.sum() < adj.size - adj.shape[0], "graph must be sparse"
         mesh = jax.make_mesh((4, 2), ("data", "model"))
-        ref = make_engine(net, spec, EngineConfig(
-            neuron_model="ignore_and_fire", schedule="conventional"))
+        ref = make_simulation(spec, EngineConfig(
+            neuron_model="ignore_and_fire", schedule="conventional"), net=net)
         s0 = ref.init()
         blocks, ring_ref = [], None
         for _ in range(6):
@@ -68,10 +68,10 @@ def test_routed_exchange_equivalence_sparse_graph():
         assert sum(b.sum() for b in blocks) > 0
         for backend in ("scatter", "event"):
             for superstep in (None, False):
-                eng = make_dist_engine(net, spec, mesh, EngineConfig(
+                eng = make_simulation(spec, EngineConfig(
                     neuron_model="ignore_and_fire",
                     schedule="structure_aware", delivery_backend=backend,
-                    exchange="routed", s_max_floor=32, superstep=superstep))
+                    exchange="routed", s_max_floor=32, superstep=superstep), net=net, mesh=mesh)
                 st = eng.init()
                 for w in range(6):
                     st, blk = eng.window(st)
@@ -102,19 +102,19 @@ def test_routed_exchange_multi_pod_and_overflow():
         import numpy as np, jax
         from repro.core.areas import mam_benchmark_spec, ring_area_adjacency
         from repro.core.connectivity import build_network
-        from repro.core.engine import make_engine, EngineConfig
-        from repro.core.dist_engine import make_dist_engine
+        from repro.core.engine import EngineConfig
+        from repro.core.factory import make_simulation
 
         adj = ring_area_adjacency(8, width=1)
         spec = mam_benchmark_spec(n_areas=8, n_per_area=32, k_intra=4,
                                   k_inter=4, area_adjacency=adj)
         net = build_network(spec, seed=654, size_multiple=8, outgoing=True)
         mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
-        ref = make_engine(net, spec, EngineConfig(
-            schedule="conventional", neuron_model="lif"))
-        eng = make_dist_engine(net, spec, mesh, EngineConfig(
+        ref = make_simulation(spec, EngineConfig(
+            schedule="conventional", neuron_model="lif"), net=net)
+        eng = make_simulation(spec, EngineConfig(
             schedule="structure_aware", neuron_model="lif",
-            exchange="routed", s_max_floor=64))
+            exchange="routed", s_max_floor=64), net=net, mesh=mesh)
         st, s0 = eng.init(), ref.init()
         for w in range(6):
             s0, blk_ref = ref.window(s0)
@@ -128,10 +128,10 @@ def test_routed_exchange_multi_pod_and_overflow():
                                    k_inter=4, rate_hz=2000.0,
                                    area_adjacency=adj)
         net2 = build_network(spec2, seed=12, size_multiple=8, outgoing=True)
-        eng2 = make_dist_engine(net2, spec2, mesh, EngineConfig(
+        eng2 = make_simulation(spec2, EngineConfig(
             neuron_model="ignore_and_fire", schedule="structure_aware",
             exchange="routed", delivery_backend="event",
-            s_max_headroom=0.0, s_max_floor=1))
+            s_max_headroom=0.0, s_max_floor=1), net=net2, mesh=mesh)
         st = eng2.init()
         for _ in range(5):
             st, _ = eng2.window(st)
@@ -154,8 +154,8 @@ def test_sharded_inter_tables_equivalence():
         import numpy as np, jax
         from repro.core.areas import mam_benchmark_spec, ring_area_adjacency
         from repro.core.connectivity import build_network
-        from repro.core.engine import make_engine, EngineConfig
-        from repro.core.dist_engine import make_dist_engine
+        from repro.core.engine import EngineConfig
+        from repro.core.factory import make_simulation
 
         adj = ring_area_adjacency(8, width=2)
         spec = mam_benchmark_spec(
@@ -163,8 +163,8 @@ def test_sharded_inter_tables_equivalence():
             area_adjacency=adj)
         net = build_network(spec, seed=12, size_multiple=8, outgoing=True)
         mesh = jax.make_mesh((4, 2), ("data", "model"))
-        ref = make_engine(net, spec, EngineConfig(
-            neuron_model="ignore_and_fire", schedule="conventional"))
+        ref = make_simulation(spec, EngineConfig(
+            neuron_model="ignore_and_fire", schedule="conventional"), net=net)
         s0 = ref.init()
         blocks = []
         for _ in range(6):
@@ -176,10 +176,10 @@ def test_sharded_inter_tables_equivalence():
                  ("conventional", "dense")]
         for sched, exch in cells:
             for shard_tables in (True, False):
-                eng = make_dist_engine(net, spec, mesh, EngineConfig(
+                eng = make_simulation(spec, EngineConfig(
                     neuron_model="ignore_and_fire", schedule=sched,
                     delivery_backend="event", exchange=exch,
-                    s_max_floor=32, shard_inter_tables=shard_tables))
+                    s_max_floor=32, shard_inter_tables=shard_tables), net=net, mesh=mesh)
                 st = eng.init()
                 for w in range(6):
                     st, blk = eng.window(st)
@@ -198,11 +198,11 @@ def test_sharded_inter_tables_equivalence():
         net2 = build_network(spec2, seed=12, size_multiple=8, outgoing=True)
         got = {}
         for shard_tables in (True, False):
-            eng = make_dist_engine(net2, spec2, mesh, EngineConfig(
+            eng = make_simulation(spec2, EngineConfig(
                 neuron_model="ignore_and_fire", schedule="structure_aware",
                 exchange="routed", delivery_backend="event",
                 s_max_headroom=0.0, s_max_floor=1,
-                shard_inter_tables=shard_tables))
+                shard_inter_tables=shard_tables), net=net2, mesh=mesh)
             st = eng.init()
             for _ in range(5):
                 st, _ = eng.window(st)
@@ -282,8 +282,8 @@ def test_sharded_tables_mesh_mismatch_rejected():
 
     from repro.core.areas import mam_benchmark_spec
     from repro.core.connectivity import build_network, shard_inter_tables
-    from repro.core.dist_engine import make_dist_engine
     from repro.core.engine import EngineConfig
+    from repro.core.factory import make_simulation
 
     spec = mam_benchmark_spec(n_areas=4, n_per_area=32, k_intra=4, k_inter=4)
     net = build_network(spec, seed=12, size_multiple=8, outgoing=True)
@@ -291,10 +291,9 @@ def test_sharded_tables_mesh_mismatch_rejected():
     cfg = EngineConfig(neuron_model="ignore_and_fire",
                        schedule="structure_aware", delivery_backend="event")
     with pytest.raises(ValueError, match="do not match the"):
-        make_dist_engine(shard_inter_tables(net, 2), spec, mesh, cfg)
+        make_simulation(spec, cfg, net=shard_inter_tables(net, 2), mesh=mesh)
     with pytest.raises(ValueError, match="do not match the"):
-        make_dist_engine(
-            shard_inter_tables(net, 1, mode="window"), spec, mesh, cfg)
+        make_simulation(spec, cfg, net=shard_inter_tables(net, 1, mode="window"), mesh=mesh)
 
 
 def test_build_routing_hierarchical_round_order():
@@ -349,18 +348,18 @@ def test_routed_single_group_mesh_runs_inprocess():
 
     from repro.core.areas import mam_benchmark_spec
     from repro.core.connectivity import build_network
-    from repro.core.dist_engine import make_dist_engine
-    from repro.core.engine import EngineConfig, make_engine
+    from repro.core.engine import EngineConfig
+    from repro.core.factory import make_simulation
 
     spec = mam_benchmark_spec(n_areas=4, n_per_area=32, k_intra=4, k_inter=4,
                               rate_hz=30.0)
     net = build_network(spec, seed=12, size_multiple=8, outgoing=True)
     mesh = jax.make_mesh((1, 1), ("data", "model"))
-    ref = make_engine(net, spec, EngineConfig(
-        neuron_model="ignore_and_fire", schedule="conventional"))
-    eng = make_dist_engine(net, spec, mesh, EngineConfig(
+    ref = make_simulation(spec, EngineConfig(
+        neuron_model="ignore_and_fire", schedule="conventional"), net=net)
+    eng = make_simulation(spec, EngineConfig(
         neuron_model="ignore_and_fire", schedule="structure_aware",
-        exchange="routed", s_max_floor=32))
+        exchange="routed", s_max_floor=32), net=net, mesh=mesh)
     assert eng.wire_bytes["exchange"] == "routed"
     s0, st = ref.init(), eng.init()
     for w in range(6):
@@ -380,8 +379,8 @@ def test_routed_validation():
 
     from repro.core.areas import mam_benchmark_spec
     from repro.core.connectivity import build_network
-    from repro.core.dist_engine import make_dist_engine
-    from repro.core.engine import EngineConfig, make_engine
+    from repro.core.engine import EngineConfig
+    from repro.core.factory import make_simulation
 
     with pytest.raises(ValueError):
         EngineConfig(schedule="conventional", exchange="routed")
@@ -394,12 +393,12 @@ def test_routed_validation():
     # build; the default sharded path builds its inbound slices straight
     # from the incoming tensors, so outgoing=True is no longer required.
     with pytest.raises(ValueError, match="outgoing"):
-        make_dist_engine(net, spec, mesh, EngineConfig(
-            exchange="routed", shard_inter_tables=False))
-    eng = make_dist_engine(net, spec, mesh, EngineConfig(exchange="routed"))
+        make_simulation(spec, EngineConfig(
+            exchange="routed", shard_inter_tables=False), net=net, mesh=mesh)
+    eng = make_simulation(spec, EngineConfig(exchange="routed"), net=net, mesh=mesh)
     assert eng.wire_bytes["exchange"] == "routed"
     with pytest.raises(ValueError, match="mesh"):
-        make_engine(net, spec, EngineConfig(exchange="dense"))
+        make_simulation(spec, EngineConfig(exchange="dense"), net=net)
 
 
 def test_build_routing_skips_rounds_and_bounds_edges():
@@ -509,8 +508,8 @@ def test_network_sds_outgoing_mirrors_build():
     # The stand-in must lower the event window through shard_map like the
     # dry-run does (1x1 mesh here; dryrun.py forces the production meshes).
     from jax.sharding import NamedSharding
-    from repro.core.dist_engine import (
-        make_dist_engine, network_pspecs, state_pspecs)
+    from repro.core.dist_engine import network_pspecs, state_pspecs
+    from repro.core.factory import make_simulation
     from repro.core.engine import EngineConfig, SimState
     from repro.core import neuron as neuron_lib
 
@@ -518,7 +517,7 @@ def test_network_sds_outgoing_mirrors_build():
     cfg = EngineConfig(neuron_model="lif", schedule="structure_aware",
                        delivery_backend="event", exchange="routed")
     sds = network_sds(spec, size_multiple=8, outgoing=True, inter_shards=1)
-    eng = make_dist_engine(sds, spec, mesh, cfg)
+    eng = make_simulation(spec, cfg, net=sds, mesh=mesh)
     A, n_pad = sds.alive.shape
     s = jax.ShapeDtypeStruct
     st_specs = state_pspecs(mesh, cfg.schedule, cfg.neuron_model)

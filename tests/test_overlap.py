@@ -25,7 +25,8 @@ from repro.core import schedule as schedule_lib
 from repro.core import sync_model
 from repro.core.areas import mam_benchmark_spec
 from repro.core.connectivity import build_network
-from repro.core.engine import EngineConfig, make_engine
+from repro.core.engine import EngineConfig
+from repro.core.factory import make_simulation
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -50,7 +51,7 @@ def _quick_net():
 def _engine(spec, net, **cfg_kw):
     cfg = EngineConfig(neuron_model="lif", delivery_backend="event",
                       s_max_floor=4, **cfg_kw)
-    return make_engine(net, spec, cfg)
+    return make_simulation(spec, cfg, net=net)
 
 
 def _assert_states_equal(a, b, tag=""):
@@ -234,8 +235,8 @@ def test_dist_overlap_bitwise_matrix(tmp_path):
         from repro.core import schedule as schedule_lib
         from repro.core.areas import mam_benchmark_spec
         from repro.core.connectivity import build_network
-        from repro.core.dist_engine import make_dist_engine
         from repro.core.engine import EngineConfig
+        from repro.core.factory import make_simulation
 
         spec = mam_benchmark_spec(n_areas=4, n_per_area=32, k_intra=4,
                                   k_inter=4, rate_hz=30.0)
@@ -249,10 +250,9 @@ def test_dist_overlap_bitwise_matrix(tmp_path):
                               delivery_backend="event", exchange=exchange,
                               adaptive_exchange=adaptive,
                               superstep=superstep, s_max_floor=4)
-                    seq = make_dist_engine(net, spec, mesh,
-                                           EngineConfig(**kw))
-                    ovl = make_dist_engine(net, spec, mesh, EngineConfig(
-                        overlap_exchange=True, **kw))
+                    seq = make_simulation(spec, EngineConfig(**kw), net=net, mesh=mesh)
+                    ovl = make_simulation(spec, EngineConfig(
+                        overlap_exchange=True, **kw), net=net, mesh=mesh)
                     ref = schedule_lib.run_windows(seq, seq.init(), 4)
                     res = schedule_lib.run_windows(ovl, ovl.init(), 4)
                     assert res.overlapped and res.drains == 1, tag

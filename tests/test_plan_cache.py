@@ -1,0 +1,96 @@
+"""Keyed de-duplication of the sharded-build planning pass.
+
+`sharded_build_plan` is deterministic in (spec, seed, layout) but costs a
+full streaming sweep; `cached_sharded_build_plan` must compute it once per
+key (memo), publish it atomically to a shared cache_dir, and let other
+processes read the file instead of repeating the sweep.
+"""
+
+import json
+import os
+
+import pytest
+
+from repro.core import connectivity as conn
+from repro.core.areas import mam_benchmark_spec
+
+
+def _spec(**kw):
+    kw.setdefault("n_areas", 4)
+    kw.setdefault("n_per_area", 64)
+    kw.setdefault("k_intra", 8)
+    kw.setdefault("k_inter", 12)
+    return mam_benchmark_spec(**kw)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_memo():
+    conn._PLAN_MEMO.clear()
+    yield
+    conn._PLAN_MEMO.clear()
+
+
+def test_cached_plan_equals_direct_plan(tmp_path):
+    spec = _spec()
+    direct = conn.sharded_build_plan(spec, 12, 2, subgroup=2)
+    cached = conn.cached_sharded_build_plan(
+        spec, 12, 2, subgroup=2, cache_dir=str(tmp_path))
+    assert cached == direct
+    # The publish is JSON and round-trips the plan exactly.
+    files = [f for f in os.listdir(tmp_path) if f.startswith("plan_")]
+    assert len(files) == 1
+    with open(tmp_path / files[0]) as f:
+        assert conn._plan_from_json(json.load(f)) == direct
+
+
+def test_memo_skips_recompute(tmp_path, monkeypatch):
+    spec = _spec()
+    calls = []
+    real = conn.sharded_build_plan
+    monkeypatch.setattr(
+        conn, "sharded_build_plan",
+        lambda *a, **kw: calls.append(1) or real(*a, **kw))
+    kw = dict(cache_dir=str(tmp_path))
+    p1 = conn.cached_sharded_build_plan(spec, 12, 2, **kw)
+    p2 = conn.cached_sharded_build_plan(spec, 12, 2, **kw)
+    assert p1 == p2 and len(calls) == 1
+
+
+def test_disk_cache_shared_across_processes(tmp_path, monkeypatch):
+    """A second 'process' (fresh memo) must read the file, not recompute."""
+    spec = _spec()
+    p1 = conn.cached_sharded_build_plan(spec, 12, 2, cache_dir=str(tmp_path))
+    conn._PLAN_MEMO.clear()  # simulate another process's interpreter
+    monkeypatch.setattr(
+        conn, "sharded_build_plan",
+        lambda *a, **kw: pytest.fail("sweep repeated despite cache file"))
+    p2 = conn.cached_sharded_build_plan(spec, 12, 2, cache_dir=str(tmp_path))
+    assert p2 == p1
+
+
+def test_key_separates_layouts():
+    spec = _spec()
+    k = conn.plan_cache_key
+    base = k(spec, 12, 2)
+    assert base == k(spec, 12, 2)  # deterministic
+    assert base != k(spec, 13, 2)
+    assert base != k(spec, 12, 4)
+    assert base != k(spec, 12, 2, subgroup=2)
+    assert base != k(spec, 12, 2, size_multiple=8)
+    assert base != k(_spec(n_per_area=96), 12, 2)
+
+
+def test_nonzero_process_times_out_without_publisher(tmp_path, monkeypatch):
+    spec = _spec()
+    monkeypatch.setattr(conn.jax, "process_count", lambda: 2)
+    with pytest.raises(TimeoutError, match="REPRO_PLAN_CACHE"):
+        conn.cached_sharded_build_plan(
+            spec, 12, 2, cache_dir=str(tmp_path), process_index=1,
+            wait_s=0.5)
+
+
+def test_env_var_names_the_cache_dir(tmp_path, monkeypatch):
+    spec = _spec()
+    monkeypatch.setenv("REPRO_PLAN_CACHE", str(tmp_path))
+    conn.cached_sharded_build_plan(spec, 12, 2)
+    assert any(f.startswith("plan_") for f in os.listdir(tmp_path))

@@ -12,7 +12,8 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.areas import mam_benchmark_spec
 from repro.core.connectivity import build_network
-from repro.core.engine import EngineConfig, make_engine
+from repro.core.engine import EngineConfig
+from repro.core.factory import make_simulation
 from repro.core.neuron import counter_uniform
 from repro.core import ring_buffer
 from repro.optim.compress import ef_compress, int8_decode, int8_encode
@@ -38,10 +39,10 @@ def test_schedule_equivalence_property(n_areas, n_per_area, d_ratio, seed, neuro
         d_min_inter_ms=0.1 * d_ratio,
     )
     net = build_network(spec, seed=seed % 100000)
-    conv = make_engine(net, spec, EngineConfig(
-        neuron_model=neuron, schedule="conventional", seed=seed % 97))
-    struc = make_engine(net, spec, EngineConfig(
-        neuron_model=neuron, schedule="structure_aware", seed=seed % 97))
+    conv = make_simulation(spec, EngineConfig(
+        neuron_model=neuron, schedule="conventional", seed=seed % 97), net=net)
+    struc = make_simulation(spec, EngineConfig(
+        neuron_model=neuron, schedule="structure_aware", seed=seed % 97), net=net)
     sc, ss = conv.init(), struc.init()
     for _ in range(6):
         sc, bc = conv.window(sc)

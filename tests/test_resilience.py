@@ -20,7 +20,8 @@ from repro.core import faults as faults_lib
 from repro.core import schedule as schedule_lib
 from repro.core.areas import mam_benchmark_spec
 from repro.core.connectivity import build_network
-from repro.core.engine import EngineConfig, make_engine
+from repro.core.engine import EngineConfig
+from repro.core.factory import make_simulation
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -42,7 +43,7 @@ def _quick_engine(**cfg_kw):
     net = build_network(spec, seed=12, outgoing=True)
     cfg = EngineConfig(neuron_model="lif", delivery_backend="event",
                        s_max_floor=4, **cfg_kw)
-    return make_engine(net, spec, cfg), net
+    return make_simulation(spec, cfg, net=net), net
 
 
 # ---------------------------------------------------------------------------
@@ -135,8 +136,8 @@ def test_resume_config_hash_mismatch_fails_fast(tmp_path):
     ckpt.close()
 
     spec = mam_benchmark_spec(n_areas=2, n_per_area=32, k_intra=4, k_inter=4)
-    other = make_engine(net, spec, EngineConfig(
-        neuron_model="lif", delivery_backend="event", s_max_floor=4, seed=7))
+    other = make_simulation(spec, EngineConfig(
+        neuron_model="lif", delivery_backend="event", s_max_floor=4, seed=7), net=net)
     with pytest.raises(ValueError, match=r"seed: checkpoint=42 != run=7"):
         schedule_lib.restore_sim(str(tmp_path), other, net)
 
@@ -297,8 +298,8 @@ def test_dist_checkpoint_resume_matrix(tmp_path):
         from repro.core import schedule as schedule_lib
         from repro.core.areas import mam_benchmark_spec
         from repro.core.connectivity import build_network
-        from repro.core.dist_engine import make_dist_engine
         from repro.core.engine import EngineConfig
+        from repro.core.factory import make_simulation
 
         spec = mam_benchmark_spec(n_areas=4, n_per_area=32, k_intra=4,
                                   k_inter=4, rate_hz=30.0)
@@ -314,7 +315,7 @@ def test_dist_checkpoint_resume_matrix(tmp_path):
                         delivery_backend="event", exchange=exchange,
                         adaptive_exchange=adaptive, superstep=superstep,
                         s_max_floor=4)
-                    eng = make_dist_engine(net, spec, mesh, cfg)
+                    eng = make_simulation(spec, cfg, net=net, mesh=mesh)
                     ref = schedule_lib.run_windows(eng, eng.init(), 6)
                     inj = faults_lib.FaultInjector(
                         faults_lib.FaultConfig(preempt_after_window=3),
@@ -353,8 +354,8 @@ def test_elastic_reshard_restart(tmp_path, new_devices, new_groups):
         from repro.core import schedule as schedule_lib
         from repro.core.areas import mam_benchmark_spec
         from repro.core.connectivity import build_network
-        from repro.core.dist_engine import make_dist_engine
         from repro.core.engine import EngineConfig
+        from repro.core.factory import make_simulation
 
         spec = mam_benchmark_spec(n_areas=8, n_per_area=32, k_intra=4,
                                   k_inter=4, rate_hz=30.0)
@@ -364,7 +365,7 @@ def test_elastic_reshard_restart(tmp_path, new_devices, new_groups):
                            s_max_floor=4)
         n_groups = jax.device_count()
         mesh = jax.make_mesh((n_groups, 1), ("data", "model"))
-        eng = make_dist_engine(net, spec, mesh, cfg)
+        eng = make_simulation(spec, cfg, net=net, mesh=mesh)
     """
     # Leg 1 (4 groups): reference trajectory + preempted checkpoint.
     _run(common + f"""
@@ -428,8 +429,8 @@ def test_resume_across_table_layout_change(tmp_path):
         from repro.core import schedule as schedule_lib
         from repro.core.areas import mam_benchmark_spec
         from repro.core.connectivity import build_network
-        from repro.core.dist_engine import make_dist_engine
         from repro.core.engine import EngineConfig
+        from repro.core.factory import make_simulation
 
         spec = mam_benchmark_spec(n_areas=4, n_per_area=32, k_intra=4,
                                   k_inter=4, rate_hz=30.0)
@@ -437,10 +438,10 @@ def test_resume_across_table_layout_change(tmp_path):
         mesh = jax.make_mesh((4, 2), ("data", "model"))
 
         def engine(sharded):
-            return make_dist_engine(net, spec, mesh, EngineConfig(
+            return make_simulation(spec, EngineConfig(
                 neuron_model="ignore_and_fire", delivery_backend="event",
                 exchange="routed", s_max_floor=4,
-                shard_inter_tables=sharded))
+                shard_inter_tables=sharded), net=net, mesh=mesh)
 
         for save_sharded in (True, False):
             tag = f"sharded={{save_sharded}}->{{not save_sharded}}"
@@ -495,8 +496,8 @@ def test_resume_across_sharded_build_change(tmp_path):
         from repro.core import schedule as schedule_lib
         from repro.core.areas import mam_benchmark_spec
         from repro.core.connectivity import build_network
-        from repro.core.dist_engine import make_dist_engine
         from repro.core.engine import EngineConfig
+        from repro.core.factory import make_simulation
 
         spec = mam_benchmark_spec(n_areas=4, n_per_area=32, k_intra=4,
                                   k_inter=4, rate_hz=30.0)
@@ -508,8 +509,7 @@ def test_resume_across_sharded_build_change(tmp_path):
                 neuron_model="ignore_and_fire", delivery_backend="event",
                 exchange="routed", s_max_floor=4,
                 sharded_build=sharded_build)
-            return make_dist_engine(None if sharded_build else net,
-                                    spec, mesh, cfg, build_seed=12)
+            return make_simulation(spec, cfg, net=None if sharded_build else net, mesh=mesh, build_seed=12)
 
         for save_sharded in (False, True):
             tag = f"sharded_build={{save_sharded}}->{{not save_sharded}}"
@@ -551,15 +551,16 @@ def test_sigterm_checkpoints_at_window_boundary(tmp_path):
         from repro.core import schedule as schedule_lib
         from repro.core.areas import mam_benchmark_spec
         from repro.core.connectivity import build_network
-        from repro.core.engine import EngineConfig, make_engine
+        from repro.core.engine import EngineConfig
+        from repro.core.factory import make_simulation
         from repro.launch.simulate import StopFlag
 
         spec = mam_benchmark_spec(n_areas=2, n_per_area=32, k_intra=4,
                                   k_inter=4)
         net = build_network(spec, seed=12, outgoing=True)
-        eng = make_engine(net, spec, EngineConfig(
+        eng = make_simulation(spec, EngineConfig(
             neuron_model="lif", delivery_backend="event", s_max_floor=4,
-            overlap_exchange=True))
+            overlap_exchange=True), net=net)
         stop = StopFlag().install()
         inj = faults_lib.FaultInjector(
             faults_lib.FaultConfig(jitter_mu_ms=25.0, seed=1),

@@ -11,7 +11,8 @@ import pytest
 
 from repro.core.areas import MAM_AREA_NAMES, mam_benchmark_spec, mam_spec
 from repro.core.connectivity import build_network
-from repro.core.engine import EngineConfig, make_engine
+from repro.core.engine import EngineConfig
+from repro.core.factory import make_simulation
 
 
 @pytest.fixture(scope="module")
@@ -28,12 +29,10 @@ def small_net(small_spec):
 def test_schedule_equivalence_bit_exact(small_spec, small_net, neuron_model):
     """Paper §2.1: the structure-aware schedule changes *when* spikes travel,
     never *what* arrives. 40 windows, bitwise."""
-    conv = make_engine(small_net, small_spec,
-                       EngineConfig(neuron_model=neuron_model,
-                                    schedule="conventional"))
-    struc = make_engine(small_net, small_spec,
-                        EngineConfig(neuron_model=neuron_model,
-                                     schedule="structure_aware"))
+    conv = make_simulation(small_spec, EngineConfig(neuron_model=neuron_model,
+                                    schedule="conventional"), net=small_net)
+    struc = make_simulation(small_spec, EngineConfig(neuron_model=neuron_model,
+                                     schedule="structure_aware"), net=small_net)
     sc, ss = conv.init(), struc.init()
     for w in range(40):
         sc, blk_c = conv.window(sc)
@@ -45,12 +44,10 @@ def test_schedule_equivalence_bit_exact(small_spec, small_net, neuron_model):
 
 def test_deposit_variants_equivalent(small_spec, small_net):
     """One-hot-einsum and scatter-add delivery are interchangeable."""
-    a = make_engine(small_net, small_spec,
-                    EngineConfig(schedule="structure_aware",
-                                 delivery_backend="onehot"))
-    b = make_engine(small_net, small_spec,
-                    EngineConfig(schedule="structure_aware",
-                                 delivery_backend="scatter"))
+    a = make_simulation(small_spec, EngineConfig(schedule="structure_aware",
+                                 delivery_backend="onehot"), net=small_net)
+    b = make_simulation(small_spec, EngineConfig(schedule="structure_aware",
+                                 delivery_backend="scatter"), net=small_net)
     sa, sb = a.init(), b.init()
     for _ in range(10):
         sa, blk_a = a.window(sa)
@@ -73,7 +70,7 @@ def test_legacy_delivery_knobs_removed():
 def test_lif_ground_state_rate(small_spec, small_net):
     """The calibrated drive puts the LIF network near the MAM ground state
     (~2.5 spikes/s; we accept a generous band at this tiny scale)."""
-    eng = make_engine(small_net, small_spec, EngineConfig(neuron_model="lif"))
+    eng = make_simulation(small_spec, EngineConfig(neuron_model="lif"), net=small_net)
     st = eng.init()
     st, _ = eng.run(st, 500)  # 500 ms
     t_s = float(st.t) * small_spec.dt_ms / 1000.0
@@ -86,7 +83,7 @@ def test_ignore_and_fire_exact_rate():
     spec = mam_benchmark_spec(n_areas=2, n_per_area=32, k_intra=4, k_inter=4,
                               rate_hz=10.0)
     net = build_network(spec, seed=12)
-    eng = make_engine(net, spec, EngineConfig(neuron_model="ignore_and_fire"))
+    eng = make_simulation(spec, EngineConfig(neuron_model="ignore_and_fire"), net=net)
     st = eng.init()
     st, _ = eng.run(st, 1000)  # 1 s
     rate = float(st.spike_count.sum()) / spec.n_total
@@ -100,7 +97,7 @@ def test_heterogeneous_area_sizes_ghost_padding():
     net = build_network(spec, seed=12)
     sizes = spec.area_sizes()
     assert len(set(sizes.tolist())) > 1, "sizes should differ"
-    eng = make_engine(net, spec, EngineConfig(neuron_model="ignore_and_fire"))
+    eng = make_simulation(spec, EngineConfig(neuron_model="ignore_and_fire"), net=net)
     st = eng.init()
     st, _ = eng.run(st, 100)
     counts = np.asarray(st.spike_count)
@@ -142,11 +139,11 @@ def test_delivery_backends_bit_identical(backend, schedule):
     spec = mam_benchmark_spec(n_areas=4, n_per_area=48, k_intra=8, k_inter=8,
                               rate_hz=30.0)
     net = build_network(spec, seed=91856, outgoing=True)
-    ref = make_engine(net, spec, EngineConfig(
-        neuron_model="ignore_and_fire", schedule="conventional"))
-    eng = make_engine(net, spec, EngineConfig(
+    ref = make_simulation(spec, EngineConfig(
+        neuron_model="ignore_and_fire", schedule="conventional"), net=net)
+    eng = make_simulation(spec, EngineConfig(
         neuron_model="ignore_and_fire", schedule=schedule,
-        delivery_backend=backend, s_max_floor=64))
+        delivery_backend=backend, s_max_floor=64), net=net)
     s0, st = ref.init(), eng.init()
     for w in range(12):
         s0, blk_ref = ref.window(s0)
@@ -163,11 +160,11 @@ def test_delivery_backends_bit_identical_lif(backend):
     (float dynamics + Poisson drive) past the initial transient."""
     spec = mam_benchmark_spec(n_areas=4, n_per_area=48, k_intra=8, k_inter=8)
     net = build_network(spec, seed=12, outgoing=True)
-    ref = make_engine(net, spec, EngineConfig(
-        neuron_model="lif", schedule="conventional"))
-    eng = make_engine(net, spec, EngineConfig(
+    ref = make_simulation(spec, EngineConfig(
+        neuron_model="lif", schedule="conventional"), net=net)
+    eng = make_simulation(spec, EngineConfig(
         neuron_model="lif", schedule="structure_aware",
-        delivery_backend=backend, s_max_floor=192))
+        delivery_backend=backend, s_max_floor=192), net=net)
     s0, st = ref.init(), eng.init()
     for w in range(30):
         s0, blk_ref = ref.window(s0)
@@ -186,15 +183,15 @@ def test_superstep_matches_legacy_window_bitwise(backend):
     spec = mam_benchmark_spec(n_areas=4, n_per_area=48, k_intra=8, k_inter=8,
                               rate_hz=30.0)
     net = build_network(spec, seed=91856, outgoing=True)
-    legacy = make_engine(net, spec, EngineConfig(
+    legacy = make_simulation(spec, EngineConfig(
         neuron_model="ignore_and_fire", schedule="structure_aware",
-        delivery_backend=backend, s_max_floor=64, superstep=False))
-    fused = make_engine(net, spec, EngineConfig(
+        delivery_backend=backend, s_max_floor=64, superstep=False), net=net)
+    fused = make_simulation(spec, EngineConfig(
         neuron_model="ignore_and_fire", schedule="structure_aware",
-        delivery_backend=backend, s_max_floor=64))
-    unroll = make_engine(net, spec, EngineConfig(
+        delivery_backend=backend, s_max_floor=64), net=net)
+    unroll = make_simulation(spec, EngineConfig(
         neuron_model="ignore_and_fire", schedule="structure_aware",
-        delivery_backend=backend, s_max_floor=64, superstep_unroll=True))
+        delivery_backend=backend, s_max_floor=64, superstep_unroll=True), net=net)
     sl, sf, su = legacy.init(), fused.init(), unroll.init()
     for w in range(12):
         sl, bl = legacy.window(sl)
@@ -215,11 +212,11 @@ def test_fused_superstep_kernel_matches_reference(neuron_model):
     spec = mam_benchmark_spec(n_areas=4, n_per_area=48, k_intra=8, k_inter=8,
                               rate_hz=30.0)
     net = build_network(spec, seed=91856, outgoing=True)
-    ref = make_engine(net, spec, EngineConfig(
-        neuron_model=neuron_model, schedule="conventional"))
-    eng = make_engine(net, spec, EngineConfig(
+    ref = make_simulation(spec, EngineConfig(
+        neuron_model=neuron_model, schedule="conventional"), net=net)
+    eng = make_simulation(spec, EngineConfig(
         neuron_model=neuron_model, schedule="structure_aware",
-        delivery_backend="event", s_max_floor=64, superstep_kernel=True))
+        delivery_backend="event", s_max_floor=64, superstep_kernel=True), net=net)
     s0, st = ref.init(), eng.init()
     for w in range(12):
         s0, blk_ref = ref.window(s0)
@@ -270,9 +267,9 @@ def test_overflow_identical_across_schedules_and_blocked_path():
         ("superstep_unroll", dict(schedule="structure_aware",
                                   superstep_unroll=True)),
     ]:
-        eng = make_engine(net, spec, EngineConfig(
+        eng = make_simulation(spec, EngineConfig(
             neuron_model="ignore_and_fire", delivery_backend="event",
-            s_max_headroom=0.0, s_max_floor=1, **kw))
+            s_max_headroom=0.0, s_max_floor=1, **kw), net=net)
         st = eng.init()
         for _ in range(5):
             st, _ = eng.window(st)
@@ -327,9 +324,9 @@ def test_event_overflow_counter_reports_drops():
     spec = mam_benchmark_spec(n_areas=2, n_per_area=64, k_intra=4, k_inter=4,
                               rate_hz=2000.0)
     net = build_network(spec, seed=12, outgoing=True)
-    eng = make_engine(net, spec, EngineConfig(
+    eng = make_simulation(spec, EngineConfig(
         neuron_model="ignore_and_fire", delivery_backend="event",
-        s_max_headroom=0.0, s_max_floor=1))
+        s_max_headroom=0.0, s_max_floor=1), net=net)
     st = eng.init()
     for _ in range(5):
         st, _ = eng.window(st)
@@ -342,10 +339,10 @@ def test_fused_lif_update_matches_jnp_chain():
     bit-identical trajectories under every backend."""
     spec = mam_benchmark_spec(n_areas=4, n_per_area=48, k_intra=8, k_inter=8)
     net = build_network(spec, seed=12)
-    plain = make_engine(net, spec, EngineConfig(
-        neuron_model="lif", delivery_backend="scatter", fused_update=False))
-    fused = make_engine(net, spec, EngineConfig(
-        neuron_model="lif", delivery_backend="scatter", fused_update=True))
+    plain = make_simulation(spec, EngineConfig(
+        neuron_model="lif", delivery_backend="scatter", fused_update=False), net=net)
+    fused = make_simulation(spec, EngineConfig(
+        neuron_model="lif", delivery_backend="scatter", fused_update=True), net=net)
     sp, sf = plain.init(), fused.init()
     for w in range(30):
         sp, blk_p = plain.window(sp)
@@ -373,17 +370,18 @@ def test_event_delivery_equals_dense_engine():
     """Beyond-paper optimization: event-driven delivery (compact fired
     neurons, scatter outgoing synapses) is bit-identical to the dense
     gather-matvec path -- weights live on the exact 1/256 grid."""
-    from repro.core.engine import EngineConfig, make_engine
+    from repro.core.engine import EngineConfig
+    from repro.core.factory import make_simulation
 
     spec = mam_benchmark_spec(n_areas=4, n_per_area=48, k_intra=8, k_inter=8,
                               rate_hz=30.0)
     net = build_network(spec, seed=91856, outgoing=True)
-    dense = make_engine(net, spec, EngineConfig(
+    dense = make_simulation(spec, EngineConfig(
         neuron_model="ignore_and_fire", schedule="structure_aware",
-        delivery_backend="onehot"))
-    event = make_engine(net, spec, EngineConfig(
+        delivery_backend="onehot"), net=net)
+    event = make_simulation(spec, EngineConfig(
         neuron_model="ignore_and_fire", schedule="structure_aware",
-        delivery_backend="event"))
+        delivery_backend="event"), net=net)
     sd, se = dense.init(), event.init()
     for w in range(25):
         sd, bd = dense.window(sd)

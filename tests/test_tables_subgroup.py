@@ -160,17 +160,16 @@ def test_lane_count_mismatch_rejected():
 
     from repro.core.areas import mam_benchmark_spec
     from repro.core.connectivity import build_network, shard_inter_tables
-    from repro.core.dist_engine import make_dist_engine
     from repro.core.engine import EngineConfig
+    from repro.core.factory import make_simulation
 
     spec = mam_benchmark_spec(n_areas=2, n_per_area=32, k_intra=4, k_inter=4)
     net = build_network(spec, seed=12, outgoing=True)
     cut = shard_inter_tables(net, 1, mode="group", subgroup=2)
     mesh = jax.make_mesh((1, 1), ("data", "model"))  # gsz=1, but 2 lanes
     with pytest.raises(ValueError, match="do not match the"):
-        make_dist_engine(net=cut, spec=spec, mesh=mesh,
-                         config=EngineConfig(neuron_model="ignore_and_fire",
-                                             delivery_backend="event"))
+        make_simulation(spec, EngineConfig(neuron_model="ignore_and_fire",
+                                             delivery_backend="event"), net=cut, mesh=mesh)
 
 
 @pytest.mark.parametrize("exchange", ["dense", "routed"])
@@ -184,15 +183,15 @@ def test_subgroup_engine_bitwise_equivalence(exchange):
         import numpy as np, jax
         from repro.core.areas import mam_benchmark_spec
         from repro.core.connectivity import build_network
-        from repro.core.engine import make_engine, EngineConfig
-        from repro.core.dist_engine import make_dist_engine
+        from repro.core.engine import EngineConfig
+        from repro.core.factory import make_simulation
 
         spec = mam_benchmark_spec(n_areas=4, n_per_area=32, k_intra=4,
                                   k_inter=4, rate_hz=30.0)
         net = build_network(spec, seed=12, size_multiple=8, outgoing=True)
         mesh = jax.make_mesh((4, 2), ("data", "model"))
-        ref = make_engine(net, spec, EngineConfig(
-            neuron_model="ignore_and_fire", schedule="conventional"))
+        ref = make_simulation(spec, EngineConfig(
+            neuron_model="ignore_and_fire", schedule="conventional"), net=net)
         s0 = ref.init()
         blocks = []
         for _ in range(5):
@@ -211,8 +210,7 @@ def test_subgroup_engine_bitwise_equivalence(exchange):
 
         for adaptive in (False, True):
             for superstep in (None, False):
-                eng = make_dist_engine(net, spec, mesh,
-                                       cfg(True, adaptive, superstep))
+                eng = make_simulation(spec, cfg(True, adaptive, superstep), net=net, mesh=mesh)
                 st = eng.init()
                 for w in range(5):
                     st, blk = eng.window(st)
@@ -224,8 +222,8 @@ def test_subgroup_engine_bitwise_equivalence(exchange):
                 assert int(st.overflow) == 0, (adaptive, superstep)
 
         # Layout A/B at identical config: subgroup vs per-group slices.
-        a = make_dist_engine(net, spec, mesh, cfg(True))
-        b = make_dist_engine(net, spec, mesh, cfg(False))
+        a = make_simulation(spec, cfg(True), net=net, mesh=mesh)
+        b = make_simulation(spec, cfg(False), net=net, mesh=mesh)
         sa, sb = a.init(), b.init()
         for w in range(5):
             sa, ba = a.window(sa)
@@ -246,7 +244,7 @@ def test_subgroup_forced_overflow_identical():
         from repro.core.areas import mam_benchmark_spec
         from repro.core.connectivity import build_network
         from repro.core.engine import EngineConfig
-        from repro.core.dist_engine import make_dist_engine
+        from repro.core.factory import make_simulation
 
         spec = mam_benchmark_spec(n_areas=4, n_per_area=32, k_intra=4,
                                   k_inter=4, rate_hz=2000.0)
@@ -254,11 +252,11 @@ def test_subgroup_forced_overflow_identical():
         mesh = jax.make_mesh((4, 2), ("data", "model"))
 
         def engine(subgroup):
-            return make_dist_engine(net, spec, mesh, EngineConfig(
+            return make_simulation(spec, EngineConfig(
                 neuron_model="ignore_and_fire",
                 schedule="structure_aware", delivery_backend="event",
                 exchange="routed", s_max_headroom=0.0, s_max_floor=1,
-                subgroup_inter_tables=subgroup))
+                subgroup_inter_tables=subgroup), net=net, mesh=mesh)
 
         a, b = engine(True), engine(False)
         sa, sb = a.init(), b.init()
@@ -298,8 +296,8 @@ def test_resume_across_subgroup_layout_change(tmp_path):
         from repro.core import schedule as schedule_lib
         from repro.core.areas import mam_benchmark_spec
         from repro.core.connectivity import build_network
-        from repro.core.dist_engine import make_dist_engine
         from repro.core.engine import EngineConfig
+        from repro.core.factory import make_simulation
 
         spec = mam_benchmark_spec(n_areas=4, n_per_area=32, k_intra=4,
                                   k_inter=4, rate_hz=30.0)
@@ -307,10 +305,10 @@ def test_resume_across_subgroup_layout_change(tmp_path):
         mesh = jax.make_mesh((4, 2), ("data", "model"))
 
         def engine(subgroup):
-            return make_dist_engine(net, spec, mesh, EngineConfig(
+            return make_simulation(spec, EngineConfig(
                 neuron_model="ignore_and_fire", delivery_backend="event",
                 exchange="routed", s_max_floor=32,
-                subgroup_inter_tables=subgroup))
+                subgroup_inter_tables=subgroup), net=net, mesh=mesh)
 
         for save_sub in (True, False):
             tag = f"subgroup={{save_sub}}->{{not save_sub}}"
